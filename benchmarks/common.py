@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing: SD graph enumeration + paper constants."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.accounting import MatmulOp
+from repro.diffusion.pipeline import SD_TURBO, generate, init_pipeline
+from repro.models.unet import SD15_UNET, apply_unet, init_unet
+
+# Paper ground truth ----------------------------------------------------
+TABLE1 = {  # model -> {fmt: fraction}
+    "q3_k": {"f32": 0.307, "f16": 0.590, "q3_k": 0.103},
+    "q8_0": {"f32": 0.218, "f16": 0.620, "q8_0": 0.163},
+}
+FIG67_E2E = {  # model -> {device: seconds}
+    "q3_k": {"ARM Cortex-A72": 809.7, "IMAX3 (VPK180 FPGA)": 790.3,
+             "IMAX3 (28nm ASIC)": 754.5, "Intel Xeon w5-2465X": 59.3,
+             "NVIDIA GTX 1080 Ti": 16.2},
+    "q8_0": {"ARM Cortex-A72": 625.1, "IMAX3 (VPK180 FPGA)": 654.7,
+             "IMAX3 (28nm ASIC)": 558.0},
+}
+
+
+@functools.lru_cache(maxsize=None)
+def sd_turbo_sites(batch: int = 1) -> tuple[MatmulOp, ...]:
+    """Every dot-product site in the full SD-Turbo pipeline (1 step)."""
+    sites: list[MatmulOp] = []
+    qlinear.set_recorder(lambda **kw: sites.append(MatmulOp(**kw)))
+    try:
+        key = jax.random.PRNGKey(0)
+        params = jax.eval_shape(
+            lambda k: init_pipeline(k, SD_TURBO), key)
+        jax.eval_shape(lambda p, t, k: generate(p, SD_TURBO, t, k),
+                       params, jax.ShapeDtypeStruct((batch, 77), jnp.int32),
+                       key)
+    finally:
+        qlinear.set_recorder(None)
+    return tuple(sites)
+
+
+@functools.lru_cache(maxsize=None)
+def unet_sites(batch: int = 1) -> tuple[MatmulOp, ...]:
+    """Dot-product sites of one U-Net denoising call (Table I scope:
+    the paper profiles the diffusion core)."""
+    sites: list[MatmulOp] = []
+    qlinear.set_recorder(lambda **kw: sites.append(MatmulOp(**kw)))
+    try:
+        key = jax.random.PRNGKey(0)
+        up = jax.eval_shape(lambda k: init_unet(k, SD15_UNET), key)
+        jax.eval_shape(
+            lambda p, x, t, c: apply_unet(p, SD15_UNET, x, t, c), up,
+            jax.ShapeDtypeStruct((batch, 64, 64, 4), jnp.bfloat16),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch, 77, 768), jnp.bfloat16))
+    finally:
+        qlinear.set_recorder(None)
+    return tuple(sites)
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

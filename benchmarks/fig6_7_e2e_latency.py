@@ -1,0 +1,57 @@
+"""Fig 6/7 reproduction: end-to-end image-generation latency per device.
+
+Full SD-Turbo pipeline (CLIP + UNet 1 step + VAE decode), every
+dot-product costed on each device model; IMAX devices offload the
+quantized share and pay DMA (FPGA) per the paper's architecture.
+
+Known divergence (documented): the paper's Q8_0 and Q3_K model *files*
+quantize different tensor subsets (visible in their Table I F32 rows:
+21.8% vs 30.7%), which our uniform-coverage policies do not replicate;
+ARM/ASIC absolute numbers for the Q8_0 model are therefore ~20-35%
+high while every qualitative ordering (FPGA≈ARM for Q3_K, FPGA>ARM
+for Q8_0 due to transfer volume, ASIC recovering it, Xeon/GPU far
+ahead) is reproduced.
+"""
+from __future__ import annotations
+
+from repro.core.accounting import assign_formats
+from repro.core.policy import get_policy
+
+from benchmarks import common
+from benchmarks.device_model import DEVICES, e2e_time
+
+TOL_REL = {"q3_k": 0.20, "q8_0": 0.45}
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    sites = common.sd_turbo_sites()
+    for model in ("q3_k", "q8_0"):
+        assigned = assign_formats(sites, get_policy(model))
+        times = {name: e2e_time(assigned, dev)
+                 for name, dev in DEVICES.items()}
+        for dev, want in common.FIG67_E2E[model].items():
+            got = times[dev]
+            rel = abs(got - want) / want
+            ok = rel <= TOL_REL[model]
+            rows.append(common.csv_row(
+                f"fig6_7/{model}/{dev}", got * 1e6,
+                f"e2e={got:.1f}s paper={want:.1f}s rel={rel:.2f} "
+                f"{'OK' if ok else 'DIVERGES'}"))
+            if verbose:
+                print(rows[-1])
+            assert ok, (model, dev, got, want)
+        # Qualitative claims from the paper's discussion.
+        if model == "q3_k":
+            assert times["IMAX3 (VPK180 FPGA)"] < times["ARM Cortex-A72"]
+        else:
+            assert times["IMAX3 (VPK180 FPGA)"] > times["ARM Cortex-A72"], \
+                "paper: Q8_0 transfer volume makes FPGA slower than ARM"
+        assert times["IMAX3 (28nm ASIC)"] < times["IMAX3 (VPK180 FPGA)"]
+        assert times["Intel Xeon w5-2465X"] < times["IMAX3 (28nm ASIC)"]
+        assert times["NVIDIA GTX 1080 Ti"] < times["Intel Xeon w5-2465X"]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

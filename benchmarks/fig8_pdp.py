@@ -1,0 +1,40 @@
+"""Fig 8 reproduction: Power-Delay Product per device.
+
+PDP = execution time x per-phase power (paper eq. 1: the host phase is
+billed at host power, the IMAX phase at the synthesis-estimated kernel
+power — 47.7 W for Q8_0 / 46 units, 52.8 W for Q3_K / 51 units).
+
+Asserted paper claims:
+  * the low-power ARM A72 has the lowest PDP;
+  * projected IMAX3 ASIC PDP beats the Xeon for both models;
+  * for Q3_K, IMAX3 ASIC PDP also beats the GTX 1080 Ti.
+"""
+from __future__ import annotations
+
+from repro.core.accounting import assign_formats
+from repro.core.policy import get_policy
+
+from benchmarks import common
+from benchmarks.device_model import DEVICES, pdp
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    sites = common.sd_turbo_sites()
+    for model in ("q3_k", "q8_0"):
+        assigned = assign_formats(sites, get_policy(model))
+        vals = {name: pdp(assigned, dev) for name, dev in DEVICES.items()}
+        for dev, v in sorted(vals.items(), key=lambda kv: kv[1]):
+            rows.append(common.csv_row(f"fig8/{model}/{dev}", v * 1e6,
+                                       f"pdp={v:.0f}J"))
+            if verbose:
+                print(rows[-1])
+        assert min(vals, key=vals.get) == "ARM Cortex-A72"
+        assert vals["IMAX3 (28nm ASIC)"] < vals["Intel Xeon w5-2465X"]
+        if model == "q3_k":
+            assert vals["IMAX3 (28nm ASIC)"] < vals["NVIDIA GTX 1080 Ti"]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig 9/10 reproduction: quantized-kernel time vs active IMAX lanes.
+
+The paper's finding (§V.A): kernel time improves up to 2 lanes then
+saturates — the dual-core host CPU that feeds the lanes becomes the
+bottleneck (eff_lanes = min(lanes, host_cores)).  We sweep 1..8 lanes
+on both kernel types and assert the knee sits at the host core count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accounting import assign_formats
+from repro.core.policy import get_policy
+
+from benchmarks import common
+from benchmarks.device_model import IMAX3_FPGA
+
+
+def kernel_time(device, assigned, lanes: int) -> float:
+    return sum(device.exec_time(op, fmt, lanes) + device.dma_time(op, fmt)
+               for op, fmt in assigned if fmt.startswith("q"))
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    sites = common.sd_turbo_sites()
+    for model in ("q3_k", "q8_0"):
+        assigned = assign_formats(sites, get_policy(model))
+        times = []
+        for lanes in range(1, 9):
+            dev = dataclasses.replace(IMAX3_FPGA, lanes=lanes)
+            t = kernel_time(dev, assigned, lanes)
+            times.append(t)
+            rows.append(common.csv_row(
+                f"fig9_10/{model}/lanes={lanes}", t * 1e6,
+                f"kernel={t:.2f}s"))
+            if verbose:
+                print(rows[-1])
+        # 1 -> 2 lanes improves; >= host_cores saturates.
+        assert times[1] < times[0] * 0.75, "2-lane speedup missing"
+        for l in range(2, 8):
+            assert times[l] >= times[1] * 0.999, \
+                "scaling beyond host cores should saturate (paper §V.A)"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

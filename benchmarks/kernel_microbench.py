@@ -1,0 +1,70 @@
+"""§V.A analogue: kernel-level wall-clock of the quantized dot-product
+paths on this host (XLA path + Pallas interpret sanity) and the 5-bit
+scale approximation error (the paper's OP_CVT53 claim).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import ops, ref
+
+from benchmarks.common import csv_row
+
+
+def _bench(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    m, k, n = 64, 2048, 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, k), jnp.float32) * .05
+    w8 = quant.quantize_q8_0(w)
+    w4 = quant.quantize_q4_0(w)
+    w3 = quant.quantize_q3_k(w)
+    w3i = quant.quantize_q3_k(w, scale_bits=5)
+
+    f_dense = jax.jit(lambda a, b: a @ b.T)
+    f_q8 = jax.jit(lambda a, t: ops.quantized_matmul(a, t, force="xla"))
+    f_q4 = jax.jit(lambda a, t: ops.quantized_matmul(a, t, force="xla"))
+    f_q3 = jax.jit(lambda a, t: ops.quantized_matmul(a, t, force="xla"))
+    rows.append(csv_row("kernel/dense_f32", _bench(f_dense, x, w)))
+    rows.append(csv_row("kernel/q8_0_xla", _bench(f_q8, x, w8)))
+    rows.append(csv_row("kernel/q4_0_xla", _bench(f_q4, x, w4)))
+    rows.append(csv_row("kernel/q3_k_xla", _bench(f_q3, x, w3)))
+
+    # Correctness anchors (oracle + paper's scale-approximation claim).
+    y_ref = ref.q8_matmul_ref(x, w8)       # exact oracle of the path
+    y_q8 = f_q8(x, w8)
+    err8 = float(jnp.linalg.norm(y_q8 - y_ref) / jnp.linalg.norm(y_ref))
+    y3 = ref.q3k_matmul_ref(x, w3)
+    y3i = ref.q3k_matmul_ref(x, w3i)
+    yd = x @ w.T
+    e6 = float(jnp.linalg.norm(y3 - yd) / jnp.linalg.norm(yd))
+    e5 = float(jnp.linalg.norm(y3i - yd) / jnp.linalg.norm(yd))
+    rows.append(csv_row("kernel/q8_path_relerr", err8 * 1e6,
+                        f"relerr={err8:.2e}"))
+    rows.append(csv_row("kernel/q3k_scale6_relerr", e6 * 1e6,
+                        f"relerr={e6:.4f}"))
+    rows.append(csv_row("kernel/q3k_scale5_relerr", e5 * 1e6,
+                        f"relerr={e5:.4f}"))
+    if verbose:
+        for r in rows:
+            print(r)
+    assert err8 < 1e-5
+    # Paper: approximating scales to 5 bits has almost no effect.
+    assert e5 < e6 * 1.15, (e5, e6)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

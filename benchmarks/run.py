@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and asserts each module's
+reproduction bands (see module docstrings for tolerances and known
+divergences).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_7_e2e_latency, fig8_pdp,
+                            fig9_10_lane_scaling, fig11_phase_breakdown,
+                            kernel_microbench, table1_dtype_breakdown)
+    modules = {
+        "table1": table1_dtype_breakdown,
+        "fig6_7": fig6_7_e2e_latency,
+        "fig8": fig8_pdp,
+        "fig9_10": fig9_10_lane_scaling,
+        "fig11": fig11_phase_breakdown,
+        "kernels": kernel_microbench,
+    }
+    failed = []
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            mod.run(verbose=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all benchmark reproductions within bands")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Table I reproduction: dot-product execution-time share by dtype.
+
+Enumerates the U-Net denoising graph's dot products, assigns GGML
+dtypes per offload policy, costs them on the calibrated ARM host model
+(pure computation, no memcpy — matching the paper's methodology), and
+compares the fractions against the paper's Table I.
+"""
+from __future__ import annotations
+
+from repro.core.accounting import assign_formats, fractions, time_by_format
+from repro.core.policy import get_policy
+
+from benchmarks import common
+from benchmarks.device_model import ARM_A72
+
+TOL = 0.10  # absolute tolerance on each fraction
+
+
+def run(verbose: bool = True) -> list[str]:
+    rows = []
+    sites = common.unet_sites()
+    for model in ("q3_k", "q8_0"):
+        assigned = assign_formats(sites, get_policy(model))
+        fr = fractions(time_by_format(assigned, ARM_A72))
+        total_t = sum(time_by_format(assigned, ARM_A72).values())
+        for fmt, want in common.TABLE1[model].items():
+            got = fr.get(fmt, 0.0)
+            ok = abs(got - want) <= TOL
+            rows.append(common.csv_row(
+                f"table1/{model}/{fmt}", total_t * got * 1e6,
+                f"frac={got:.3f} paper={want:.3f} "
+                f"{'OK' if ok else 'DIVERGES'}"))
+            if verbose:
+                print(rows[-1])
+            assert ok, (model, fmt, got, want)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

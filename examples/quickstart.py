@@ -1,0 +1,54 @@
+"""Quickstart: the paper's pipeline in five minutes (CPU-friendly).
+
+1. Build a tiny Stable-Diffusion pipeline (CLIP + UNet + VAE).
+2. Quantize it GGML-style with the paper's two policies (Q8_0 / Q3_K).
+3. Generate an image with the SD-Turbo single-step sampler.
+4. Show the dot-product dtype breakdown (the paper's Table I lens).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import qlinear
+from repro.core.accounting import MatmulOp, assign_formats, flops_by_format
+from repro.core.policy import get_policy
+from repro.core.qlinear import param_bytes
+from repro.diffusion.pipeline import TINY_SD, generate, init_pipeline, \
+    quantize_pipeline
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cfg = TINY_SD
+    params = init_pipeline(key, cfg)
+    print(f"[1] pipeline init: {param_bytes(params)/1e6:.1f} MB bf16")
+
+    for policy_name in ("q8_0", "q4_0", "q3_k", "q3_k_imax"):
+        policy = get_policy(policy_name)
+        qp = quantize_pipeline(params, policy)
+        print(f"[2] {policy_name:10s}: {param_bytes(qp)/1e6:.1f} MB "
+              f"(scale_bits={policy.scale_bits})")
+
+    qp = quantize_pipeline(params, get_policy("q8_0"))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 77), 0, 512)
+    img = generate(qp, cfg, tokens, jax.random.PRNGKey(2))
+    assert bool(jnp.isfinite(img.astype(jnp.float32)).all())
+    print(f"[3] generated image {img.shape}, range "
+          f"[{float(img.min()):.2f}, {float(img.max()):.2f}]")
+
+    sites: list[MatmulOp] = []
+    qlinear.set_recorder(lambda **kw: sites.append(MatmulOp(**kw)))
+    jax.eval_shape(lambda p, t, k: generate(p, cfg, t, k),
+                   jax.eval_shape(lambda k: init_pipeline(k, cfg), key),
+                   jax.ShapeDtypeStruct((1, 77), jnp.int32), key)
+    qlinear.set_recorder(None)
+    fl = flops_by_format(assign_formats(sites, get_policy("q8_0")))
+    tot = sum(fl.values())
+    print("[4] dot-product FLOP share by dtype (Table I lens):")
+    for fmt, v in sorted(fl.items(), key=lambda kv: -kv[1]):
+        print(f"    {fmt:6s} {100*v/tot:5.1f}%")
+
+
+if __name__ == "__main__":
+    main()

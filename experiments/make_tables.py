@@ -1,0 +1,79 @@
+"""Generate EXPERIMENTS.md tables from the dry-run JSON artifacts."""
+import glob
+import json
+import sys
+
+
+def load(dirname, mesh="16x16"):
+    rows = []
+    for f in sorted(glob.glob(f"{dirname}/*_{mesh}.json")):
+        if mesh == "16x16" and "2x16x16" in f:
+            continue
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | bound | compute s | memory s | collective s "
+           "| frac | useful | arg+temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    rows = sorted(rows, key=lambda d: (d["shape"], -d["roofline_fraction"]))
+    for d in rows:
+        mem = (d["memory_analysis"]["argument_bytes"]
+               + d["memory_analysis"]["temp_bytes"]) / 1e9
+        out.append(
+            f"| {d['arch']} | {d['shape']} | **{d['bound']}** "
+            f"| {d['compute_s']:.3e} | {d['memory_s']:.3e} "
+            f"| {d['collective_s']:.3e} | {d['roofline_fraction']:.3f} "
+            f"| {d['useful_ratio']:.2f} | {mem:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | chips | compile | GFLOP/chip "
+           "| GB/chip | wire GB/chip | coll ops | arg GB | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for d in sorted(rows, key=lambda d: (d["arch"], d["shape"], d["mesh"])):
+        ma = d["memory_analysis"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['chips']} "
+            f"| ok ({d['compile_s']}s) | {d['flops_per_chip']/1e9:.0f} "
+            f"| {d['bytes_per_chip']/1e9:.1f} "
+            f"| {d['wire_bytes_per_chip']/1e9:.2f} | {d['collective_ops']} "
+            f"| {ma['argument_bytes']/1e9:.2f} | {ma['temp_bytes']/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def compare_table(base_rows, opt_rows):
+    base = {(d["arch"], d["shape"]): d for d in base_rows}
+    opt = {(d["arch"], d["shape"]): d for d in opt_rows}
+    out = ["| arch | shape | bound (b->o) | dominant term s (b->o) | gain "
+           "| frac (b->o) |",
+           "|---|---|---|---|---|---|"]
+    for key in sorted(opt, key=lambda k: (k[1], k[0])):
+        b, o = base.get(key), opt[key]
+        if b is None:
+            continue
+        bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        oo = max(o["compute_s"], o["memory_s"], o["collective_s"])
+        out.append(
+            f"| {key[0]} | {key[1]} | {b['bound']}->{o['bound']} "
+            f"| {bb:.3e} -> {oo:.3e} | **{bb/oo:.1f}x** "
+            f"| {b['roofline_fraction']:.3f} -> "
+            f"{o['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table(load("experiments/dryrun_opt")))
+    elif which == "roofline_base":
+        print(roofline_table(load("experiments/dryrun")))
+    elif which == "dryrun":
+        rows = (load("experiments/dryrun_opt", "16x16")
+                + load("experiments/dryrun_opt", "2x16x16"))
+        print(dryrun_table(rows))
+    elif which == "compare":
+        print(compare_table(load("experiments/dryrun"),
+                            load("experiments/dryrun_opt")))

@@ -1,0 +1,153 @@
+"""Atomic, resumable checkpointing.
+
+Fault-tolerance contract (1000+-node posture):
+
+* **Atomicity** — a checkpoint is written to ``step_XXXX.tmp/`` and
+  renamed only after every array and the metadata manifest are fsynced;
+  a crash mid-write can never corrupt the latest valid checkpoint.
+* **Provenance** — the manifest records step, RNG seed, data-pipeline
+  cursor, and config digest; restore rebuilds the exact training state
+  (the data pipeline is deterministic in (seed, step), so restart
+  replays no sample twice and skips none).
+* **Auto-resume** — ``latest_step()`` + ``restore()`` let the launcher
+  resume after preemption without operator input (``train.py --resume
+  auto``).
+* **Multi-host** — in a real multi-controller deployment each host
+  writes only the shards it owns (orbax/ocdbt layout); this
+  single-process implementation keeps the same directory layout with
+  one writer and documents the extension point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.quant import Q3KTensor, Q4_0Tensor, Q8_0Tensor
+
+
+def _enc(a) -> tuple[np.ndarray, str]:
+    """npz-safe encoding: (array, suffix). bfloat16 -> uint16 view."""
+    a = np.asarray(a)
+    if a.dtype.name == "bfloat16":
+        return a.view(np.uint16), "~bf16"
+    return a, ""
+
+
+def _dec(key: str, a: np.ndarray) -> np.ndarray:
+    if key.endswith("~bf16"):
+        import ml_dtypes
+        return a.view(ml_dtypes.bfloat16)
+    return a
+
+
+def _leaf_arrays(i: int, leaf) -> dict[str, np.ndarray]:
+    if isinstance(leaf, Q8_0Tensor):
+        parts = {"q8.qs": leaf.qs, "q8.d": leaf.d}
+    elif isinstance(leaf, Q4_0Tensor):
+        parts = {"q4.qs": leaf.qs, "q4.d": leaf.d}
+    elif isinstance(leaf, Q3KTensor):
+        parts = {"q3k.ql": leaf.ql, "q3k.qh": leaf.qh,
+                 "q3k.scales": leaf.scales, "q3k.d": leaf.d,
+                 "q3k.sb": np.asarray(leaf.scale_bits)}
+    else:
+        parts = {"a": leaf}
+    out = {}
+    for name, arr in parts.items():
+        enc, suffix = _enc(arr)
+        out[f"{i}.{name}{suffix}"] = enc
+    return out
+
+
+def _find(data, i: int, name: str) -> np.ndarray:
+    for suffix in ("", "~bf16"):
+        key = f"{i}.{name}{suffix}"
+        if key in data:
+            return _dec(key, data[key])
+    raise KeyError(f"{i}.{name}")
+
+
+_IS_QLEAF = lambda x: isinstance(x, (Q8_0Tensor, Q4_0Tensor, Q3KTensor))
+
+
+def save(path: str, step: int, trees: dict[str, Any],
+         meta: dict | None = None) -> str:
+    """Save named pytrees atomically. Returns the final directory."""
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    for name, tree in trees.items():
+        leaves = jax.tree.flatten(tree, is_leaf=_IS_QLEAF)[0]
+        arrs: dict[str, np.ndarray] = {}
+        for i, leaf in enumerate(leaves):
+            arrs.update(_leaf_arrays(i, leaf))
+        with open(os.path.join(tmp, f"{name}.npz"), "wb") as f:
+            np.savez(f, **arrs)
+            f.flush()
+            os.fsync(f.fileno())
+    manifest = {"step": step, **(meta or {})}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, templates: dict[str, Any]
+            ) -> tuple[dict[str, Any], dict]:
+    """Restore named pytrees using same-structure templates."""
+    final = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = {}
+    for name, template in templates.items():
+        data = np.load(os.path.join(final, f"{name}.npz"))
+        leaves, treedef = jax.tree.flatten(template, is_leaf=_IS_QLEAF)
+        new_leaves = []
+        for i, leaf in enumerate(leaves):
+            if isinstance(leaf, Q8_0Tensor):
+                new_leaves.append(Q8_0Tensor(
+                    qs=_find(data, i, "q8.qs"), d=_find(data, i, "q8.d")))
+            elif isinstance(leaf, Q4_0Tensor):
+                new_leaves.append(Q4_0Tensor(
+                    qs=_find(data, i, "q4.qs"), d=_find(data, i, "q4.d")))
+            elif isinstance(leaf, Q3KTensor):
+                new_leaves.append(Q3KTensor(
+                    ql=_find(data, i, "q3k.ql"),
+                    qh=_find(data, i, "q3k.qh"),
+                    scales=_find(data, i, "q3k.scales"),
+                    d=_find(data, i, "q3k.d"),
+                    scale_bits=int(_find(data, i, "q3k.sb"))))
+            else:
+                new_leaves.append(_find(data, i, "a"))
+        out[name] = jax.tree.unflatten(treedef, new_leaves)
+    return out, manifest
+
+
+def gc_old(path: str, keep: int = 3) -> None:
+    """Keep the newest `keep` checkpoints (bounded disk on long runs)."""
+    if not os.path.isdir(path):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(path)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"),
+                      ignore_errors=True)

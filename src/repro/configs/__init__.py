@@ -1,0 +1,86 @@
+"""Architecture registry + per-(arch, shape) input specifications."""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, ShapeConfig, TrainConfig, SHAPES, reduced)
+from repro.models import frontend
+
+ARCH_MODULES = {
+    "xlstm-1.3b": "xlstm_1_3b",
+    "whisper-large-v3": "whisper_large_v3",
+    "llama3-405b": "llama3_405b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "granite-8b": "granite_8b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+}
+
+ARCHS = tuple(ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {list(ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+    return mod.config
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch, shape) cell runnable?  long_500k needs a
+    sub-quadratic path (DESIGN.md section Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention; no sub-quadratic path "
+                       "at 524288 tokens")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    * train  -> {tokens, labels [, enc_embeds, prefix_embeds]}
+    * prefill-> {tokens [, enc_embeds, prefix_embeds]}
+    * decode -> {token} (the cache is built separately via
+      jax.eval_shape(init_cache, ...) — see launch/dryrun.py).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": sds((b, s), i32)}
+    else:  # decode: one new token against a seq_len-deep cache
+        specs = {"token": sds((b, 1), i32)}
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            specs["enc_embeds"] = sds(
+                frontend.audio_frontend_shape(cfg, b), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["prefix_embeds"] = sds(
+                frontend.vision_frontend_shape(cfg, b), jnp.bfloat16)
+    return specs
+
+
+def smoke_inputs(key: jax.Array, cfg: ModelConfig, *, batch: int = 2,
+                 seq: int = 16) -> dict:
+    """Concrete small inputs matching input_specs' structure."""
+    ks = jax.random.split(key, 3)
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0,
+                                        cfg.vocab_size),
+           "labels": jax.random.randint(ks[1], (batch, seq), 0,
+                                        cfg.vocab_size)}
+    if cfg.family == "audio":
+        out["enc_embeds"] = frontend.synthetic_frontend(
+            ks[2], (batch, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = frontend.synthetic_frontend(
+            ks[2], (batch, 8, cfg.d_model))
+    return out

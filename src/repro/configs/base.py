@@ -1,0 +1,152 @@
+"""Config dataclasses for models, shapes, and runs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    expert_ff: int = 0           # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    # Block pattern, repeated over the layer stack.  Kinds:
+    # "attn", "mamba", "mlstm", "slstm".
+    block_pattern: Sequence[str] = ("attn",)
+    moe: MoEConfig | None = None
+    moe_every: int = 1           # MoE FFN on layers where (idx % moe_every==0)
+    sliding_window: int | None = None
+    qkv_bias: bool = False
+    # Encoder-decoder (whisper): encoder layer count + fixed encoder length.
+    encoder_layers: int = 0
+    encoder_seq: int = 1500
+    rope_theta: float = 10_000.0
+    mrope: bool = False          # qwen2-vl M-RoPE (t/h/w sections)
+    mrope_sections: Sequence[int] = (16, 24, 24)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    norm: str = "rmsnorm"        # "rmsnorm" | "layernorm"
+    pos_embed: str = "rope"      # "rope" | "sinusoidal" | "none"
+    activation: str = "silu"     # "silu" (swiglu) | "gelu"
+    # Mamba / xLSTM internals.
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    # Default offload policy name for serving.
+    default_policy: str = "q8_0"
+    # Cost-probe plumbing (see launch/dryrun.py): XLA's cost_analysis
+    # counts while-loop bodies ONCE, so roofline probes lower small
+    # fully-unrolled variants and extrapolate linearly.
+    scan_unroll: bool = False
+    mamba_chunk: int = 0         # 0 -> models.ssm.MAMBA_CHUNK
+    # Source annotation ([arXiv/hf ref; verification tier]).
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return "attn" not in tuple(self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: recurrent, hybrid, or windowed attention."""
+        kinds = set(self.block_pattern)
+        if kinds <= {"mamba", "mlstm", "slstm"}:
+            return True
+        if self.sliding_window is not None:
+            return True
+        return "attn" in kinds and kinds != {"attn"}  # hybrid
+
+    def pattern_for_layers(self) -> list[str]:
+        pat = list(self.block_pattern)
+        reps = -(-self.num_layers // len(pat))
+        return (pat * reps)[: self.num_layers]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+
+
+# The four assigned LM shapes (identical across all 10 architectures).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    microbatch: int = 0          # 0 -> no accumulation
+    remat: str = "block"         # "none" | "block" | "full"
+    quantized_moments: bool = False  # Q8_0 Adam moments (beyond-paper)
+    grad_compression: bool = False   # int8 error-feedback cross-pod reduce
+    scan_unroll: bool = False        # unroll microbatch loop (cost probes)
+    seed: int = 0
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    pat = tuple(cfg.block_pattern)
+    small = dict(
+        num_layers=max(2, len(pat)),
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=max(1, 4 * cfg.num_kv_heads // max(cfg.num_heads, 1)),
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        head_dim=32,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        encoder_seq=64 if cfg.encoder_layers else cfg.encoder_seq,
+        sliding_window=32 if cfg.sliding_window else None,
+        ssm_state=8,
+    )
+    if cfg.moe is not None:
+        small["moe"] = MoEConfig(num_experts=4, top_k=2,
+                                 num_shared=min(1, cfg.moe.num_shared),
+                                 expert_ff=128,
+                                 capacity_factor=cfg.moe.capacity_factor)
+    if cfg.mrope:
+        # Scale the M-RoPE sections to the reduced head_dim (sum = hd/2).
+        half = small["head_dim"] // 2
+        t = half // 4
+        small["mrope_sections"] = (half - 2 * (half - t) // 2,
+                                   (half - t) // 2, (half - t) // 2)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,21 @@
+"""Core of the paper's contribution: GGML-format quantized execution.
+
+- :mod:`repro.core.quant` — Q8_0 / Q3_K / Q8_K block formats.
+- :mod:`repro.core.qlinear` — role-tagged linear layers + PTQ.
+- :mod:`repro.core.policy` — offload policies (which tensors quantize).
+- :mod:`repro.core.accounting` — per-dtype dot-product accounting
+  (Table I reproduction).
+"""
+from repro.core.quant import (  # noqa: F401
+    Q8_0Tensor, Q3KTensor, Q8KTensor,
+    quantize_q8_0, dequantize_q8_0, quantize_q3_k, dequantize_q3_k,
+    quantize_q8_k, dequantize_q8_k, quantize, dequantize, BPW,
+)
+from repro.core.policy import (  # noqa: F401
+    OffloadPolicy, get_policy, NONE_POLICY, Q8_0_POLICY, Q3_K_POLICY,
+    Q3_K_IMAX_POLICY,
+)
+from repro.core.qlinear import (  # noqa: F401
+    Linear, init_linear, apply_linear, quantize_params, param_bytes,
+    param_count,
+)

@@ -1,0 +1,89 @@
+"""Analytic per-dtype dot-product accounting (reproduces Table I).
+
+The paper profiles stable-diffusion.cpp and splits dot-product execution
+time by data type (F32 / F16 / Q3_K / Q8_0).  We reproduce this by
+enumerating every matmul in a model graph with its role, applying an
+:class:`~repro.core.policy.OffloadPolicy` to assign formats (exactly as
+GGML model files do), and costing each op on a device model.
+
+Models expose ``enumerate_matmuls(cfg, batch, seq) -> [MatmulOp]``; the
+benchmark harness sums time per format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Iterable
+
+from repro.core.policy import OffloadPolicy
+from repro.core.quant import BPW
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulOp:
+    """One dot-product site: y[m,n] += x[m,k] * w[n,k], executed `count` times."""
+    name: str
+    role: str          # policy role, or "activation" for act-act matmuls
+    m: int
+    n: int
+    k: int
+    count: int = 1
+    # activation-activation matmuls (attention score/PV) have no weight
+    # tensor; GGML runs them in F16 — they are never offloaded.
+    act_act: bool = False
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k * self.count
+
+    def weight_bytes(self, fmt: str) -> float:
+        if self.act_act:
+            return 0.0
+        return self.n * self.k * BPW[fmt] / 8.0 * self.count
+
+    def act_bytes(self, act_bits: int = 16) -> float:
+        return (self.m * self.k + self.m * self.n) * act_bits / 8.0 * self.count
+
+
+def assign_formats(ops: Iterable[MatmulOp], policy: OffloadPolicy,
+                   act_fmt: str = "f32") -> list[tuple[MatmulOp, str]]:
+    """GGML-style dtype assignment.
+
+    Activation-activation matmuls -> F32 (GGML act-act mul_mat).
+    Weight matmuls take the
+    policy format; K-dims not divisible by the block size fall back to
+    F16, and f32-pinned roles go to F32 — this is what produces the
+    paper's F32/F16 residue share.
+    """
+    out = []
+    for op in ops:
+        if op.act_act:
+            out.append((op, act_fmt))
+            continue
+        fmt = policy.format_for(op.role)
+        block = {"q3_k": 256, "q8_0": 32, "q4_0": 32}.get(fmt, 1)
+        if op.k % block:
+            fmt = "f16" if fmt.startswith("q") else fmt
+        out.append((op, fmt))
+    return out
+
+
+def time_by_format(assigned: list[tuple[MatmulOp, str]],
+                   device) -> dict[str, float]:
+    """Sum modeled execution seconds per format on a device model."""
+    acc: dict[str, float] = defaultdict(float)
+    for op, fmt in assigned:
+        acc[fmt] += device.matmul_time(op, fmt)
+    return dict(acc)
+
+
+def fractions(times: dict[str, float]) -> dict[str, float]:
+    tot = sum(times.values()) or 1.0
+    return {k: v / tot for k, v in times.items()}
+
+
+def flops_by_format(assigned: list[tuple[MatmulOp, str]]) -> dict[str, float]:
+    acc: dict[str, float] = defaultdict(float)
+    for op, fmt in assigned:
+        acc[fmt] += op.flops
+    return dict(acc)

@@ -1,0 +1,358 @@
+"""GGML-semantic blocked quantization formats: Q8_0, Q3_K, Q8_K.
+
+These reproduce the value semantics of the formats the paper offloads to
+IMAX3 (stable-diffusion.cpp / GGML):
+
+* **Q8_0** — blocks of 32 weights; one fp16 scale ``d`` per block; int8
+  quants ``q``; value ``w = d * q``.  8.5 bits/weight.
+* **Q3_K** — super-blocks of 256 weights = 16 sub-blocks of 16; 3-bit
+  quants in ``[-4, 3]`` stored as 2-bit low parts (``ql``) plus a 1-bit
+  high mask (``qh``); 6-bit unsigned sub-block scales with an offset of
+  32 (effective multiplier ``sc - 32``); one fp16 super-scale ``d``;
+  value ``w = d * (sc - 32) * q``.  ~3.44 bits/weight packed.
+* **Q8_K** — activation-side format for quantized dot products: blocks
+  of 256, fp32 scale, int8 quants.
+
+The paper's OP_CVT53 restructuring (6-bit scales approximated to 5 bits,
+2+1-bit quants unified to 3 bits) is reproduced by ``scale_bits=5`` and
+by the in-kernel ``ql|qh<<2`` unpack in ``repro.kernels.q3k_matmul``.
+
+All functions are pure-jnp and jittable; leading (row) dimensions are
+arbitrary, the quantized axis is always the last one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+QK8_0 = 32     # Q8_0 block size
+QK_K = 256     # k-quant super-block size
+Q3K_SUB = 16   # Q3_K sub-block size
+N_SUB = QK_K // Q3K_SUB  # 16 sub-blocks per super-block
+
+# Storage cost in bits per weight (packed, GGML-faithful).
+BPW = {
+    "f32": 32.0,
+    "f16": 16.0,
+    "bf16": 16.0,
+    "q8_0": (32 * 8 + 16) / 32,                  # 8.5
+    "q4_0": (16 * 8 + 16) / 32,                  # 4.5
+    "q3_k": (64 * 8 + 32 * 8 + 12 * 8 + 16) / 256,  # 3.4375
+    "q8_k": (256 * 8 + 32) / 256,                # 8.125
+}
+
+
+def _check_last_divisible(x: jax.Array, block: int) -> None:
+    if x.shape[-1] % block:
+        raise ValueError(
+            f"quantized axis {x.shape[-1]} not divisible by block {block}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Q8_0Tensor:
+    """Q8_0: int8 quants + fp16 per-32 scales. Logical shape = qs.shape."""
+    qs: jax.Array  # int8   (..., K)
+    d: jax.Array   # f16    (..., K // 32)
+
+    @property
+    def shape(self):
+        return self.qs.shape
+
+    def tree_flatten(self):
+        return (self.qs, self.d), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def nbytes(self) -> int:
+        return self.qs.size + 2 * self.d.size
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Q3KTensor:
+    """Q3_K: packed 3-bit quants, 6-bit sub-scales, fp16 super-scale.
+
+    ``ql`` packs 4 low-2-bit values per byte (value j of each group of 4
+    at bit ``2*j``); ``qh`` packs 8 high bits per byte (value j of each
+    group of 8 at bit ``j``).  ``scales`` holds the 6-bit codes packed 4
+    per 3 bytes (little-endian bitstream within each 3-byte group).
+    """
+    ql: jax.Array      # uint8 (..., K // 4)
+    qh: jax.Array      # uint8 (..., K // 8)
+    scales: jax.Array  # uint8 (..., K // 256, 12)  packed 6-bit codes
+    d: jax.Array       # f16   (..., K // 256)
+    scale_bits: int = 6  # 6 (exact) or 5 (paper's OP_CVT53 approximation)
+
+    @property
+    def shape(self):
+        return self.ql.shape[:-1] + (self.ql.shape[-1] * 4,)
+
+    def tree_flatten(self):
+        return (self.ql, self.qh, self.scales, self.d), self.scale_bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, scale_bits=aux)
+
+    def nbytes(self) -> int:
+        return self.ql.size + self.qh.size + self.scales.size + 2 * self.d.size
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Q8KTensor:
+    """Q8_K activation blocks: int8 quants + fp32 per-256 scales."""
+    qs: jax.Array  # int8 (..., K)
+    d: jax.Array   # f32  (..., K // 256)
+
+    @property
+    def shape(self):
+        return self.qs.shape
+
+    def tree_flatten(self):
+        return (self.qs, self.d), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def nbytes(self) -> int:
+        return self.qs.size + 4 * self.d.size
+
+
+# ---------------------------------------------------------------- Q8_0
+
+def quantize_q8_0(x: jax.Array) -> Q8_0Tensor:
+    _check_last_divisible(x, QK8_0)
+    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], -1, QK8_0)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    d = (amax / 127.0).astype(jnp.float16)
+    inv = jnp.where(d > 0, 1.0 / d.astype(jnp.float32), 0.0)
+    q = jnp.clip(jnp.round(xb * inv[..., None]), -127, 127).astype(jnp.int8)
+    return Q8_0Tensor(qs=q.reshape(x.shape), d=d)
+
+
+def dequantize_q8_0(t: Q8_0Tensor, dtype=jnp.float32) -> jax.Array:
+    qb = t.qs.reshape(*t.qs.shape[:-1], -1, QK8_0).astype(jnp.float32)
+    w = qb * t.d.astype(jnp.float32)[..., None]
+    return w.reshape(t.qs.shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- Q4_0
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Q4_0Tensor:
+    """Q4_0: 4-bit quants (offset 8), two per byte, fp16 per-32 scales.
+
+    GGML semantics: w = d * (q - 8), q in [0, 15].  The extra GGML
+    format beyond the paper's two — 4.5 bits/weight, the most common
+    llama.cpp deployment point.
+    """
+    qs: jax.Array  # uint8 (..., K // 2) packed low-nibble-first
+    d: jax.Array   # f16   (..., K // 32)
+
+    @property
+    def shape(self):
+        return self.qs.shape[:-1] + (self.qs.shape[-1] * 2,)
+
+    def tree_flatten(self):
+        return (self.qs, self.d), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def nbytes(self) -> int:
+        return self.qs.size + 2 * self.d.size
+
+
+def pack_q4(q_unsigned: jax.Array) -> jax.Array:
+    """Pack 4-bit values (0..15), last axis K -> K/2 bytes (lo, hi)."""
+    k = q_unsigned.shape[-1]
+    q = q_unsigned.astype(jnp.uint8).reshape(*q_unsigned.shape[:-1],
+                                             k // 2, 2)
+    return (q[..., 0] | (q[..., 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_q4(qs: jax.Array) -> jax.Array:
+    """(..., K/2) bytes -> (..., K) int8 values in [-8, 7] (offset 8)."""
+    lo = (qs & 0x0F).astype(jnp.int32) - 8
+    hi = ((qs >> 4) & 0x0F).astype(jnp.int32) - 8
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*qs.shape[:-1], qs.shape[-1] * 2).astype(jnp.int8)
+
+
+def quantize_q4_0(x: jax.Array) -> Q4_0Tensor:
+    _check_last_divisible(x, QK8_0)
+    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], -1, QK8_0)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    d = (amax / 7.0).astype(jnp.float16)  # q-8 in [-8,7]; use +/-7 sym
+    inv = jnp.where(d > 0, 1.0 / d.astype(jnp.float32), 0.0)
+    q = jnp.clip(jnp.round(xb * inv[..., None]) + 8, 0, 15)
+    qs = pack_q4(q.reshape(*x.shape[:-1], -1).astype(jnp.uint8))
+    return Q4_0Tensor(qs=qs, d=d)
+
+
+def dequantize_q4_0(t: Q4_0Tensor, dtype=jnp.float32) -> jax.Array:
+    q = unpack_q4(t.qs).astype(jnp.float32)
+    qb = q.reshape(*q.shape[:-1], -1, QK8_0)
+    w = qb * t.d.astype(jnp.float32)[..., None]
+    return w.reshape(q.shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- Q8_K
+
+def quantize_q8_k(x: jax.Array) -> Q8KTensor:
+    _check_last_divisible(x, QK_K)
+    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], -1, QK_K)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    d = amax / 127.0
+    inv = jnp.where(d > 0, 1.0 / d, 0.0)
+    q = jnp.clip(jnp.round(xb * inv[..., None]), -127, 127).astype(jnp.int8)
+    return Q8KTensor(qs=q.reshape(x.shape), d=d.astype(jnp.float32))
+
+
+def dequantize_q8_k(t: Q8KTensor, dtype=jnp.float32) -> jax.Array:
+    qb = t.qs.reshape(*t.qs.shape[:-1], -1, QK_K).astype(jnp.float32)
+    w = qb * t.d[..., None]
+    return w.reshape(t.qs.shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- Q3_K
+
+def pack_q3(q_unsigned: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pack unsigned 3-bit values (0..7), last axis K -> (ql K/4, qh K/8)."""
+    k = q_unsigned.shape[-1]
+    q = q_unsigned.astype(jnp.uint8)
+    low = (q & 3).reshape(*q.shape[:-1], k // 4, 4)
+    shifts = jnp.arange(4, dtype=jnp.uint8) * 2
+    ql = jnp.sum(low.astype(jnp.uint32) << shifts.astype(jnp.uint32), axis=-1)
+    hi = ((q >> 2) & 1).reshape(*q.shape[:-1], k // 8, 8)
+    hshifts = jnp.arange(8, dtype=jnp.uint32)
+    qh = jnp.sum(hi.astype(jnp.uint32) << hshifts, axis=-1)
+    return ql.astype(jnp.uint8), qh.astype(jnp.uint8)
+
+
+def unpack_q3(ql: jax.Array, qh: jax.Array) -> jax.Array:
+    """Inverse of pack_q3: returns signed int8 values in [-4, 3], shape (..., K)."""
+    shifts = jnp.arange(4, dtype=jnp.uint8) * 2
+    low = (ql[..., None] >> shifts) & 3                      # (..., K/4, 4)
+    low = low.reshape(*ql.shape[:-1], ql.shape[-1] * 4)
+    hshifts = jnp.arange(8, dtype=jnp.uint8)
+    hi = (qh[..., None] >> hshifts) & 1                       # (..., K/8, 8)
+    hi = hi.reshape(*qh.shape[:-1], qh.shape[-1] * 8)
+    q = (low.astype(jnp.int8) | (hi.astype(jnp.int8) << 2)).astype(jnp.int32) - 4
+    return q.astype(jnp.int8)
+
+
+def pack_scales6(sc: jax.Array) -> jax.Array:
+    """Pack unsigned 6-bit codes (..., nsb, 16) -> (..., nsb, 12) bytes.
+
+    Four codes -> three bytes, little-endian within each group.
+    """
+    s = sc.astype(jnp.uint32).reshape(*sc.shape[:-1], 4, 4)
+    word = (s[..., 0] | (s[..., 1] << 6) | (s[..., 2] << 12) | (s[..., 3] << 18))
+    b0 = word & 0xFF
+    b1 = (word >> 8) & 0xFF
+    b2 = (word >> 16) & 0xFF
+    packed = jnp.stack([b0, b1, b2], axis=-1)                 # (..., 4, 3)
+    return packed.reshape(*sc.shape[:-1], 12).astype(jnp.uint8)
+
+
+def unpack_scales6(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_scales6: (..., nsb, 12) -> (..., nsb, 16) uint8 codes."""
+    p = packed.astype(jnp.uint32).reshape(*packed.shape[:-1], 4, 3)
+    word = p[..., 0] | (p[..., 1] << 8) | (p[..., 2] << 16)
+    s = jnp.stack([(word >> (6 * j)) & 0x3F for j in range(4)], axis=-1)
+    return s.reshape(*packed.shape[:-1], 16).astype(jnp.uint8)
+
+
+def approx_scale_codes(sc: jax.Array, scale_bits: int) -> jax.Array:
+    """Paper's OP_CVT53 scale approximation: 6-bit code -> ``scale_bits``.
+
+    ``sc`` are unsigned 6-bit codes (effective multiplier ``sc - 32``).
+    For 5 bits we drop the LSB of the effective value and re-center,
+    which the paper reports as having almost no effect on outputs.
+    """
+    if scale_bits == 6:
+        return sc
+    if scale_bits == 5:
+        eff = sc.astype(jnp.int32) - 32          # [-32, 31]
+        eff5 = (eff >> 1) << 1                   # drop LSB -> 5-bit grid
+        return (eff5 + 32).astype(jnp.uint8)
+    raise ValueError(f"unsupported scale_bits={scale_bits}")
+
+
+def quantize_q3_k(x: jax.Array, scale_bits: int = 6) -> Q3KTensor:
+    _check_last_divisible(x, QK_K)
+    lead = x.shape[:-1]
+    xs = x.astype(jnp.float32).reshape(*lead, -1, N_SUB, Q3K_SUB)
+    # Per-sub-block ideal scale: q in [-4, 3] -> divide by 4.
+    amax = jnp.max(jnp.abs(xs), axis=-1)                       # (..., nsb, 16)
+    d_sub = amax / 4.0
+    # Super-block scale so that |code| <= 31 (code = sc - 32 in [-32, 31]).
+    d = jnp.max(d_sub, axis=-1) / 31.0                         # (..., nsb)
+    inv_d = jnp.where(d > 0, 1.0 / d, 0.0)
+    code = jnp.clip(jnp.round(d_sub * inv_d[..., None]), 0, 31) + 32
+    code = approx_scale_codes(code.astype(jnp.uint8), scale_bits)
+    eff = d[..., None] * (code.astype(jnp.float32) - 32.0)     # (..., nsb, 16)
+    inv_eff = jnp.where(eff != 0, 1.0 / eff, 0.0)
+    q = jnp.clip(jnp.round(xs * inv_eff[..., None]), -4, 3)
+    qu = (q + 4).astype(jnp.uint8).reshape(*lead, -1)          # (..., K) 0..7
+    ql, qh = pack_q3(qu)
+    return Q3KTensor(ql=ql, qh=qh, scales=pack_scales6(code),
+                     d=d.astype(jnp.float16), scale_bits=scale_bits)
+
+
+def q3k_effective_scales(t: Q3KTensor) -> jax.Array:
+    """Effective per-sub-block multiplier d*(sc-32): shape (..., K // 16)."""
+    code = unpack_scales6(t.scales).astype(jnp.float32)        # (..., nsb, 16)
+    eff = t.d.astype(jnp.float32)[..., None] * (code - 32.0)
+    return eff.reshape(*t.d.shape[:-1], -1)
+
+
+def dequantize_q3_k(t: Q3KTensor, dtype=jnp.float32) -> jax.Array:
+    q = unpack_q3(t.ql, t.qh).astype(jnp.float32)              # (..., K)
+    eff = q3k_effective_scales(t)                              # (..., K/16)
+    qb = q.reshape(*q.shape[:-1], -1, Q3K_SUB)
+    w = qb * eff[..., None]
+    return w.reshape(q.shape).astype(dtype)
+
+
+# ------------------------------------------------------------- helpers
+
+def quantize(x: jax.Array, fmt: str, **kw: Any):
+    if fmt == "q8_0":
+        return quantize_q8_0(x)
+    if fmt == "q4_0":
+        return quantize_q4_0(x)
+    if fmt == "q3_k":
+        return quantize_q3_k(x, **kw)
+    if fmt == "q8_k":
+        return quantize_q8_k(x)
+    if fmt in ("f32", "f16", "bf16"):
+        return x.astype({"f32": jnp.float32, "f16": jnp.float16,
+                         "bf16": jnp.bfloat16}[fmt])
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+def dequantize(t, dtype=jnp.float32) -> jax.Array:
+    if isinstance(t, Q8_0Tensor):
+        return dequantize_q8_0(t, dtype)
+    if isinstance(t, Q4_0Tensor):
+        return dequantize_q4_0(t, dtype)
+    if isinstance(t, Q3KTensor):
+        return dequantize_q3_k(t, dtype)
+    if isinstance(t, Q8KTensor):
+        return dequantize_q8_k(t, dtype)
+    return t.astype(dtype)

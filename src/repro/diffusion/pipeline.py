@@ -1,0 +1,86 @@
+"""Text-to-image pipeline: CLIP -> UNet (denoise loop) -> VAE decode.
+
+This is the stable-diffusion.cpp execution path the paper profiles:
+every linear/conv weight is role-tagged, so applying an
+``OffloadPolicy`` quantizes exactly the tensors GGML would (Q8_0 or
+Q3_K model files), and the un-quantized remainder (norms, softmax,
+attention score/PV) is the paper's F32/F16 "host" share.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import OffloadPolicy
+from repro.core.qlinear import quantize_params
+from repro.diffusion import schedule as sched_mod
+from repro.models import clip as clip_mod
+from repro.models import unet as unet_mod
+from repro.models import vae as vae_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class SDConfig:
+    name: str = "sd-turbo"
+    unet: unet_mod.UNetConfig = unet_mod.SD15_UNET
+    vae: vae_mod.VAEConfig = vae_mod.SD15_VAE
+    clip: Any = None   # ModelConfig; None -> clip_mod.clip_config()
+    latent_hw: int = 64          # 512x512 image -> 64x64 latent
+    text_len: int = 77
+    steps: int = 1               # SD-Turbo single step
+
+    def clip_cfg(self):
+        return self.clip or clip_mod.clip_config()
+
+
+SD_TURBO = SDConfig()
+TINY_SD = SDConfig(name="tiny-sd", unet=unet_mod.TINY_UNET,
+                   vae=vae_mod.TINY_VAE, clip=clip_mod.TINY_CLIP,
+                   latent_hw=8, steps=1)
+
+
+def init_pipeline(key: jax.Array, cfg: SDConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "clip": clip_mod.init_clip(ks[0], cfg.clip_cfg()),
+        "unet": unet_mod.init_unet(ks[1], cfg.unet),
+        "vae": vae_mod.init_vae_decoder(ks[2], cfg.vae),
+    }
+
+
+def quantize_pipeline(params: dict, policy: OffloadPolicy) -> dict:
+    """GGML-style model-file quantization (the paper's two models)."""
+    return quantize_params(params, policy)
+
+
+def generate(params: dict, cfg: SDConfig, tokens: jax.Array,
+             key: jax.Array, *, steps: int | None = None) -> jax.Array:
+    """tokens: (B, 77) -> images (B, 8*latent_hw, 8*latent_hw, 3)."""
+    steps = steps or cfg.steps
+    b = tokens.shape[0]
+    ctx = clip_mod.clip_encode(params["clip"], cfg.clip_cfg(), tokens)
+    noise_sched = sched_mod.NoiseSchedule()
+    x = jax.random.normal(key, (b, cfg.latent_hw, cfg.latent_hw, 4),
+                          jnp.bfloat16)
+    if steps == 1:  # SD-Turbo
+        t = jnp.full((b,), 999)
+        eps = unet_mod.apply_unet(params["unet"], cfg.unet, x, t, ctx)
+        x0 = sched_mod.turbo_step(noise_sched, x.astype(jnp.float32),
+                                  eps.astype(jnp.float32))
+    else:
+        ts = sched_mod.ddim_timesteps(steps)
+        x0 = x.astype(jnp.float32)
+        for i in range(steps):
+            t = jnp.full((b,), ts[i])
+            eps = unet_mod.apply_unet(params["unet"], cfg.unet,
+                                      x0.astype(jnp.bfloat16), t, ctx)
+            t_prev = ts[i + 1] if i + 1 < steps else jnp.array(-1)
+            x0 = sched_mod.ddim_step(noise_sched, x0,
+                                     eps.astype(jnp.float32),
+                                     ts[i], t_prev)
+    img = vae_mod.apply_vae_decoder(params["vae"], cfg.vae,
+                                    x0.astype(jnp.bfloat16))
+    return img

@@ -1,0 +1,61 @@
+"""Diffusion noise schedules and samplers (DDIM / Euler / SD-Turbo).
+
+SD v1.5's scaled-linear beta schedule; the paper's experiment is the
+SD-Turbo single-step sampler (adversarial diffusion distillation
+checkpoint — our weights are synthetic, but the sampler math and the
+compute graph are the real ones, which is what the kernel offload
+study needs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSchedule:
+    num_train_timesteps: int = 1000
+    beta_start: float = 0.00085
+    beta_end: float = 0.012
+
+    def alphas_cumprod(self) -> jax.Array:
+        betas = jnp.linspace(self.beta_start ** 0.5, self.beta_end ** 0.5,
+                             self.num_train_timesteps) ** 2
+        return jnp.cumprod(1.0 - betas)
+
+
+def ddim_timesteps(num_steps: int, num_train: int = 1000) -> jax.Array:
+    step = num_train // num_steps
+    return jnp.arange(num_train - 1, -1, -step)[:num_steps]
+
+
+def ddim_step(sched: NoiseSchedule, x: jax.Array, eps: jax.Array,
+              t: jax.Array, t_prev: jax.Array) -> jax.Array:
+    ac = sched.alphas_cumprod()
+    a_t = ac[t]
+    a_prev = jnp.where(t_prev >= 0, ac[jnp.maximum(t_prev, 0)], 1.0)
+    x0 = (x - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1 - a_prev) * eps
+
+
+def euler_sigmas(sched: NoiseSchedule, num_steps: int) -> jax.Array:
+    ac = sched.alphas_cumprod()
+    sigmas = jnp.sqrt((1 - ac) / ac)
+    idx = jnp.linspace(len(sigmas) - 1, 0, num_steps).round().astype(int)
+    return jnp.concatenate([sigmas[idx], jnp.zeros((1,))])
+
+
+def euler_step(x: jax.Array, eps: jax.Array, sigma: jax.Array,
+               sigma_next: jax.Array) -> jax.Array:
+    d = eps  # eps-prediction == derivative in the VE view used here
+    return x + (sigma_next - sigma) * d
+
+
+def turbo_step(sched: NoiseSchedule, x: jax.Array,
+               eps: jax.Array, t: int = 999) -> jax.Array:
+    """SD-Turbo: single step from pure noise directly to x0 estimate."""
+    ac = sched.alphas_cumprod()
+    a_t = ac[t]
+    return (x - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)

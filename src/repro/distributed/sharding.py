@@ -1,0 +1,283 @@
+"""Sharding rules: logical roles -> PartitionSpec on the production mesh.
+
+Mesh axes:
+  * ``pod``   — pure data parallelism across pods (cross-ICI/DCN axis).
+  * ``data``  — data parallelism + FSDP (ZeRO-3-style parameter
+    sharding: every weight also shards its K dim over ``data``).
+  * ``model`` — tensor parallelism (heads / ffn / vocab / experts).
+
+Role-based rules cover every ``Linear`` (dense or quantized — the
+quantized side tensors ``qs/ql/qh/scales/d`` inherit the weight's spec
+with the K-shard dropped when the scale dim doesn't divide).  Remaining
+leaves (norms, conv glue, biases) are replicated; big cache/state
+buffers get a documented heuristic (batch->data, seq->model, fallback
+largest-divisible-dim).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.qlinear import Linear
+from repro.core.quant import Q3KTensor, Q4_0Tensor, Q8_0Tensor
+
+# role -> (N_axis, K_axis) for the logical (N, K) weight.
+# N is the output dim, K the input/contraction dim.
+ROLE_RULES: dict[str, tuple] = {
+    "attn_qkv":   ("model", "data"),
+    "attn_out":   ("data", "model"),
+    "mlp_up":     ("model", "data"),
+    "mlp_gate":   ("model", "data"),
+    "mlp_down":   ("data", "model"),
+    "expert_up":  ("model", "data"),   # expert dim handled separately
+    "expert_gate": ("model", "data"),
+    "expert_down": ("model", "data"),
+    "router":     (None, None),
+    "ssm_in":     ("model", "data"),
+    "ssm_x":      (None, None),
+    "ssm_out":    ("data", "model"),
+    "embed":      ("model", "data"),
+    "lm_head":    ("model", "data"),
+    "conv":       (None, None),
+    "time_embed": (None, None),
+    "proj_misc":  (None, None),
+}
+
+
+def _divides(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = int(np.prod([mesh.shape[a] for a in
+                        (axis if isinstance(axis, tuple) else (axis,))]))
+    return dim % size == 0
+
+
+def _weight_spec(shape: tuple, role: str, mesh: Mesh) -> P:
+    n_ax, k_ax = ROLE_RULES.get(role, (None, None))
+    if len(shape) == 3:  # stacked experts (E, N, K)
+        from repro.distributed import ctx as _ctx
+        env = _ctx.current()
+        if env is not None and getattr(env, "moe_mode", "ep") == "dp":
+            # DP-MoE: experts replicated in compute, weights FSDP'd on
+            # data (gathered per layer) — cheaper than buffer all-to-all
+            # when token bytes exceed expert-weight bytes (training).
+            k_ax2 = "data" if _divides(shape[2], mesh, "data") else None
+            return P(None, None, k_ax2)
+        e_ax = "model" if _divides(shape[0], mesh, "model") else None
+        k_ax2 = "data" if (e_ax != "data"
+                           and _divides(shape[2], mesh, "data")) else None
+        return P(e_ax, None, k_ax2)
+    n_ax = n_ax if _divides(shape[0], mesh, n_ax) else None
+    k_ax = k_ax if len(shape) > 1 and _divides(shape[1], mesh, k_ax) else None
+    if len(shape) == 1:
+        return P(n_ax)
+    return P(n_ax, k_ax)
+
+
+def _qside_spec(wspec: P, shape: tuple, mesh: Mesh) -> P:
+    """Spec for a quantized side tensor (same leading layout as the
+    weight, trailing quantization axes keep the K shard only if they
+    divide)."""
+    axes = list(wspec) + [None] * (len(shape) - len(wspec))
+    axes = axes[: len(shape)]
+    for i, ax in enumerate(axes):
+        if not _divides(shape[i], mesh, ax):
+            axes[i] = None
+    return P(*axes)
+
+
+def linear_specs(lin: Linear, mesh: Mesh) -> Linear:
+    """Return a Linear-shaped pytree of PartitionSpecs."""
+    w = lin.w
+    if isinstance(w, (Q8_0Tensor, Q4_0Tensor)):
+        ws = _weight_spec(w.qs.shape, lin.role, mesh)
+        spec_w = type(w)(qs=ws, d=_qside_spec(ws, w.d.shape, mesh))
+    elif isinstance(w, Q3KTensor):
+        ws = _weight_spec(w.ql.shape, lin.role, mesh)
+        spec_w = Q3KTensor(
+            ql=ws, qh=_qside_spec(ws, w.qh.shape, mesh),
+            scales=_qside_spec(ws, w.scales.shape, mesh),
+            d=_qside_spec(ws, w.d.shape, mesh), scale_bits=w.scale_bits)
+    else:
+        spec_w = _weight_spec(w.shape, lin.role, mesh)
+    spec_b = None
+    if lin.b is not None:
+        n_ax = _weight_spec((lin.b.shape[0], 1), lin.role, mesh)[0]
+        spec_b = P(n_ax)
+    return Linear(w=spec_w, b=spec_b, role=lin.role)
+
+
+def heuristic_spec(shape: tuple, mesh: Mesh, *,
+                   skip_dims: tuple = ()) -> P:
+    """Greedy fallback for stacked caches / states: assign each mesh
+    axis (largest first) to the largest unassigned divisible dim."""
+    axes: list = [None] * len(shape)
+    order = sorted(mesh.shape.items(), key=lambda kv: -kv[1])
+    taken = set(skip_dims)
+    for name, size in order:
+        cands = [(d, shape[d]) for d in range(len(shape))
+                 if d not in taken and axes[d] is None
+                 and shape[d] % size == 0 and shape[d] >= size]
+        if not cands:
+            continue
+        d = max(cands, key=lambda c: c[1])[0]
+        axes[d] = name
+        taken.add(d)
+    return P(*axes)
+
+
+def _stacked(spec: P, leaf_ndim: int, base_ndim: int) -> P:
+    """Prepend None axes for the period-stacking dims vmap added."""
+    extra = leaf_ndim - base_ndim
+    return P(*([None] * extra), *spec)
+
+
+def param_specs(params: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Sharding spec pytree matching a model parameter tree.
+
+    Linear leaves (possibly stacked over scan periods: leading axes are
+    replicated) follow ROLE_RULES; everything else is replicated.
+
+    ``fsdp=False`` (serving): drop the K-dim `data` shard so weights
+    are TP-sharded only — no per-layer weight all-gathers, and (for
+    quantized models) only quantized bytes ever leave HBM.  Quantized
+    params fit TP-only for every assigned arch (405B Q3_K: ~11 GB/chip).
+    """
+    def one(node):
+        if isinstance(node, Linear):
+            base = linear_specs(_unstack_linear(node), mesh)
+            if not fsdp:
+                base = jax.tree.map(
+                    lambda sp: P(*[None if ax == "data" else ax
+                                   for ax in sp]) if isinstance(sp, P)
+                    else sp,
+                    base, is_leaf=lambda x: isinstance(x, P))
+
+            # Re-add leading stacked dims.
+            def fix(spec_leaf, arr_leaf):
+                if arr_leaf is None:
+                    return None
+                base_nd = len(tuple(spec_leaf))
+                return _stacked(spec_leaf, arr_leaf.ndim, base_nd)
+            return jax.tree.map(
+                fix, base, node,
+                is_leaf=lambda x: isinstance(x, P) or x is None)
+        if isinstance(node, (Q8_0Tensor, Q4_0Tensor, Q3KTensor)):
+            # Bare quantized tensors outside a Linear = flattened
+            # quantized optimizer moments: shard dim0 over all axes
+            # that divide (ZeRO for the quantized state).
+            def flat_spec(a):
+                ax = []
+                prod = 1
+                for name in ("data", "model", "pod"):
+                    if name in mesh.shape and a.shape[0] % (
+                            prod * mesh.shape[name]) == 0:
+                        ax.append(name)
+                        prod *= mesh.shape[name]
+                lead = tuple(ax) if len(ax) > 1 else (ax[0] if ax else None)
+                return P(lead, *([None] * (a.ndim - 1)))
+            return jax.tree.map(flat_spec, node)
+        return P()  # replicate norms & misc
+
+    return jax.tree.map(
+        one, params,
+        is_leaf=lambda x: isinstance(
+            x, (Linear, Q8_0Tensor, Q4_0Tensor, Q3KTensor)))
+
+
+def _unstack_linear(lin: Linear) -> Linear:
+    """View of a (possibly period-stacked) Linear with the logical
+    trailing dims only — rules are written against logical (N, K)."""
+    def last(a, nd):
+        nd = min(nd, a.ndim)
+        return jax.ShapeDtypeStruct(a.shape[-nd:], a.dtype)
+    expert = lin.role.startswith("expert")
+    nd = 3 if expert else 2
+    w = lin.w
+    if isinstance(w, (Q8_0Tensor, Q4_0Tensor)):
+        w = type(w)(last(w.qs, nd), last(w.d, nd))
+    elif isinstance(w, Q3KTensor):
+        w = Q3KTensor(last(w.ql, nd), last(w.qh, nd),
+                      last(w.scales, nd + 1), last(w.d, nd), w.scale_bits)
+    else:
+        w = last(w, nd)
+    b = None
+    if lin.b is not None:
+        b = jax.ShapeDtypeStruct(lin.b.shape[-1:], lin.b.dtype)
+    return Linear(w=w, b=b, role=lin.role)
+
+
+def _data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """Decode-cache specs.
+
+    Leaves are period-stacked states: dim0 = period (replicated), dim1 =
+    batch.  Batch shards over (pod, data) when divisible; the sequence /
+    capacity dim of KV caches shards over `model` — and additionally
+    over the data axes when batch can't use them (long_500k b=1:
+    sequence-parallel decode).  SSM/xLSTM state feature dims shard over
+    `model`.
+    """
+    data_axes = _data_axes(mesh)
+    data_sz = int(np.prod([mesh.shape[a] for a in data_axes])) \
+        if data_axes else 1
+    msz = mesh.shape.get("model", 1)
+
+    def leaf_spec(a):
+        if a is None or not hasattr(a, "shape") or a.ndim < 2:
+            return P()
+        shape = a.shape
+        axes: list = [None] * len(shape)
+        b = shape[1]
+        batch_on_data = data_axes and b % data_sz == 0
+        if batch_on_data:
+            axes[1] = data_axes if len(data_axes) > 1 else data_axes[0]
+        # Choose the "big" dim: KV caches are (np,B,H,C,hd) -> dim 3;
+        # states are (np,B,...) -> largest trailing dim.
+        cands = [d for d in range(2, len(shape))]
+        if not cands:
+            return P(*axes)
+        big = max(cands, key=lambda d: shape[d])
+        want = ["model"] if batch_on_data else ["model", *data_axes]
+        sz = 1
+        got = []
+        for ax in want:
+            if shape[big] % (sz * mesh.shape[ax]) == 0:
+                got.append(ax)
+                sz *= mesh.shape[ax]
+        if got:
+            axes[big] = tuple(got) if len(got) > 1 else got[0]
+        return P(*axes)
+    return jax.tree.map(leaf_spec, cache)
+
+
+def batch_specs(tree: Any, mesh: Mesh) -> Any:
+    """Input batch: dim0 (global batch) over all data-ish axes that
+    divide it; everything else replicated."""
+    data_axes = [a for a in ("pod", "data") if a in mesh.shape]
+
+    def leaf_spec(a):
+        if a is None or not hasattr(a, "shape") or a.ndim == 0:
+            return P()
+        b = a.shape[0]
+        use = []
+        prod = 1
+        for ax in data_axes:
+            if b % (prod * mesh.shape[ax]) == 0:
+                use.append(ax)
+                prod *= mesh.shape[ax]
+        spec = [tuple(use) if use else None] + [None] * (a.ndim - 1)
+        return P(*spec)
+    return jax.tree.map(leaf_spec, tree)
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: flash-decode (one-token GQA attention vs cache).
+
+The decode-path analogue of flash attention: queries are the G query
+heads per KV head at a single position; keys/values are the (possibly
+ring-buffer) cache.  Validity is a *dynamic* length (`kv_len`, an SMEM
+scalar): slots >= kv_len are masked.  Online-softmax over cache chunks
+keeps the (G, C) logits in VMEM — on HBM the step reads only the cache
+and writes (G, hd).
+
+q: (B, Hkv, G, hd); k/v: (B, Hkv, C, hd); kv_len: (1,) int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 1024
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, nk: int,
+                   bk: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # (G, hd)
+    k = k_ref[0]                                    # (bk, hd)
+    logits = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (G, bk)
+    kpos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(kpos < len_ref[0], logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_len: jax.Array, *, scale: float | None = None,
+                 bk: int = DEFAULT_BK,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, hd); k/v: (B, Hkv, C, hd); kv_len: (1,) int32."""
+    b, h, g, d = q.shape
+    c = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    bk = min(bk, c)
+    nk = pl.cdiv(c, bk)
+    qf = q.reshape(b * h, g, d)
+    kf = k.reshape(b * h, c, d)
+    vf = v.reshape(b * h, c, d)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, nk=nk, bk=bk),
+        grid=(b * h, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda gi, j: (gi, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda gi, j: (gi, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda gi, j: (gi, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda gi, j: (gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(b, h, g, d)
+
+
+def flash_decode_ref(q, k, v, kv_len, *, scale=None):
+    """Oracle: masked softmax attention at one position."""
+    b, h, g, d = q.shape
+    c = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhgd,bhcd->bhgc", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(c)[None, None, None, :] < kv_len[0]
+    logits = jnp.where(valid, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhgc,bhcd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

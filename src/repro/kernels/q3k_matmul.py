@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused-unpack Q3_K matmul.
+
+TPU adaptation of the paper's Q3_K pipeline (Fig. 4).  IMAX3 adds
+OP_CVT53 to repack the 6-bit scales / 2+1-bit quants into a unified
+SIMD-friendly format inside the PE array; here the same restructuring
+happens in VMEM with vectorized shifts/masks on the VPU:
+
+* ``ql`` (2-bit low parts, 4/byte) and ``qh`` (high bits, 8/byte) are
+  unpacked and combined to signed 3-bit values in [-4, 3];
+* sub-block scales arrive as int8 codes (unpacked from the 12-byte
+  6-bit packing by the wrapper — a K/16-sized side input, ~2% of the
+  weight bytes) and are expanded to effective multipliers d*(sc-32);
+* dequantized bf16 weights feed the MXU; accumulation is f32.
+
+Only ~3.4 bits/weight cross the HBM boundary, which is the paper's core
+insight applied to the TPU memory hierarchy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import Q3K_SUB
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _unpack_q3_block(ql, qh, bn, bk):
+    """(bn,bk/4) uint8 + (bn,bk/8) uint8 -> (bn,bk) int8 in [-4,3]."""
+    shifts = jnp.arange(4, dtype=jnp.int32) * 2
+    low = (ql[..., None].astype(jnp.int32) >> shifts) & 3     # (bn,bk/4,4)
+    low = low.reshape(bn, bk)
+    hshifts = jnp.arange(8, dtype=jnp.int32)
+    hi = (qh[..., None].astype(jnp.int32) >> hshifts) & 1     # (bn,bk/8,8)
+    hi = hi.reshape(bn, bk)
+    return (low | (hi << 2)) - 4                              # int32 in [-4,3]
+
+
+def _q3k_kernel(x_ref, ql_ref, qh_ref, sc_ref, d_ref, o_ref, acc_ref,
+                *, nk: int):
+    """x:(bm,bk) bf16 | ql:(bn,bk/4) | qh:(bn,bk/8) | sc:(bn,bk/16) int8
+    | d:(bn,bk/256) f32 -> o:(bm,bn) f32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bn = ql_ref.shape[0]
+    bk = ql_ref.shape[1] * 4
+    q = _unpack_q3_block(ql_ref[...], qh_ref[...], bn, bk)    # OP_CVT53
+    # Effective scale per 16-weight sub-block: d * (sc - 32).
+    nsb = bk // Q3K_SUB
+    d = d_ref[...]                                            # (bn, bk/256)
+    d16 = jnp.repeat(d, nsb // d.shape[1], axis=1)            # (bn, nsb)
+    eff = d16 * (sc_ref[...].astype(jnp.float32) - 32.0)
+    w = (q.astype(jnp.float32).reshape(bn, nsb, Q3K_SUB)
+         * eff[:, :, None]).reshape(bn, bk).astype(jnp.bfloat16)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def q3k_matmul(x: jax.Array, ql: jax.Array, qh: jax.Array,
+               sc: jax.Array, d: jax.Array,
+               *, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+               bk: int = DEFAULT_BK, interpret: bool = False) -> jax.Array:
+    """y = x @ dequant(w).T with w in Q3_K.
+
+    x: (M, K) bf16; ql: (N, K/4) uint8; qh: (N, K/8) uint8;
+    sc: (N, K/16) uint8 6-bit codes; d: (N, K/256) f32. Returns (M, N) f32.
+    """
+    m, k = x.shape
+    n = ql.shape[0]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert bk % 256 == 0, "bk must cover whole Q3_K super-blocks"
+    nk = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), nk)
+    return pl.pallas_call(
+        functools.partial(_q3k_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 4), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 8), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 16), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // 256), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.bfloat16), ql, qh, sc, d)

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each oracle implements *exactly* the semantics the corresponding kernel
+claims (same quantization math, same accumulation dtype), so the
+per-kernel allclose tests are tight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import Q4_0Tensor, Q8_0Tensor, Q3KTensor, QK8_0, \
+    Q3K_SUB
+
+
+def q8_matmul_ref(x: jax.Array, w: Q8_0Tensor) -> jax.Array:
+    """Weight-only-quantized matmul: y = x @ dequant(w).T.
+
+    x: (M, K) bf16/f32 activations; w: Q8_0 of logical shape (N, K).
+    Dequant to bf16 (the in-VMEM compute type on TPU), accumulate f32.
+    """
+    wd = quant.dequantize_q8_0(w, jnp.bfloat16)
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), wd,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def q8_matmul_w8a8_ref(xq: jax.Array, xs: jax.Array,
+                       w: Q8_0Tensor) -> jax.Array:
+    """Integer-path matmul (paper's OP_SML8/OP_AD24 analogue).
+
+    xq: (M, K) int8; xs: (M, K/32) f32 block scales; w: Q8_0 (N, K).
+    y[m,n] = sum_b xs[m,b] * ws[n,b] * (xq[m,b,:] . wq[n,b,:])_int32
+    """
+    m, k = xq.shape
+    n = w.qs.shape[0]
+    nb = k // QK8_0
+    a = xq.reshape(m, nb, QK8_0)
+    b = w.qs.reshape(n, nb, QK8_0)
+    # int8 x int8 -> int32 per-block dot (24-bit accumulate fits in i32).
+    ints = jax.lax.dot_general(
+        a, b, dimension_numbers=(((2,), (2,)), ((1,), (1,))),
+        preferred_element_type=jnp.int32)          # (nb, M, N)
+    ws = w.d.astype(jnp.float32)                   # (N, nb)
+    scaled = (ints.astype(jnp.float32)
+              * xs.T[:, :, None]                   # (nb, M, 1)
+              * ws.T[:, None, :])                  # (nb, 1, N)
+    return jnp.sum(scaled, axis=0)
+
+
+def q4_matmul_ref(x: jax.Array, w: Q4_0Tensor) -> jax.Array:
+    """Weight-only Q4_0 matmul: y = x @ dequant(w).T (bf16 compute)."""
+    wd = quant.dequantize_q4_0(w, jnp.bfloat16)
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), wd,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def q3k_matmul_ref(x: jax.Array, w: Q3KTensor) -> jax.Array:
+    """Weight-only Q3_K matmul: y = x @ dequant(w).T (bf16 compute)."""
+    wd = quant.dequantize_q3_k(w, jnp.bfloat16)
+    return jax.lax.dot_general(
+        x.astype(jnp.bfloat16), wd,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def q3k_matmul_w8a8_ref(xq: jax.Array, xs: jax.Array,
+                        w: Q3KTensor) -> jax.Array:
+    """Integer-path Q3_K x Q8-activation matmul.
+
+    xq: (M, K) int8; xs: (M, K/16) f32 per-sub-block activation scales
+    (Q8_K quantized activations, scales broadcast to 16-granularity);
+    w: Q3KTensor (N, K).
+    """
+    m, k = xq.shape
+    qw = quant.unpack_q3(w.ql, w.qh)               # (N, K) int8 in [-4,3]
+    n = qw.shape[0]
+    eff = quant.q3k_effective_scales(w)            # (N, K/16)
+    nsb = k // Q3K_SUB
+    a = xq.reshape(m, nsb, Q3K_SUB)
+    b = qw.reshape(n, nsb, Q3K_SUB)
+    ints = jax.lax.dot_general(
+        a, b, dimension_numbers=(((2,), (2,)), ((1,), (1,))),
+        preferred_element_type=jnp.int32)          # (nsb, M, N)
+    scaled = (ints.astype(jnp.float32)
+              * xs.T[:, :, None]
+              * eff.T[:, None, :])
+    return jnp.sum(scaled, axis=0)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True,
+                        window: int | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """Softmax attention oracle.
+
+    q: (B, H, Sq, D); k, v: (B, H, Sk, D)  (GQA folded outside).
+    ``window``: sliding-window width (attend to keys in
+    (i - window, i]) — h2o-danube-style SWA.
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,377 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import: jax locks the
+# device count on first init, and the dry-run needs 512 placeholder
+# devices to build the production meshes.
+#
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes, with no real allocation (ShapeDtypeStruct inputs).
+# For each cell this proves the sharding config is coherent (compile
+# succeeds, collectives are legal), that it fits (memory_analysis), and
+# produces the roofline inputs (cost_analysis + HLO collective bytes).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+#   python -m repro.launch.dryrun --all [--both-meshes] [--out DIR]
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, ARCHS, cell_supported, get_config,
+                           input_specs)
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.policy import get_policy
+from repro.core.qlinear import Linear, quantize_params
+from repro.core.quant import Q3KTensor, Q8_0Tensor
+from repro.distributed import ctx as axctx
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_cache, init_lm
+from repro.optim import adamw
+from repro.profiling import roofline
+from repro.train.serve_step import make_decode, make_prefill
+from repro.train.train_step import make_train_step
+
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------ helpers
+
+def _sds_size(tree) -> int:
+    import numpy as np
+    tot = 0
+    for leaf in jax.tree.leaves(tree):
+        tot += int(np.prod(leaf.shape)) if hasattr(leaf, "shape") else 0
+    return tot
+
+
+def active_param_count(params_sds, cfg: ModelConfig) -> float:
+    """Logical params active per token (MoE experts scaled by top_k/E)."""
+    import numpy as np
+    total = 0.0
+    frac = 1.0
+    if cfg.moe is not None:
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+
+    def walk(node, scale):
+        nonlocal total
+        if isinstance(node, Linear):
+            s = scale * (frac if node.role.startswith("expert") else 1.0)
+            for leaf in jax.tree.leaves(
+                    node, is_leaf=lambda x: isinstance(
+                        x, (Q8_0Tensor, Q3KTensor))):
+                if isinstance(leaf, (Q8_0Tensor, Q3KTensor)):
+                    total += s * float(np.prod(leaf.shape))
+                elif hasattr(leaf, "shape"):
+                    total += s * float(np.prod(leaf.shape))
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v, scale)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v, scale)
+        elif hasattr(node, "shape"):
+            total += scale * float(np.prod(node.shape))
+    walk(params_sds, 1.0)
+    return total
+
+
+def dryrun_train_cfg(cfg: ModelConfig, shape: ShapeConfig) -> TrainConfig:
+    """Per-arch training config for the dry-run lowering."""
+    del cfg, shape
+    return TrainConfig(microbatch=0, remat="full")
+
+
+def probe_cfg(cfg: ModelConfig, k: int, shape: ShapeConfig) -> ModelConfig:
+    """k-period fully-unrolled variant for cost probing.
+
+    XLA's cost_analysis counts while-loop bodies once, so the real
+    (scanned) program under-reports FLOPs/bytes/collectives.  Probes
+    unroll everything at k=1 and k=2 periods; compile_cell extrapolates
+    ``total = outer + n_periods * (c2 - c1)`` — exact because the stack
+    is periodic and all other loop structure is removed in probes.
+    """
+    import dataclasses
+    plen = len(tuple(cfg.block_pattern))
+    rep = dict(num_layers=k * plen, scan_unroll=True,
+               mamba_chunk=shape.seq_len)
+    if cfg.encoder_layers:
+        # Encoder periods must scale with decoder periods for the
+        # linear extrapolation to hold.
+        assert cfg.encoder_layers == cfg.num_layers // plen, cfg.name
+        rep["encoder_layers"] = k
+    return dataclasses.replace(cfg, **rep)
+
+
+# -------------------------------------------------------- cell lowering
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy_name: str | None = None,
+               train_cfg: TrainConfig | None = None,
+               cfg_override: ModelConfig | None = None,
+               quantized_kv: bool = False,
+               donate: bool = True):
+    """Lower one (arch, shape, mesh) cell. Returns (lowered, meta)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell {arch} x {shape_name} skipped: {why}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(partial(init_lm, cfg=cfg), key)
+    specs = input_specs(cfg, shape)
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "params_logical": _sds_size(params_sds),
+    }
+
+    ns = lambda tree: sharding.to_named(tree, mesh)
+    # DP-MoE (weights-gather instead of buffer all-to-all) was
+    # REFUTED for this mesh: it leaves the model axis idle on expert
+    # compute (6.7x compute-term regression, EXPERIMENTS.md B3).  EP
+    # stays the default; the knob remains for narrow-expert archs.
+    moe_mode = "ep"
+    meta["moe_mode"] = moe_mode if cfg.moe is not None else None
+    with mesh, axctx.axis_env(mesh, moe_mode=moe_mode):
+        if shape.kind == "train":
+            tcfg = train_cfg or dryrun_train_cfg(cfg, shape)
+            opt_sds = jax.eval_shape(
+                partial(adamw.init_adam, cfg=tcfg), params_sds)
+            pspec = sharding.param_specs(params_sds, mesh)
+            ospec = adamw.AdamState(step=P(),
+                                    m=sharding.param_specs(opt_sds.m, mesh),
+                                    v=sharding.param_specs(opt_sds.v, mesh))
+            bspec = sharding.batch_specs(specs, mesh)
+            step_fn = make_train_step(cfg, tcfg)
+
+            def train_fn(p, o, b):
+                new_p, new_o, _, metrics = step_fn(p, o, None, b)
+                return new_p, new_o, metrics
+
+            jitted = jax.jit(
+                train_fn,
+                in_shardings=ns((pspec, ospec, bspec)),
+                out_shardings=ns((pspec, ospec)) + (None,),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_sds, opt_sds, specs)
+            meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+            meta["active_params"] = active_param_count(params_sds, cfg)
+            meta["model_flops"] = roofline.model_flops(
+                meta["active_params"], meta["tokens_per_step"], "train")
+        else:
+            policy = get_policy(policy_name or cfg.default_policy)
+            qparams_sds = jax.eval_shape(
+                partial(quantize_params, policy=policy), params_sds)
+            # Serving: TP-only weights (no FSDP) — GGML-style, no
+            # per-layer weight gathers; quantized bytes stay quantized.
+            pspec = sharding.param_specs(qparams_sds, mesh, fsdp=False)
+            meta["policy"] = policy.name
+            meta["active_params"] = active_param_count(qparams_sds, cfg)
+            if shape.kind == "prefill":
+                bspec = sharding.batch_specs(specs, mesh)
+                prefill = make_prefill(cfg)
+                jitted = jax.jit(prefill,
+                                 in_shardings=ns((pspec, bspec)),
+                                 out_shardings=None)
+                lowered = jitted.lower(qparams_sds, specs)
+                meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+                meta["model_flops"] = roofline.model_flops(
+                    meta["active_params"], meta["tokens_per_step"],
+                    "inference")
+            else:  # decode
+                enc_sds = None
+                if cfg.family == "audio":
+                    enc_sds = jax.ShapeDtypeStruct(
+                        (shape.global_batch, cfg.encoder_seq, cfg.d_model),
+                        jnp.bfloat16)
+                cache_sds = jax.eval_shape(
+                    partial(init_cache, cfg=cfg, batch=shape.global_batch,
+                            max_len=shape.seq_len,
+                            quantized_kv=quantized_kv),
+                    params_sds if policy.name == "none" else qparams_sds,
+                    enc_embeds=enc_sds)
+                meta["quantized_kv"] = quantized_kv
+                cspec = sharding.cache_specs(cache_sds, mesh)
+                tspec = sharding.batch_specs(
+                    {"token": specs["token"]}, mesh)["token"]
+                decode = make_decode(cfg)
+                jitted = jax.jit(
+                    decode,
+                    in_shardings=ns((pspec, tspec, P(), cspec)),
+                    out_shardings=(ns(tspec), None, ns(cspec)),
+                    donate_argnums=(3,) if donate else ())
+                pos = jax.ShapeDtypeStruct((), jnp.int32)
+                lowered = jitted.lower(qparams_sds, specs["token"], pos,
+                                       cache_sds)
+                meta["tokens_per_step"] = shape.global_batch
+                meta["model_flops"] = roofline.model_flops(
+                    meta["active_params"], meta["tokens_per_step"],
+                    "inference")
+    return lowered, meta
+
+
+def _cost_triple(arch, shape_name, *, multi_pod, policy_name, train_cfg,
+                 cfg_override, quantized_kv=False):
+    """(flops, bytes, wire_bytes_per_chip, coll_ops) of one lowering."""
+    import dataclasses as dc
+    if train_cfg is not None:
+        train_cfg = dc.replace(train_cfg, scan_unroll=True)
+    lowered, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                            policy_name=policy_name, train_cfg=train_cfg,
+                            cfg_override=cfg_override,
+                            quantized_kv=quantized_kv, donate=True)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    from repro.profiling import hlo as hlo_mod
+    coll = hlo_mod.collective_bytes(compiled.as_text(),
+                                    512 if multi_pod else 256)
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll.wire_bytes_per_chip, coll.op_count)
+
+
+def probe_costs(arch: str, shape_name: str, *, multi_pod: bool,
+                policy_name, train_cfg, quantized_kv=False) -> dict:
+    """Loop-corrected cost via 1-period/2-period unrolled probes."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    plen = len(tuple(cfg.block_pattern))
+    n_periods = cfg.num_layers // plen
+    tcfg = train_cfg or (dryrun_train_cfg(cfg, shape)
+                         if shape.kind == "train" else None)
+    c1 = _cost_triple(arch, shape_name, multi_pod=multi_pod,
+                      policy_name=policy_name, train_cfg=tcfg,
+                      cfg_override=probe_cfg(cfg, 1, shape),
+                      quantized_kv=quantized_kv)
+    c2 = _cost_triple(arch, shape_name, multi_pod=multi_pod,
+                      policy_name=policy_name, train_cfg=tcfg,
+                      cfg_override=probe_cfg(cfg, 2, shape),
+                      quantized_kv=quantized_kv)
+    body = [b - a for a, b in zip(c1, c2)]
+    total = [a - b + n_periods * b for a, b in zip(c1, body)]
+    return {"flops": max(total[0], 0.0), "bytes accessed": max(total[1], 0.0),
+            "wire_bytes": max(total[2], 0.0),
+            "coll_ops": int(max(total[3], 0)),
+            "probe_1": c1, "probe_2": c2, "n_periods": n_periods}
+
+
+def compile_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 policy_name: str | None = None,
+                 train_cfg: TrainConfig | None = None,
+                 probe: bool | None = None,
+                 quantized_kv: bool = False,
+                 keep_hlo: bool = False) -> dict:
+    if probe is None:
+        probe = not multi_pod
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                               policy_name=policy_name, train_cfg=train_cfg,
+                               quantized_kv=quantized_kv)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = dict(compiled.cost_analysis())
+    hlo_text = compiled.as_text()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                        0),
+    }
+    raw = {"flops_raw": float(cost.get("flops", 0.0)),
+           "bytes_raw": float(cost.get("bytes accessed", 0.0))}
+    probe_info = None
+    if probe:
+        probe_info = probe_costs(arch, shape_name, multi_pod=multi_pod,
+                                 policy_name=policy_name,
+                                 train_cfg=train_cfg,
+                                 quantized_kv=quantized_kv)
+        cost["flops"] = probe_info["flops"]
+        cost["bytes accessed"] = probe_info["bytes accessed"]
+    r = roofline.analyze(
+        arch=arch, shape=shape_name, mesh_name=meta["mesh"],
+        chips=meta["chips"], cost=cost, hlo_text=hlo_text,
+        model_flops_total=meta["model_flops"], memory_analysis=mem_d)
+    if probe_info is not None:
+        # Collective bytes from probes too (loops hide collectives).
+        r.wire_bytes_per_chip = probe_info["wire_bytes"]
+        r.collective_ops = probe_info["coll_ops"]
+        r.collective_s = probe_info["wire_bytes"] / roofline.LINK_BW
+    out = {**meta, **r.to_dict(), **raw,
+           "cost_source": "probe" if probe else "raw(loops-once)",
+           "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1)}
+    if probe_info is not None:
+        out["probe"] = {k: probe_info[k] for k in
+                        ("probe_1", "probe_2", "n_periods")}
+    if keep_hlo:
+        out["hlo_text"] = hlo_text
+    print(f"[dryrun] {arch} x {shape_name} ({meta['mesh']}): "
+          f"bound={r.bound} compute={r.compute_s:.4e}s "
+          f"memory={r.memory_s:.4e}s collective={r.collective_s:.4e}s "
+          f"frac={r.roofline_fraction:.3f} "
+          f"mem/device={mem_d['argument_bytes']/1e9:.2f}+"
+          f"{mem_d['temp_bytes']/1e9:.2f}GB "
+          f"(lower {out['lower_s']}s, compile {out['compile_s']}s)",
+          flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quantized-kv", action="store_true",
+                    help="Q8_0 KV cache for decode cells (perf iteration A1)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                if cell_supported(get_config(a), SHAPES[s])[0]:
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shp in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shp}_{'2x16x16' if mp else '16x16'}"
+            try:
+                res = compile_cell(arch, shp, multi_pod=mp,
+                                   quantized_kv=args.quantized_kv)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"FAILED {len(failures)} cells:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(cells) * len(meshes)} compilations succeeded")
+
+
+if __name__ == "__main__":
+    main()

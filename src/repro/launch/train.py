@@ -1,0 +1,101 @@
+"""Production training launcher.
+
+On real hardware this runs under multi-controller JAX (one process per
+host; jax.distributed.initialize from the cluster env).  On this CPU
+container it runs reduced configs single-process — same code path, same
+checkpoint/restart machinery (see examples/train_lm.py for the
+CPU-scale driver with the full feature set).
+
+  python -m repro.launch.train --arch granite-8b [--reduced] \
+      [--steps N] [--resume auto] [--mesh 16x16|2x16x16|auto]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import TokenPipeline
+from repro.distributed import ctx as axctx
+from repro.distributed import sharding
+from repro.distributed.fault_tolerance import (StepTimer, Watchdog,
+                                               elastic_mesh)
+from repro.models.transformer import init_lm
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config (default on cpu backend)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--quantized-moments", action="store_true")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = reduce_cfg(cfg)
+    tcfg = TrainConfig(microbatch=args.microbatch,
+                       quantized_moments=args.quantized_moments,
+                       grad_compression=args.grad_compression,
+                       remat="block", ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every, steps=args.steps)
+
+    mesh = elastic_mesh(model_parallel=1 if jax.device_count() == 1
+                        else 16, pod_size=256)
+    print(f"mesh: {dict(mesh.shape)} on {jax.device_count()} devices")
+
+    with mesh, axctx.axis_env(mesh):
+        params, opt, comp = init_train_state(
+            jax.random.PRNGKey(tcfg.seed), cfg, tcfg, init_lm)
+        pspec = sharding.param_specs(params, mesh)
+        step_raw = make_train_step(cfg, tcfg)
+        step = jax.jit(step_raw, donate_argnums=(0, 1),
+                       in_shardings=(sharding.to_named(pspec, mesh),
+                                     None, None, None))
+
+        start = 0
+        if args.resume == "auto":
+            last = ckpt.latest_step(tcfg.ckpt_dir)
+            if last is not None:
+                restored, man = ckpt.restore(
+                    tcfg.ckpt_dir, last, {"params": params, "opt": opt})
+                params, opt, start = (restored["params"], restored["opt"],
+                                      man["step"])
+                print(f"resumed at step {start}")
+
+        pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                             batch=args.batch, seed=tcfg.seed,
+                             start_step=start)
+        watchdog = Watchdog()
+        timer = StepTimer(watchdog)
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+            with timer:
+                params, opt, comp, m = step(params, opt, comp, batch)
+            if i % 10 == 0:
+                print(f"step {i} loss {float(m['loss']):.4f}")
+            if (i + 1) % tcfg.ckpt_every == 0 or i == args.steps - 1:
+                ckpt.save(tcfg.ckpt_dir, i + 1,
+                          {"params": params, "opt": opt},
+                          meta={"seed": tcfg.seed, **pipe.state()})
+                ckpt.gc_old(tcfg.ckpt_dir)
+        pipe.close()
+        if watchdog.suspects:
+            print(f"straggler-suspect steps: {watchdog.suspects}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""GQA attention with KV caching (full + sliding-window ring buffer).
+
+Train/prefill use the flash kernel (TPU) or the XLA reference path
+(CPU/dry-run).  Decode attends a single query against the cache with an
+explicit validity mask; the cache for sliding-window models is a ring
+buffer of ``window`` slots, which is what makes `long_500k` feasible for
+h2o-danube (bounded KV).  Optional Q8_0-quantized KV storage halves the
+decode memory term (beyond-paper extension of the paper's technique).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import apply_linear, init_linear
+from repro.distributed import ctx
+from repro.kernels import ops
+from repro.models import layers
+
+
+class KVCache(NamedTuple):
+    """Fixed-capacity cache. k/v: (B, Hkv, C, hd) (int8 when quantized);
+    scales only used for the quantized variant: (B, Hkv, C, hd//32)."""
+    k: jax.Array
+    v: jax.Array
+    k_scale: jax.Array | None
+    v_scale: jax.Array | None
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(batch: int, cfg: ModelConfig, max_len: int,
+                  quantized: bool = False) -> KVCache:
+    cap = max_len
+    if cfg.sliding_window is not None:
+        cap = min(cap, cfg.sliding_window)
+    shape = (batch, cfg.num_kv_heads, cap, cfg.hd)
+    if quantized:
+        sshape = (batch, cfg.num_kv_heads, cap, cfg.hd // 32)
+        return KVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                       jnp.zeros(sshape, jnp.float16),
+                       jnp.zeros(sshape, jnp.float16))
+    return KVCache(jnp.zeros(shape, jnp.bfloat16),
+                   jnp.zeros(shape, jnp.bfloat16), None, None)
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-32-block int8 quantization along head_dim."""
+    from repro.core import quant
+    t = quant.quantize_q8_0(x)
+    return t.qs, t.d
+
+
+def _dequantize_kv(qs: jax.Array, d: jax.Array) -> jax.Array:
+    from repro.core import quant
+    from repro.core.quant import Q8_0Tensor
+    return quant.dequantize_q8_0(Q8_0Tensor(qs, d), jnp.bfloat16)
+
+
+# ------------------------------------------------------------- params
+
+def init_attention(key: jax.Array, cfg: ModelConfig, *,
+                   cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    hd, hq, hkv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, hq * hd, role="attn_qkv",
+                          bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], cfg.d_model, hkv * hd, role="attn_qkv",
+                          bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], cfg.d_model, hkv * hd, role="attn_qkv",
+                          bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], hq * hd, cfg.d_model, role="attn_out"),
+    }
+    del cross  # same projection structure; queries/keys differ at apply
+    return p
+
+
+def _split_heads(x: jax.Array, nheads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, nheads, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _positions_mrope(positions: jax.Array) -> jax.Array:
+    """(B, S) -> (B, 3, S) text-position triplet (stub frontend)."""
+    return jnp.broadcast_to(positions[:, None, :],
+                            (positions.shape[0], 3, positions.shape[1]))
+
+
+def _rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.mrope:
+        return layers.apply_mrope(x, _positions_mrope(positions),
+                                  tuple(cfg.mrope_sections), cfg.rope_theta)
+    return layers.apply_rope(x, positions, cfg.rope_theta)
+
+
+# -------------------------------------------------------- full-seq fwd
+
+def attention_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, *, causal: bool = True,
+                  kv_x: jax.Array | None = None,
+                  rope: bool = True) -> jax.Array:
+    """Training / prefill attention over a full sequence.
+
+    ``kv_x`` switches to cross-attention (keys/values from encoder
+    states, no RoPE on the cross path, non-causal).
+    """
+    src = kv_x if kv_x is not None else x
+    q = ctx.heads_q(_split_heads(apply_linear(p["wq"], x), cfg.num_heads))
+    k = ctx.heads(_split_heads(apply_linear(p["wk"], src),
+                               cfg.num_kv_heads))
+    v = ctx.heads(_split_heads(apply_linear(p["wv"], src),
+                               cfg.num_kv_heads))
+    if rope and kv_x is None:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+    window = cfg.sliding_window if kv_x is None else None
+    # Cost probes (scan_unroll) force the unchunked path so attention
+    # FLOPs are fully visible to cost_analysis.
+    q_chunk = 0 if cfg.scan_unroll else None
+    out = ops.attention(q, k, v, causal=causal and kv_x is None,
+                        window=window, q_chunk=q_chunk)
+    return ctx.act(apply_linear(p["wo"], _merge_heads(ctx.heads_q(out))))
+
+
+# ------------------------------------------------------------- decode
+
+def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                     pos: jax.Array, cache: KVCache,
+                     *, rope: bool = True) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (tokens so far).
+
+    Returns (out (B, 1, d), updated cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
+    k = _split_heads(apply_linear(p["wk"], x), cfg.num_kv_heads)
+    v = _split_heads(apply_linear(p["wv"], x), cfg.num_kv_heads)
+    if rope:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+
+    cap = cache.capacity
+    if cfg.sliding_window is not None:
+        slot = pos % cap                      # ring buffer
+    else:
+        slot = jnp.minimum(pos, cap - 1)
+    quantized = cache.k_scale is not None
+    cc = ctx.kv_cache
+    if quantized:
+        kq, kd = _quantize_kv(k)
+        vq, vd = _quantize_kv(v)
+        new = KVCache(
+            cc(jax.lax.dynamic_update_slice(cache.k, kq, (0, 0, slot, 0))),
+            cc(jax.lax.dynamic_update_slice(cache.v, vq, (0, 0, slot, 0))),
+            cc(jax.lax.dynamic_update_slice(cache.k_scale, kd,
+                                            (0, 0, slot, 0))),
+            cc(jax.lax.dynamic_update_slice(cache.v_scale, vd,
+                                            (0, 0, slot, 0))))
+        keys = cc(_dequantize_kv(new.k, new.k_scale))
+        vals = cc(_dequantize_kv(new.v, new.v_scale))
+    else:
+        new = KVCache(
+            cc(jax.lax.dynamic_update_slice(cache.k, k, (0, 0, slot, 0))),
+            cc(jax.lax.dynamic_update_slice(cache.v, v, (0, 0, slot, 0))),
+            None, None)
+        keys, vals = new.k, new.v
+
+    # GQA: fold query heads into groups over kv heads.  bf16 operands
+    # with f32 accumulation (no materialized f32 cache copy).
+    g = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, cfg.num_kv_heads, g, cfg.hd)
+    logits = ctx.decode_logits(
+        jnp.einsum("bhgd,bhcd->bhgc", qg.astype(keys.dtype), keys,
+                   preferred_element_type=jnp.float32)) * (cfg.hd ** -0.5)
+    # Validity: slot c holds a token iff c < pos+1 (full) or within the
+    # last `window` tokens (ring buffer: all filled slots are valid).
+    idx = jnp.arange(cap)
+    valid = idx <= jnp.minimum(pos, cap - 1) \
+        if cfg.sliding_window is None else idx < jnp.minimum(pos + 1, cap)
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgc,bhcd->bhgd", probs.astype(vals.dtype), vals,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.hd).astype(x.dtype)
+    return apply_linear(p["wo"], out), new
+
+
+def cross_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                           enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Decode-time cross attention against precomputed encoder KV.
+
+    enc_k/enc_v: (B, Hkv, S_enc, hd)."""
+    b = x.shape[0]
+    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
+    g = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, cfg.num_kv_heads, g, cfg.hd)
+    logits = jnp.einsum("bhgd,bhcd->bhgc", qg.astype(enc_k.dtype), enc_k,
+                        preferred_element_type=jnp.float32) \
+        * (cfg.hd ** -0.5)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgc,bhcd->bhgd", probs.astype(enc_v.dtype), enc_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.num_heads * cfg.hd).astype(x.dtype)
+    return apply_linear(p["wo"], out)

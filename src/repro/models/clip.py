@@ -1,0 +1,37 @@
+"""CLIP-style text encoder (SD v1.5 conditioning), reusing the LM stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def clip_config(*, d_model: int = 768, layers: int = 12, heads: int = 12,
+                vocab: int = 49408, max_len: int = 77) -> ModelConfig:
+    return ModelConfig(
+        name="clip_text", family="dense", num_layers=layers,
+        d_model=d_model, num_heads=heads, num_kv_heads=heads,
+        d_ff=4 * d_model, vocab_size=vocab, norm="layernorm",
+        activation="gelu", pos_embed="sinusoidal")
+
+
+TINY_CLIP = clip_config(d_model=64, layers=2, heads=2, vocab=512)
+
+
+def init_clip(key: jax.Array, cfg: ModelConfig) -> dict:
+    return T.init_lm(key, cfg)
+
+
+def clip_encode(params: dict, cfg: ModelConfig,
+                tokens: jax.Array) -> jax.Array:
+    """tokens: (B, 77) -> hidden states (B, 77, d) (pre-unembed)."""
+    b, s = tokens.shape
+    x = L.apply_embedding(params["embed"], tokens)
+    x = x + T._sinusoidal(s, cfg.d_model)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    x, _ = T._stack_fwd(params["layers"], cfg, x, positions, causal=True)
+    return T._apply_norm(cfg, params["final_norm"], x)

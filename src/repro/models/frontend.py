@@ -1,0 +1,29 @@
+"""Modality frontend STUBS (per assignment).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer backbone
+only; the conv/patch frontends are stubs whose *outputs* (frame / patch
+embeddings) are supplied by ``input_specs()``.  These helpers define the
+stand-in shapes and a deterministic synthetic generator for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+VLM_PATCHES = 256  # stub: one low-res image worth of patch embeddings
+
+
+def audio_frontend_shape(cfg: ModelConfig, batch: int) -> tuple:
+    """Whisper conv frontend output: (B, n_frames, d_model)."""
+    return (batch, cfg.encoder_seq, cfg.d_model)
+
+
+def vision_frontend_shape(cfg: ModelConfig, batch: int) -> tuple:
+    """Qwen2-VL patch-merger output: (B, n_patches, d_model)."""
+    return (batch, VLM_PATCHES, cfg.d_model)
+
+
+def synthetic_frontend(key: jax.Array, shape: tuple) -> jax.Array:
+    return jax.random.normal(key, shape, jnp.bfloat16) * 0.02

@@ -1,0 +1,141 @@
+"""Shared neural-net layers: norms, RoPE / M-RoPE, MLPs, embeddings.
+
+Everything is pure functions over pytree params — no framework
+dependency.  Weight matmuls go through :mod:`repro.core.qlinear` so the
+offload policy can quantize them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.qlinear import Linear, apply_linear, init_linear
+from repro.core.quant import Q3KTensor, Q4_0Tensor, Q8_0Tensor
+from repro.distributed import ctx
+
+
+# ------------------------------------------------------------- norms
+
+def init_rmsnorm(dim: int) -> dict:
+    return {"g": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["g"]).astype(x.dtype)
+
+
+def init_layernorm(dim: int) -> dict:
+    return {"g": jnp.ones((dim,), jnp.float32),
+            "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["g"]
+            + p["b"]).astype(x.dtype)
+
+
+# -------------------------------------------------------------- RoPE
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, H, S, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang), jnp.sin(ang)                     # (B,1,S,D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array,
+                sections: tuple[int, ...],
+                theta: float = 10_000.0) -> jax.Array:
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  positions: (B, 3, S).  With the stub frontend all three
+    streams carry text positions, but the section mechanics are real.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.array(sections), total_repeat_length=d // 2)
+    # Select per-frequency-slot position stream: (B, D/2, S).
+    pos_slot = positions.astype(jnp.float32)[:, sec_id, :]
+    ang = jnp.einsum("bds,d->bsd", pos_slot, freqs)           # (B,S,D/2)
+    cos = jnp.cos(ang)[:, None]                               # (B,1,S,D/2)
+    sin = jnp.sin(ang)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- MLP
+
+def init_mlp(key: jax.Array, d: int, ff: int, activation: str,
+             role_prefix: str = "mlp") -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], d, ff, role=f"{role_prefix}_up"),
+         "down": init_linear(ks[1], ff, d, role=f"{role_prefix}_down")}
+    if activation == "silu":  # swiglu
+        p["gate"] = init_linear(ks[2], d, ff, role=f"{role_prefix}_gate")
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, activation: str) -> jax.Array:
+    up = ctx.ffn(apply_linear(p["up"], x))
+    if activation == "silu":
+        h = jax.nn.silu(ctx.ffn(apply_linear(p["gate"], x))) * up
+    elif activation == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(activation)
+    return ctx.act(apply_linear(p["down"], h))
+
+
+# -------------------------------------------------------- embeddings
+
+def init_embedding(key: jax.Array, vocab: int, d: int,
+                   dtype=jnp.bfloat16) -> Linear:
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return Linear(w=w, b=None, role="embed")
+
+
+def apply_embedding(emb: Linear, tokens: jax.Array) -> jax.Array:
+    """Row lookup that understands quantized storage: only the gathered
+    rows are dequantized (quantized bytes stay quantized in HBM)."""
+    w = emb.w
+    if isinstance(w, Q8_0Tensor):
+        qs = jnp.take(w.qs, tokens, axis=0)         # (..., d) int8
+        d = jnp.take(w.d, tokens, axis=0)           # (..., d/32) f16
+        return quant.dequantize_q8_0(Q8_0Tensor(qs, d), jnp.bfloat16)
+    if isinstance(w, Q4_0Tensor):
+        sub = Q4_0Tensor(jnp.take(w.qs, tokens, axis=0),
+                         jnp.take(w.d, tokens, axis=0))
+        return quant.dequantize_q4_0(sub, jnp.bfloat16)
+    if isinstance(w, Q3KTensor):
+        sub = Q3KTensor(jnp.take(w.ql, tokens, axis=0),
+                        jnp.take(w.qh, tokens, axis=0),
+                        jnp.take(w.scales, tokens, axis=0),
+                        jnp.take(w.d, tokens, axis=0),
+                        scale_bits=w.scale_bits)
+        return quant.dequantize_q3_k(sub, jnp.bfloat16)
+    return jnp.take(w, tokens, axis=0)
+
+
+def apply_unembed(head: Linear, x: jax.Array) -> jax.Array:
+    """Logits = x @ W_vocab^T (shares apply_linear, so quantizable)."""
+    return ctx.vocab(apply_linear(head, x).astype(jnp.float32))

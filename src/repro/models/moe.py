@@ -1,0 +1,217 @@
+"""Mixture-of-Experts FFN: group-local top-k routing + EP sharding.
+
+Dispatch is **group-local** (groups = batch rows, which are aligned
+with the `data` mesh axis): each group sorts its own tokens by expert
+assignment and builds per-group capacity buffers ``(G, E, C, d)``.
+Under GSPMD this keeps all routing ops (argsort / gather / scatter)
+shard-local; the only cross-device traffic is the expert crossing
+(combine gather), which additionally moves *quantized* bytes.  Net
+measured effect vs the naive global-routing value-scatter baseline:
+32x lower dominant-term time on the 16x16 mesh (EXPERIMENTS.md §Perf,
+moonshot train cell, iterations B1-B4b).
+
+Shared experts (deepseek-moe / moonshot) run densely on every token.
+Expert weights are role-tagged (`expert_up/gate/down`) so the offload
+policy quantizes them — per-expert quantized buffers are the largest
+weight-byte win of the paper's technique on MoE models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.qlinear import Linear, apply_linear
+from repro.core.quant import Q3KTensor, Q8_0Tensor
+from repro.distributed import ctx
+from repro.kernels import ops
+
+
+def _q8_across_ep(x: jax.Array) -> jax.Array:
+    """Quantize a (G, E, C, d) buffer to Q8 blocks *before* the EP cut
+    and dequantize after — the expert all-to-all then moves int8 + fp16
+    scales (~8.5 b/elem) instead of bf16 (the paper's
+    stream-quantized-bytes insight applied to the interconnect).
+    Active only under a distributed axis env; unit tests see exact
+    bf16 values."""
+    env = ctx.current()
+    if env is None or env.moe_mode != "ep" or x.shape[-1] % 32:
+        return ctx.expert_buf(x)
+    t = quant.quantize_q8_0(x)
+    qs = ctx.expert_buf(t.qs)
+    d = ctx.expert_buf(t.d)
+    return quant.dequantize_q8_0(quant.Q8_0Tensor(qs, d), jnp.bfloat16
+                                 ).astype(x.dtype)
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    moe = cfg.moe
+    d, ff, e = cfg.d_model, moe.expert_ff, moe.num_experts
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+
+    def ew(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * std
+                ).astype(jnp.bfloat16)
+
+    p = {
+        "router": Linear(ew(ks[0], (e, d)).astype(jnp.float32),
+                         role="router"),
+        # Stacked expert weights: (E, ff, d) / (E, d, ff) output-major.
+        "w_up": Linear(ew(ks[1], (e, ff, d)), role="expert_up"),
+        "w_gate": Linear(ew(ks[2], (e, ff, d)), role="expert_gate"),
+        "w_down": Linear(ew(ks[3], (e, d, ff)), role="expert_down"),
+    }
+    if moe.num_shared:
+        sff = moe.expert_ff * moe.num_shared
+        from repro.models.layers import init_mlp
+        # Shared experts are dense MLPs -> standard mlp sharding rules.
+        p["shared"] = init_mlp(ks[4], d, sff, "silu", role_prefix="mlp")
+    return p
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _make_quantized_combine(n: int, dtype_name: str):
+    """Gather expert outputs through a Q8 wire format (fwd compressed);
+    backward is the exact gather-transpose (straight-through) so expert
+    gradients are NOT routed through round() — without this, the
+    quantizer's zero-derivative round would starve expert training.
+    Shape/dtype are closed over (custom_vjp residuals must be arrays)."""
+    dtype = jnp.dtype(dtype_name)
+
+    @jax.custom_vjp
+    def qc(out_flat: jax.Array, dst: jax.Array) -> jax.Array:
+        g, _, d = out_flat.shape
+        oq = quant.quantize_q8_0(out_flat)
+        qs = jnp.concatenate([oq.qs, jnp.zeros((g, 1, d), jnp.int8)], 1)
+        dsc = jnp.concatenate(
+            [oq.d, jnp.zeros((g, 1, d // 32), jnp.float16)], 1)
+        qs_g = ctx.constrain(
+            jnp.take_along_axis(qs, dst[..., None], axis=1), {0: "dp"})
+        dsc_g = ctx.constrain(
+            jnp.take_along_axis(dsc, dst[..., None], axis=1), {0: "dp"})
+        return quant.dequantize_q8_0(
+            quant.Q8_0Tensor(qs_g, dsc_g), dtype)
+
+    def fwd(out_flat, dst):
+        return qc(out_flat, dst), dst
+
+    def bwd(dst, gy):
+        # The gather-transpose is a scatter-add, which SPMD replicates
+        # (the B2 pathology).  But dst is injective on kept entries
+        # (slot = expert*cap + position), so the transpose is a
+        # permutation: scatter only int32 inverse indices, then gather
+        # the cotangents (same trick as the forward dispatch).
+        g, sk, d = gy.shape
+        gidx = jnp.arange(g)[:, None]
+        inv = jnp.full((g, n + 1), sk, jnp.int32)
+        inv = inv.at[gidx, dst].set(
+            jnp.broadcast_to(jnp.arange(sk)[None], (g, sk)))[:, :n]
+        gypad = jnp.concatenate(
+            [gy, jnp.zeros((g, 1, d), gy.dtype)], axis=1)
+        out = jnp.take_along_axis(gypad, inv[..., None], axis=1)
+        return ctx.constrain(out.astype(dtype),
+                             {0: "dp", 1: None}), None
+
+    qc.defvjp(fwd, bwd)
+    return qc
+
+
+def _quantized_combine(out_flat: jax.Array, dst: jax.Array) -> jax.Array:
+    fn = _make_quantized_combine(out_flat.shape[1],
+                                 jnp.dtype(out_flat.dtype).name)
+    return fn(out_flat, dst)
+
+
+def _expert_matmul(w: Linear, x: jax.Array) -> jax.Array:
+    """x: (G, E, C, K); w.w: (E, N, K) (possibly quantized) -> (G,E,C,N)."""
+    g, e, c, k = x.shape
+    ww = w.w
+    if isinstance(ww, (Q8_0Tensor, Q3KTensor)):
+        # Batched quantized matmul: vmap the fused kernel over experts.
+        xe = x.transpose(1, 0, 2, 3).reshape(e, g * c, k)
+        y = jax.vmap(lambda xg, we: ops.quantized_matmul(xg, we))(xe, ww)
+        return y.reshape(e, g, c, -1).transpose(1, 0, 2, 3).astype(x.dtype)
+    return jnp.einsum("geck,enk->gecn", x.astype(ww.dtype), ww,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  Groups = batch rows."""
+    moe = cfg.moe
+    g, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+
+    logits = apply_linear(p["router"], x.astype(jnp.float32))   # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)                  # (G,S,k)
+    gate = gate / jnp.clip(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch-style), over all tokens.
+    me = jnp.mean(probs.reshape(-1, e), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx.reshape(-1, k), e).sum(1),
+                  axis=0) / k
+    aux = e * jnp.sum(me * ce) * moe.router_aux_coef
+
+    cap = max(int(moe.capacity_factor * s * k / e), 1)
+
+    # ---- group-local sorted dispatch (all ops shard-local in G) ----
+    flat_e = expert_idx.reshape(g, s * k)
+    flat_gate = gate.reshape(g, s * k)
+    order = jnp.argsort(flat_e, axis=-1)                        # (G,S*k)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sgate = jnp.take_along_axis(flat_gate, order, axis=-1)
+    stok = order // k                                           # token idx
+    # Position within each expert's (sorted) run.
+    start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos_in_e = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        start, se, axis=-1)
+    keep = pos_in_e < cap
+    # Dropped entries go to a trash slot (index e*cap) so they can never
+    # clobber a legitimate occupant of capacity slot 0.
+    dst = jnp.where(keep, se * cap + pos_in_e, e * cap)        # (G,S*k)
+
+    # Index-scatter + gather formulation: the scatter moves only int32
+    # slot->token indices (25 MB), never the d-dim vectors — the big
+    # (G,E,C,d) buffer is produced by a gather, which SPMD keeps local
+    # in G (a value-scatter here was replicated across the mesh: 51 GB
+    # all-gathers per layer; see EXPERIMENTS.md §Perf iteration B2).
+    gidx = jnp.arange(g)[:, None]
+    islot = jnp.full((g, e * cap + 1), s, jnp.int32)  # sentinel = s
+    islot = islot.at[gidx, dst].set(stok)[:, : e * cap]
+    xpad = jnp.concatenate([x, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    buf = jnp.take_along_axis(xpad, islot[..., None], axis=1)
+    buf = ctx.expert_buf(buf.reshape(g, e, cap, d))             # EP/DP cut
+
+    up = _expert_matmul(p["w_up"], buf)
+    gt = _expert_matmul(p["w_gate"], buf)
+    h = ctx.expert_buf(jax.nn.silu(gt) * up)
+    out_e = ctx.expert_buf(_expert_matmul(p["w_down"], h))      # (G,E,C,d)
+
+    # ---- combine (gather; dropped entries hit the zero pad) ----
+    # The combine gather is the EP wire crossing (expert-layout ->
+    # token-layout).  When a distributed env is active we gather the
+    # *quantized* expert outputs (int8 + fp16 block scales) and
+    # dequantize on the token side, so the all-to-all moves ~8.5
+    # bits/elem instead of bf16 — the paper's stream-quantized-bytes
+    # insight applied to the interconnect.
+    env = ctx.current()
+    if env is not None and env.moe_mode == "ep" and d % 32 == 0:
+        contrib = _quantized_combine(out_e.reshape(g, e * cap, d), dst)
+    else:
+        out_flat = jnp.concatenate(
+            [out_e.reshape(g, e * cap, d),
+             jnp.zeros((g, 1, d), x.dtype)], axis=1)
+        contrib = jnp.take_along_axis(out_flat, dst[..., None], axis=1)
+    contrib = contrib * (sgate * keep)[..., None].astype(x.dtype)
+    y = jnp.zeros((g, s, d), x.dtype).at[gidx, stok].add(contrib)
+
+    if "shared" in p:
+        from repro.models.layers import apply_mlp
+        y = y + apply_mlp(p["shared"], x, "silu")
+    return y, aux

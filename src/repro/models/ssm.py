@@ -1,0 +1,314 @@
+"""State-space / recurrent blocks: Mamba (jamba) and xLSTM (mLSTM+sLSTM).
+
+Training uses parallel forms (associative scan for Mamba's linear
+recurrence; the decay-matrix parallel form for mLSTM, as in the xLSTM
+paper); decode uses O(1) recurrent state updates — which is what makes
+`long_500k` a constant-memory workload for these families.
+
+Projections are role-tagged (`ssm_in/ssm_out/ssm_x`) for the offload
+policy; the recurrences themselves stay bf16/f32 (the paper's
+non-offloaded F16/F32 host share).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import apply_linear, init_linear
+from repro.distributed import ctx
+from repro.models.layers import init_rmsnorm, rmsnorm
+
+
+# ================================================================ Mamba
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_inner, conv_k - 1) rolling conv window
+    ssm: jax.Array   # (B, d_inner, d_state) f32
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.ssm_expand * cfg.d_model, cfg.ssm_state
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> dict:
+    d_in, d_state = mamba_dims(cfg)
+    dt_rank = max(cfg.d_model // 16, 1)
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": init_linear(ks[0], cfg.d_model, 2 * d_in, role="ssm_in"),
+        "conv_w": (jax.random.normal(ks[1], (d_in, cfg.ssm_conv),
+                                     jnp.float32) * 0.2).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((d_in,), jnp.bfloat16),
+        "x_proj": init_linear(ks[2], d_in, dt_rank + 2 * d_state,
+                              role="ssm_x"),
+        "dt_proj": init_linear(ks[3], dt_rank, d_in, role="ssm_x", bias=True),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": init_linear(ks[4], d_in, cfg.d_model, role="ssm_out"),
+    }
+    return p
+
+
+def _mamba_core(p: dict, cfg: ModelConfig, xz: jax.Array,
+                conv_state: jax.Array | None):
+    """Shared projection path. xz: (B, S, 2*d_in) -> (x_conv, z, dtBC)."""
+    d_in, d_state = mamba_dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)                       # (B,S,d_in)
+    # Depthwise causal conv along S.
+    kconv = cfg.ssm_conv
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (kconv - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.transpose(0, 2, 1), x], axis=1)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(kconv)[None, :]
+    windows = xp[:, idx, :]                                # (B,S,k,d_in)
+    xc = jnp.einsum("bskd,dk->bsd", windows.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)
+    new_conv = xp[:, -(kconv - 1):, :].transpose(0, 2, 1)   # (B,d_in,k-1)
+    return xc, z, new_conv
+
+
+def _selective_params(p: dict, cfg: ModelConfig, xc: jax.Array):
+    d_in, d_state = mamba_dims(cfg)
+    dt_rank = p["dt_proj"].w.shape[1]
+    dbc = apply_linear(p["x_proj"], xc)                    # (B,S,rank+2N)
+    dt, bc = jnp.split(dbc, [dt_rank], axis=-1)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                 # (B,S,N) each
+    dt = jax.nn.softplus(apply_linear(p["dt_proj"], dt).astype(jnp.float32))
+    a = -jnp.exp(p["A_log"])                               # (d_in, N)
+    da = jnp.exp(dt[..., None] * a)                        # (B,S,d_in,N)
+    dbx = (dt[..., None] * bmat[:, :, None, :].astype(jnp.float32)
+           * xc[..., None].astype(jnp.float32))            # (B,S,d_in,N)
+    return da, dbx, cmat.astype(jnp.float32)
+
+
+MAMBA_CHUNK = 256
+
+
+def mamba_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Chunked-parallel training form.
+
+    Within a chunk the linear recurrence h_t = da_t * h_{t-1} + dbx_t is
+    solved with an associative scan (parallel); chunks are chained with
+    a lax.scan carrying the boundary state — bounding the scan's
+    intermediate footprint to (B, chunk, d_in, N) instead of the full
+    sequence (the standard production trade-off for Mamba on long S).
+    """
+    b, s, _ = x.shape
+    d_in, d_state = mamba_dims(cfg)
+    xz = ctx.ffn(apply_linear(p["in_proj"], x))
+    xc, z, _ = _mamba_core(p, cfg, xz, None)
+    da, dbx, cmat = _selective_params(p, cfg, xc)
+    chunk = min(cfg.mamba_chunk or MAMBA_CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def reshape_c(t):  # (B,S,...) -> (nc, B, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+
+    def chunk_step(h0, inp):
+        da_c, dbx_c = inp                                  # (B,chunk,d,N)
+        cum_a, inner = jax.lax.associative_scan(
+            combine, (da_c, dbx_c), axis=1)
+        h = inner + cum_a * h0[:, None]
+        return h[:, -1], h
+
+    _, hs = jax.lax.scan(chunk_step,
+                         jnp.zeros((b, d_in, d_state), jnp.float32),
+                         (reshape_c(da), reshape_c(dbx)),
+                         unroll=True if cfg.scan_unroll else 1)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, d_in, d_state)
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat)               # (B,S,d_in)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return apply_linear(p["out_proj"], y)
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig) -> MambaState:
+    d_in, d_state = mamba_dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, d_in, cfg.ssm_conv - 1), jnp.bfloat16),
+        ssm=jnp.zeros((batch, d_in, d_state), jnp.float32))
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                 state: MambaState) -> tuple[jax.Array, MambaState]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    xz = apply_linear(p["in_proj"], x)
+    xc, z, new_conv = _mamba_core(p, cfg, xz, state.conv)
+    da, dbx, cmat = _selective_params(p, cfg, xc)          # S = 1
+    h = da[:, 0] * state.ssm + dbx[:, 0]                   # (B,d_in,N)
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None, :]
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return apply_linear(p["out_proj"], y), MambaState(new_conv, h)
+
+
+# ================================================================ xLSTM
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, hd, hd) matrix memory
+    n: jax.Array  # (B, H, hd) normalizer
+    m: jax.Array  # (B, H) log-stabilizer
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    """mLSTM block (xLSTM): qkv + exponential input/forget gates."""
+    h, hd, d = cfg.num_heads, cfg.hd, cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_linear(ks[0], d, h * hd, role="attn_qkv"),
+        "wk": init_linear(ks[1], d, h * hd, role="attn_qkv"),
+        "wv": init_linear(ks[2], d, h * hd, role="attn_qkv"),
+        "wi": init_linear(ks[3], d, h, role="ssm_x", bias=True),
+        "wf": init_linear(ks[4], d, h, role="ssm_x", bias=True),
+        "wo": init_linear(ks[5], h * hd, d, role="attn_out"),
+        "ogate": init_linear(jax.random.fold_in(key, 9), d, h * hd,
+                             role="ssm_in"),
+    }
+
+
+def _mlstm_qkv(p: dict, cfg: ModelConfig, x: jax.Array):
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+
+    def heads(t):
+        return t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    q = ctx.heads_q(heads(apply_linear(p["wq"], x)).astype(jnp.float32)
+                    * hd ** -0.5)
+    k = ctx.heads(heads(apply_linear(p["wk"], x)).astype(jnp.float32)
+                  * hd ** -0.5)
+    v = ctx.heads(heads(apply_linear(p["wv"], x)).astype(jnp.float32))
+    i = apply_linear(p["wi"], x).astype(jnp.float32).transpose(0, 2, 1)
+    f = apply_linear(p["wf"], x).astype(jnp.float32).transpose(0, 2, 1)
+    return q, k, v, i, f
+
+
+def mlstm_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Parallel form (xLSTM paper eq. D): decay matrix + stabilization."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+    q, k, v, i, f = _mlstm_qkv(p, cfg, x)
+    logf = jax.nn.log_sigmoid(f)                           # (B,H,S)
+    cum = jnp.cumsum(logf, axis=-1)
+    # D[t, s'] = exp(cum[t] - cum[s'] + i[s']) for s' <= t (log-domain).
+    dmat = cum[:, :, :, None] - cum[:, :, None, :] + i[:, :, None, :]
+    tmask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(tmask, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)              # stabilizer
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, -1, keepdims=True)),
+                       jnp.exp(-m))
+    out = jnp.einsum("bhts,bhsd->bhtd", scores / norm, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    o = jax.nn.sigmoid(apply_linear(p["ogate"], x).astype(jnp.float32))
+    return apply_linear(p["wo"], (out * o).astype(x.dtype))
+
+
+def init_mlstm_state(batch: int, cfg: ModelConfig) -> MLSTMState:
+    h, hd = cfg.num_heads, cfg.hd
+    return MLSTMState(c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, h, hd), jnp.float32),
+                      m=jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def mlstm_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                 state: MLSTMState) -> tuple[jax.Array, MLSTMState]:
+    """O(1) recurrent step. x: (B, 1, d)."""
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.hd
+    q, k, v, i, f = _mlstm_qkv(p, cfg, x)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]           # (B,H,hd)
+    i, f = i[:, :, 0], f[:, :, 0]                          # (B,H)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + state.m, i)
+    fg = jnp.exp(logf + state.m - m_new)[..., None]
+    ig = jnp.exp(i - m_new)[..., None]
+    c = fg[..., None] * state.c + (ig * v)[..., None] * k[:, :, None, :]
+    n = fg * state.n + ig * k
+    hnum = jnp.einsum("bhvd,bhd->bhv", c, q)
+    hden = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                       jnp.exp(-m_new))[..., None]
+    out = (hnum / hden).reshape(b, 1, h * hd)
+    o = jax.nn.sigmoid(apply_linear(p["ogate"], x).astype(jnp.float32))
+    y = apply_linear(p["wo"], (out * o).astype(x.dtype))
+    return y, MLSTMState(c, n, m_new)
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "wz": init_linear(ks[0], d, d, role="ssm_in", bias=True),
+        "wi": init_linear(ks[1], d, d, role="ssm_x", bias=True),
+        "wf": init_linear(ks[2], d, d, role="ssm_x", bias=True),
+        "wo_gate": init_linear(ks[3], d, d, role="ssm_x", bias=True),
+        "r": (jax.random.normal(ks[4], (4, d), jnp.float32) * 0.1),
+        "out": init_linear(jax.random.fold_in(key, 7), d, d,
+                           role="ssm_out"),
+    }
+
+
+def init_slstm_state(batch: int, cfg: ModelConfig) -> SLSTMState:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full_like(z, -1e30))
+
+
+def _slstm_step(p: dict, state: SLSTMState, gates):
+    zt, it, ft, ot = gates                                 # (B,D) each f32
+    rz, ri, rf, ro = p["r"]
+    zt = jnp.tanh(zt + rz * state.h)
+    it = it + ri * state.h
+    ft = ft + rf * state.h
+    ot = jax.nn.sigmoid(ot + ro * state.h)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + state.m, it)
+    fg = jnp.exp(logf + state.m - m_new)
+    ig = jnp.exp(it - m_new)
+    c = fg * state.c + ig * zt
+    n = fg * state.n + ig
+    h = ot * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h, m_new), h
+
+
+def slstm_fwd(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Recurrent scan over time (sLSTM is not parallelizable)."""
+    b, s, d = x.shape
+    xf = x
+    gates = tuple(apply_linear(p[w], xf).astype(jnp.float32)
+                  for w in ("wz", "wi", "wf", "wo_gate"))   # (B,S,D) x4
+    state0 = init_slstm_state(b, cfg)
+
+    def step(st, g):
+        return _slstm_step(p, st, g)
+
+    _, hs = jax.lax.scan(step, state0,
+                         tuple(g.transpose(1, 0, 2) for g in gates))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)               # (B,S,D)
+    return apply_linear(p["out"], y)
+
+
+def slstm_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                 state: SLSTMState) -> tuple[jax.Array, SLSTMState]:
+    gates = tuple(apply_linear(p[w], x)[:, 0].astype(jnp.float32)
+                  for w in ("wz", "wi", "wf", "wo_gate"))
+    state, h = _slstm_step(p, state, gates)
+    return apply_linear(p["out"], h[:, None].astype(x.dtype)), state

@@ -1,0 +1,279 @@
+"""SD v1.5 / SD-Turbo U-Net in JAX.
+
+Faithful to stable-diffusion.cpp's execution structure: **convolutions
+are im2col + mul_mat** (exactly how GGML lowers them), so every conv is
+a role-tagged linear and participates in the paper's dot-product
+accounting.  Attention blocks are spatial transformers with cross
+attention to the CLIP text states.
+
+Full-size config matches SD v1.5 (SD-Turbo shares the architecture);
+tests run a reduced config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import Linear, apply_linear, init_linear
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 4
+    out_channels: int = 4
+    model_channels: int = 320
+    channel_mult: tuple = (1, 2, 4, 4)
+    num_res_blocks: int = 2
+    attention_levels: tuple = (0, 1, 2)   # levels with spatial transformer
+    num_heads: int = 8
+    context_dim: int = 768                # CLIP hidden size
+    time_dim_mult: int = 4
+    groups: int = 32
+
+    @property
+    def time_dim(self) -> int:
+        return self.model_channels * self.time_dim_mult
+
+
+SD15_UNET = UNetConfig()
+TINY_UNET = UNetConfig(model_channels=32, channel_mult=(1, 2),
+                       num_res_blocks=1, attention_levels=(0, 1),
+                       num_heads=2, context_dim=64, groups=8)
+
+
+# ---------------------------------------------------------------- conv
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Conv:
+    """im2col conv: a Linear over patches. Kernel size is static aux."""
+    lin: Linear
+    k: int = 3
+
+    def tree_flatten(self):
+        return (self.lin,), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, children):
+        return cls(children[0], k)
+
+
+def init_conv(key, in_ch: int, out_ch: int, k: int = 3, *,
+              role: str = "conv") -> Conv:
+    fan_in = in_ch * k * k
+    w = (jax.random.normal(key, (out_ch, fan_in), jnp.float32)
+         * fan_in ** -0.5).astype(jnp.bfloat16)
+    return Conv(Linear(w, jnp.zeros((out_ch,), jnp.bfloat16), role), k)
+
+
+def apply_conv(p: Conv, x: jax.Array, stride: int = 1) -> jax.Array:
+    """x: (B, H, W, C) -> (B, H', W', out_ch) via im2col + mul_mat."""
+    k = p.k
+    pad = (k - 1) // 2
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k, k), (stride, stride), ((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # patches: (B, H', W', C*k*k) — the im2col buffer GGML builds.
+    return apply_linear(p.lin, patches)
+
+
+# ------------------------------------------------------------ groupnorm
+
+def init_groupnorm(ch: int) -> dict:
+    return {"g": jnp.ones((ch,), jnp.float32),
+            "b": jnp.zeros((ch,), jnp.float32)}
+
+
+def groupnorm(p: dict, x: jax.Array, groups: int, eps: float = 1e-5):
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    xn = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (xn * p["g"] + p["b"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------ res block
+
+def init_resblock(key, in_ch: int, out_ch: int, time_dim: int,
+                  groups: int) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": init_groupnorm(in_ch),
+        "conv1": init_conv(ks[0], in_ch, out_ch),
+        "time": init_linear(ks[1], time_dim, out_ch, role="time_embed",
+                            bias=True),
+        "norm2": init_groupnorm(out_ch),
+        "conv2": init_conv(ks[2], out_ch, out_ch),
+    }
+    if in_ch != out_ch:
+        p["skip"] = init_conv(ks[3], in_ch, out_ch, k=1)
+    return p
+
+
+def apply_resblock(p: dict, x: jax.Array, temb: jax.Array,
+                   groups: int) -> jax.Array:
+    h = apply_conv(p["conv1"], jax.nn.silu(groupnorm(p["norm1"], x, groups)))
+    h = h + apply_linear(p["time"], jax.nn.silu(temb))[:, None, None, :]
+    h = apply_conv(p["conv2"], jax.nn.silu(groupnorm(p["norm2"], h, groups)))
+    skip = apply_conv(p["skip"], x) if "skip" in p else x
+    return skip + h
+
+
+# ------------------------------------------- spatial transformer block
+
+def init_spatial_transformer(key, ch: int, cfg: UNetConfig) -> dict:
+    ks = jax.random.split(key, 12)
+    inner = ch
+    return {
+        "norm": init_groupnorm(ch),
+        "proj_in": init_conv(ks[0], ch, inner, k=1),
+        "ln1": L.init_layernorm(inner),
+        "q1": init_linear(ks[1], inner, inner, role="attn_qkv"),
+        "k1": init_linear(ks[2], inner, inner, role="attn_qkv"),
+        "v1": init_linear(ks[3], inner, inner, role="attn_qkv"),
+        "o1": init_linear(ks[4], inner, inner, role="attn_out"),
+        "ln2": L.init_layernorm(inner),
+        "q2": init_linear(ks[5], inner, inner, role="attn_qkv"),
+        "k2": init_linear(ks[6], cfg.context_dim, inner, role="attn_qkv"),
+        "v2": init_linear(ks[7], cfg.context_dim, inner, role="attn_qkv"),
+        "o2": init_linear(ks[8], inner, inner, role="attn_out"),
+        "ln3": L.init_layernorm(inner),
+        "ff1": init_linear(ks[9], inner, inner * 8, role="mlp_up"),
+        "ff2": init_linear(ks[10], inner * 4, inner, role="mlp_down"),
+        "proj_out": init_conv(ks[11], inner, ch, k=1),
+    }
+
+
+def _mha(q_p, k_p, v_p, o_p, x, ctx, heads: int):
+    b, n, c = x.shape
+    hd = c // heads
+
+    def split(t):
+        return t.reshape(b, -1, heads, hd).transpose(0, 2, 1, 3)
+    q = split(apply_linear(q_p, x))
+    k = split(apply_linear(k_p, ctx))
+    v = split(apply_linear(v_p, ctx))
+    out = ops.attention(q, k, v, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, n, c)
+    return apply_linear(o_p, out)
+
+
+def apply_spatial_transformer(p: dict, x: jax.Array, ctx: jax.Array,
+                              cfg: UNetConfig) -> jax.Array:
+    b, h, w, c = x.shape
+    res = x
+    xn = groupnorm(p["norm"], x, cfg.groups)
+    xn = apply_conv(p["proj_in"], xn).reshape(b, h * w, c)
+    xn = xn + _mha(p["q1"], p["k1"], p["v1"], p["o1"],
+                   L.layernorm(p["ln1"], xn), L.layernorm(p["ln1"], xn),
+                   cfg.num_heads)
+    xn = xn + _mha(p["q2"], p["k2"], p["v2"], p["o2"],
+                   L.layernorm(p["ln2"], xn), ctx, cfg.num_heads)
+    # GEGLU feed-forward.
+    hgl = apply_linear(p["ff1"], L.layernorm(p["ln3"], xn))
+    hh, gate = jnp.split(hgl, 2, axis=-1)
+    xn = xn + apply_linear(p["ff2"], hh * jax.nn.gelu(gate))
+    xn = apply_conv(p["proj_out"], xn.reshape(b, h, w, c))
+    return res + xn
+
+
+# ---------------------------------------------------------------- UNet
+
+def timestep_embedding(t: jax.Array, dim: int) -> jax.Array:
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10_000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], -1)
+
+
+def init_unet(key, cfg: UNetConfig) -> dict:
+    ks = iter(jax.random.split(key, 256))
+    ch = cfg.model_channels
+    p: dict[str, Any] = {
+        "time1": init_linear(next(ks), ch, cfg.time_dim, role="time_embed",
+                             bias=True),
+        "time2": init_linear(next(ks), cfg.time_dim, cfg.time_dim,
+                             role="time_embed", bias=True),
+        "conv_in": init_conv(next(ks), cfg.in_channels, ch),
+    }
+    downs = []
+    ch_stack = [ch]
+    cur = ch
+    for lvl, mult in enumerate(cfg.channel_mult):
+        out_ch = ch * mult
+        for _ in range(cfg.num_res_blocks):
+            blk = {"res": init_resblock(next(ks), cur, out_ch,
+                                        cfg.time_dim, cfg.groups)}
+            if lvl in cfg.attention_levels:
+                blk["attn"] = init_spatial_transformer(next(ks), out_ch, cfg)
+            downs.append(blk)
+            cur = out_ch
+            ch_stack.append(cur)
+        if lvl != len(cfg.channel_mult) - 1:
+            downs.append({"down": init_conv(next(ks), cur, cur)})
+            ch_stack.append(cur)
+    p["downs"] = downs
+
+    p["mid"] = {
+        "res1": init_resblock(next(ks), cur, cur, cfg.time_dim, cfg.groups),
+        "attn": init_spatial_transformer(next(ks), cur, cfg),
+        "res2": init_resblock(next(ks), cur, cur, cfg.time_dim, cfg.groups),
+    }
+
+    ups = []
+    for lvl, mult in reversed(list(enumerate(cfg.channel_mult))):
+        out_ch = ch * mult
+        for i in range(cfg.num_res_blocks + 1):
+            skip = ch_stack.pop()
+            blk = {"res": init_resblock(next(ks), cur + skip, out_ch,
+                                        cfg.time_dim, cfg.groups)}
+            if lvl in cfg.attention_levels:
+                blk["attn"] = init_spatial_transformer(next(ks), out_ch, cfg)
+            if i == cfg.num_res_blocks and lvl != 0:
+                blk["up"] = init_conv(next(ks), out_ch, out_ch)
+            ups.append(blk)
+            cur = out_ch
+    p["ups"] = ups
+    p["norm_out"] = init_groupnorm(cur)
+    p["conv_out"] = init_conv(next(ks), cur, cfg.out_channels)
+    return p
+
+
+def apply_unet(p: dict, cfg: UNetConfig, x: jax.Array, t: jax.Array,
+               ctx: jax.Array) -> jax.Array:
+    """x: (B, H, W, 4) latent; t: (B,) timestep; ctx: (B, 77, ctx_dim)."""
+    temb = timestep_embedding(t, cfg.model_channels).astype(x.dtype)
+    temb = apply_linear(p["time2"],
+                        jax.nn.silu(apply_linear(p["time1"], temb)))
+    h = apply_conv(p["conv_in"], x)
+    skips = [h]
+    for blk in p["downs"]:
+        if "down" in blk:
+            h = apply_conv(blk["down"], h, stride=2)
+        else:
+            h = apply_resblock(blk["res"], h, temb, cfg.groups)
+            if "attn" in blk:
+                h = apply_spatial_transformer(blk["attn"], h, ctx, cfg)
+        skips.append(h)
+    h = apply_resblock(p["mid"]["res1"], h, temb, cfg.groups)
+    h = apply_spatial_transformer(p["mid"]["attn"], h, ctx, cfg)
+    h = apply_resblock(p["mid"]["res2"], h, temb, cfg.groups)
+    for blk in p["ups"]:
+        h = jnp.concatenate([h, skips.pop()], axis=-1)
+        h = apply_resblock(blk["res"], h, temb, cfg.groups)
+        if "attn" in blk:
+            h = apply_spatial_transformer(blk["attn"], h, ctx, cfg)
+        if "up" in blk:
+            b, hh, ww, c = h.shape
+            h = jax.image.resize(h, (b, hh * 2, ww * 2, c), "nearest")
+            h = apply_conv(blk["up"], h)
+    h = jax.nn.silu(groupnorm(p["norm_out"], h, cfg.groups))
+    return apply_conv(p["conv_out"], h)

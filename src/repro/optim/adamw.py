@@ -1,0 +1,108 @@
+"""AdamW with global-norm clipping and optional Q8_0-quantized moments.
+
+Quantized moments apply the paper's technique to the optimizer state
+(beyond-paper): both Adam moments are stored as Q8_0 blocks (int8 +
+fp16/32 scale per 32 values), cutting optimizer memory from 8 bytes/
+param to ~2.1.  Moments are dequantized, updated, and requantized each
+step.  Two guards make this stable (the naive version diverges because
+a v-block's small entries quantize to exactly 0, unleashing m/eps):
+the second moment is stored in sqrt-domain (halving its dynamic range,
+as in 8-bit Adam practice), and the per-element update is clipped to
+±10 (inactive in normal operation).
+
+Optimizer state inherits the parameter sharding (ZeRO: with FSDP'd
+params the moments are sharded identically, so no device holds a full
+copy).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import quant
+from repro.core.quant import Q8_0Tensor
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _quantizable(p) -> bool:
+    """Quantize moments in the weight's own shape (blocks along the
+    last axis) so they inherit the weight's sharding rules — a
+    flattened layout forces resharding/replication in SPMD."""
+    return p.ndim >= 1 and p.shape[-1] % 32 == 0
+
+
+def _q(x: jax.Array) -> Q8_0Tensor:
+    return quant.quantize_q8_0(x.astype(jnp.float32))
+
+
+def _dq(t: Q8_0Tensor, shape, size) -> jax.Array:
+    del shape, size
+    return quant.dequantize_q8_0(t)
+
+
+def _zeros_like_moment(p, quantized: bool):
+    if quantized and _quantizable(p):
+        return _q(jnp.zeros(p.shape, jnp.float32))
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def init_adam(params: Any, cfg: TrainConfig) -> AdamState:
+    trainable = jax.tree.map(lambda p: p, params)
+    mk = lambda p: _zeros_like_moment(p, cfg.quantized_moments)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(mk, trainable),
+                     v=jax.tree.map(mk, trainable))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adam_update(grads: Any, state: AdamState, params: Any,
+                cfg: TrainConfig) -> tuple[Any, AdamState]:
+    step = state.step + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    qz = cfg.quantized_moments
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        tq = qz and _quantizable(p)
+        if tq:
+            m = _dq(m, p.shape, p.size)
+            v = jnp.square(_dq(v, p.shape, p.size))  # sqrt-domain storage
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+        upd_ = jnp.clip(upd_, -10.0, 10.0)
+        new_p = (p.astype(jnp.float32)
+                 - cfg.lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+                 ).astype(p.dtype)
+        if tq:
+            m, v = _q(m), _q(jnp.sqrt(v))
+        return new_p, m, v
+
+    is_q = lambda x: isinstance(x, Q8_0Tensor)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m, is_leaf=is_q)
+    flat_v = jax.tree.leaves(state.v, is_leaf=is_q)
+    outs = [upd(p, g, m, v)
+            for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_p, AdamState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,62 @@
+"""Int8 error-feedback gradient compression (cross-pod all-reduce).
+
+The pod axis crosses the slowest links (inter-pod ICI/DCN), so the
+gradient all-reduce there is the dominant collective at multi-pod
+scale.  We compress gradients to Q8_0-style int8 blocks before the
+cross-pod exchange and keep the quantization residual locally (error
+feedback), adding it back into the next step's gradient — the standard
+convergence-preserving scheme (1-bit Adam lineage).
+
+Under GSPMD the all-reduce is implicit, so the compression is exposed
+as a (compress -> decompress) sandwich applied to the *pod-crossing*
+gradient tensor inside the train step, with the residual carried in the
+optimizer loop.  ``compression_ratio`` reports the byte saving for the
+collective-roofline model.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # same structure as grads, f32
+
+
+def init_compression(grads_like: Any) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress_decompress(g: jax.Array, r: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Quantize (g + residual) to int8 blocks; return (dequantized
+    value that crosses the wire, new residual)."""
+    x = g.astype(jnp.float32) + r
+    flat = x.reshape(-1)
+    pad = (-flat.size) % 32
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    q = quant.quantize_q8_0(flat)
+    deq = quant.dequantize_q8_0(q)[: x.size].reshape(x.shape)
+    return deq.astype(g.dtype), x - deq
+
+
+def apply_compression(grads: Any, state: CompressionState
+                      ) -> tuple[Any, CompressionState]:
+    pairs = jax.tree.map(compress_decompress, grads, state.residual)
+    new_g = jax.tree.map(lambda pr: pr[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda pr: pr[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, CompressionState(residual=new_r)
+
+
+def compression_ratio() -> float:
+    """bf16 (16 bit) -> Q8_0 (8.5 bit) on the wire."""
+    return 16.0 / 8.5

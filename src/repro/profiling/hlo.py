@@ -1,0 +1,109 @@
+"""HLO-text parsing: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` does not expose collective bytes, so we
+parse the (post-SPMD-partitioning) HLO of the per-device executable:
+every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` op contributes its wire bytes.
+
+Wire-byte model (ring algorithms, per participating chip):
+  * all-reduce:        2 * s * (n-1)/n      (reduce-scatter + all-gather)
+  * all-gather:        s * (n-1)/n          (s = full gathered size)
+  * reduce-scatter:    s * (n-1)/n          (s = full input size)
+  * all-to-all:        s * (n-1)/n
+  * collective-permute: s                   (point-to-point)
+where n is the replica-group size parsed from the op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _op_result_bytes(line: str) -> float:
+    """Sum the byte size of the op's result (handles tuple results)."""
+    lhs = line.split(" = ", 1)[1] if " = " in line else line
+    # Result type(s) precede the op name; grab shapes before the first
+    # opcode occurrence.
+    for c in _COLLECTIVES + ("fusion", "custom-call"):
+        idx = lhs.find(c + "(")
+        if idx < 0:
+            idx = lhs.find(c + "-start(")
+        if idx >= 0:
+            lhs = lhs[:idx]
+            break
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(lhs))
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes_per_chip: float = 0.0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    op_count: int = 0
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> CollectiveStats:
+    stats = CollectiveStats(by_kind=defaultdict(float))
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        kind = None
+        for c in _COLLECTIVES:
+            # Match op invocations incl. async -start variants; skip
+            # -done (size counted at start).
+            if re.search(rf"\s{c}(-start)?\(", ls):
+                kind = c
+                break
+        if kind is None or f" {kind}-done(" in ls:
+            continue
+        size = _op_result_bytes(ls)
+        n = max(_group_size(ls, total_devices), 1)
+        if kind == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = size
+        stats.wire_bytes_per_chip += wire
+        stats.by_kind[kind] += wire
+        stats.op_count += 1
+    stats.by_kind = dict(stats.by_kind)
+    return stats
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\s{opcode}\(", hlo_text))

@@ -1,0 +1,142 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+TPU v5e per-chip constants (the TARGET hardware; this container is
+CPU-only so terms are derived from compiled HLO, not measured):
+
+  * peak bf16 compute: 197 TFLOP/s
+  * HBM bandwidth:     819 GB/s
+  * ICI link bandwidth: ~50 GB/s per link
+
+Terms (seconds, per step, per chip — the executable is the per-device
+SPMD program, so its cost_analysis numbers are already per chip):
+
+  compute    = HLO_FLOPs / peak_FLOPs
+  memory     = HLO_bytes / HBM_bw
+  collective = wire_bytes_per_chip / link_bw
+
+The bound is max(terms); roofline fraction for the report is
+``useful_model_flops_per_chip / (bound_seconds * peak)`` — i.e. what
+fraction of peak the chip would sustain on *useful* model FLOPs if the
+step ran at the derived bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.profiling import hlo as hlo_mod
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+LINK_BW = 50e9               # bytes / s / link
+
+TERMS = ("compute", "memory", "collective")
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    collective_ops: int
+    model_flops_total: float   # 6*N*D (or 6*N_active*D) per step
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    memory_analysis: dict | None = None
+
+    @property
+    def bound(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (total) — remat/redundancy waste."""
+        total_hlo = self.flops_per_chip * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-FLOP fraction of peak at the derived bound."""
+        if self.bound_s <= 0:
+            return 0.0
+        per_chip_useful = self.model_flops_total / self.chips
+        return per_chip_useful / (self.bound_s * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(bound=self.bound, bound_s=self.bound_s,
+                 useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops_total: float,
+            memory_analysis: dict | None = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = hlo_mod.collective_bytes(hlo_text, chips)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        wire_bytes_per_chip=coll.wire_bytes_per_chip,
+        collective_ops=coll.op_count,
+        model_flops_total=model_flops_total,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll.wire_bytes_per_chip / LINK_BW,
+        memory_analysis=memory_analysis,
+    )
+
+
+def model_flops(n_params_active: float, tokens: float,
+                kind: str = "train") -> float:
+    """6·N·D for training; 2·N·D for inference forward."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_params_active * tokens
+
+
+def save_json(r: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(r.to_dict(), f, indent=1)
+
+
+# ------------------------------------------------------------------
+# Kernel-substituted memory terms (§Perf iterations A2 / C3).
+#
+# The CPU dry-run lowers quantized matmuls and attention through plain
+# XLA, which materializes (a) dequantized weight copies and (b) S^2
+# attention logits in HBM.  The in-repo Pallas kernels (q8_matmul,
+# q3k_matmul, flash_attention — oracle-validated in tests/) keep both
+# in VMEM by construction (BlockSpec tiling), so the TPU deployment's
+# memory term excludes that traffic.  These helpers compute the
+# substituted terms analytically; EXPERIMENTS.md reports both numbers.
+
+def fused_dequant_memory_s(*, packed_weight_bytes_per_chip: float,
+                           kv_bytes_per_chip: float = 0.0,
+                           act_bytes_per_chip: float = 0.0) -> float:
+    """Ideal streaming memory term: every byte crosses HBM once,
+    in packed form (the Pallas fused-dequant contract)."""
+    total = (packed_weight_bytes_per_chip + kv_bytes_per_chip
+             + act_bytes_per_chip)
+    return total / HBM_BW
+
+
+def flash_logits_bytes(*, batch: int, heads: int, sq: int, sk: int,
+                       layers: int, chips: int,
+                       passes: float = 6.0) -> float:
+    """HBM bytes the XLA softmax-attention path spends on the (Sq,Sk)
+    logits tensor (write + softmax sub/exp/div reads + P reread),
+    which flash attention keeps in VMEM.  Sharded over chips."""
+    return passes * batch * heads * sq * sk * 4.0 * layers / chips

@@ -1,0 +1,60 @@
+"""Serving-step factories: prefill and single-token decode.
+
+These are the functions the dry-run lowers for the ``prefill_32k``,
+``decode_32k`` and ``long_500k`` cells.  Weights may be quantized
+(Q8_0 / Q3_K via the offload policy) — the decode memory roofline then
+reads quantized bytes, which is the paper's core win.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_cache, lm_decode_step, lm_forward
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch: dict[str, Any]):
+        # last_only: the unembed runs on one position — the (B,S,V)
+        # logits tensor would otherwise dominate prefill memory.
+        logits, _ = lm_forward(params, cfg, batch["tokens"],
+                               enc_embeds=batch.get("enc_embeds"),
+                               prefix_embeds=batch.get("prefix_embeds"),
+                               remat="block", last_only=True)
+        return logits[:, -1]
+    return prefill
+
+
+def make_decode(cfg: ModelConfig):
+    def decode(params, token: jax.Array, pos: jax.Array, cache):
+        logits, cache = lm_decode_step(params, cfg, token, pos, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, cache
+    return decode
+
+
+def make_cache(params, cfg: ModelConfig, batch: int, max_len: int, *,
+               quantized_kv: bool = False,
+               enc_embeds: jax.Array | None = None):
+    return init_cache(params, cfg, batch, max_len,
+                      quantized_kv=quantized_kv, enc_embeds=enc_embeds)
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    steps: int, *, max_len: int = 0,
+                    enc_embeds: jax.Array | None = None) -> jax.Array:
+    """Reference generation loop (prefill via repeated decode)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + steps)
+    cache = make_cache(params, cfg, b, max_len, enc_embeds=enc_embeds)
+    decode = make_decode(cfg)
+    tok = prompt[:, :1]
+    out = [tok]
+    for t in range(s + steps - 1):
+        nxt, _, cache = decode(params, tok, jnp.int32(t), cache)
+        tok = prompt[:, t + 1:t + 2] if t + 1 < s else nxt
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

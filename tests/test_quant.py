@@ -1,0 +1,114 @@
+"""Quantization-format unit + property tests (Q8_0 / Q3_K / Q8_K)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                             jnp.float32) * scale
+
+
+class TestQ80:
+    def test_roundtrip_error_bound(self):
+        x = _rand((8, 256))
+        t = quant.quantize_q8_0(x)
+        y = quant.dequantize_q8_0(t)
+        # Per-block error bounded by half a quantization step.
+        d = np.asarray(t.d, np.float32).repeat(32, -1).reshape(x.shape)
+        assert np.all(np.abs(np.asarray(y - x)) <= d / 2 + 1e-7)
+
+    def test_idempotent(self):
+        t = quant.quantize_q8_0(_rand((4, 64)))
+        t2 = quant.quantize_q8_0(quant.dequantize_q8_0(t))
+        np.testing.assert_array_equal(np.asarray(t.qs), np.asarray(t2.qs))
+
+    def test_zeros(self):
+        t = quant.quantize_q8_0(jnp.zeros((2, 32)))
+        assert np.all(np.asarray(quant.dequantize_q8_0(t)) == 0)
+
+    def test_bpw(self):
+        x = _rand((16, 1024))
+        t = quant.quantize_q8_0(x)
+        assert t.nbytes() * 8 / x.size == pytest.approx(8.5)
+
+    def test_bad_block(self):
+        with pytest.raises(ValueError):
+            quant.quantize_q8_0(jnp.zeros((2, 33)))
+
+
+class TestQ3K:
+    def test_pack_unpack_q3_exact(self):
+        q = np.random.default_rng(0).integers(0, 8, (5, 512)).astype(np.uint8)
+        ql, qh = quant.pack_q3(jnp.array(q))
+        rt = np.asarray(quant.unpack_q3(ql, qh)) + 4
+        np.testing.assert_array_equal(rt, q)
+
+    def test_pack_unpack_scales_exact(self):
+        sc = np.random.default_rng(1).integers(0, 64, (3, 4, 16)).astype(
+            np.uint8)
+        rt = np.asarray(quant.unpack_scales6(quant.pack_scales6(
+            jnp.array(sc))))
+        np.testing.assert_array_equal(rt, sc)
+
+    def test_roundtrip_error(self):
+        x = _rand((8, 512))
+        y = quant.dequantize_q3_k(quant.quantize_q3_k(x))
+        rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+        assert rel < 0.25, rel  # ~3-bit quantization error regime
+
+    def test_bpw_packed(self):
+        x = _rand((16, 1024))
+        t = quant.quantize_q3_k(x)
+        assert t.nbytes() * 8 / x.size == pytest.approx(3.4375)
+
+    def test_scale5_approximation_claim(self):
+        """Paper: converting 6-bit scales to 5 bits has almost no
+        effect on results (OP_CVT53)."""
+        x = _rand((32, 1024), seed=3)
+        e6 = float(jnp.linalg.norm(
+            quant.dequantize_q3_k(quant.quantize_q3_k(x)) - x))
+        e5 = float(jnp.linalg.norm(
+            quant.dequantize_q3_k(quant.quantize_q3_k(x, scale_bits=5))
+            - x))
+        assert e5 <= e6 * 1.15, (e5, e6)
+
+    def test_values_in_range(self):
+        t = quant.quantize_q3_k(_rand((4, 256), scale=10.0))
+        q = np.asarray(quant.unpack_q3(t.ql, t.qh))
+        assert q.min() >= -4 and q.max() <= 3
+
+
+class TestQ8K:
+    def test_roundtrip(self):
+        x = _rand((4, 512))
+        y = quant.dequantize_q8_k(quant.quantize_q8_k(x))
+        assert float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x)) < 0.02
+
+
+@given(st.integers(1, 8), st.integers(1, 4), st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_q8_roundtrip_property(rows, blocks, scale):
+    x = _rand((rows, 32 * blocks), seed=rows * 7 + blocks, scale=scale)
+    t = quant.quantize_q8_0(x)
+    y = quant.dequantize_q8_0(t)
+    rel = float(jnp.linalg.norm(y - x) / (jnp.linalg.norm(x) + 1e-9))
+    assert rel < 0.02
+
+
+@given(st.integers(1, 4), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_q3k_sign_preservation_property(rows, sblocks):
+    """Large-magnitude entries must keep their sign through Q3_K."""
+    x = _rand((rows, 256 * sblocks), seed=rows + 13 * sblocks)
+    y = quant.dequantize_q3_k(quant.quantize_q3_k(x))
+    big = np.abs(np.asarray(x)) > 2.0
+    if big.any():
+        assert np.all(np.sign(np.asarray(y))[big]
+                      == np.sign(np.asarray(x))[big])

@@ -1,0 +1,68 @@
+"""Sharding-rule unit tests (mesh.shape-only stub, no devices needed)."""
+import types
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.qlinear import Linear, init_linear, quantize_params
+from repro.core.policy import Q8_0_POLICY
+from repro.distributed import sharding
+
+
+MESH = types.SimpleNamespace(shape={"data": 16, "model": 16})
+MESH3 = types.SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+
+
+def test_role_rules_dense():
+    lin = init_linear(jax.random.PRNGKey(0), 4096, 8192, role="mlp_up")
+    spec = sharding.linear_specs(lin, MESH)
+    assert spec.w == P("model", "data")
+    lin2 = init_linear(jax.random.PRNGKey(0), 8192, 4096, role="mlp_down")
+    assert sharding.linear_specs(lin2, MESH).w == P("data", "model")
+
+
+def test_nondivisible_falls_back_replicated():
+    lin = init_linear(jax.random.PRNGKey(0), 100, 24, role="mlp_up")
+    spec = sharding.linear_specs(lin, MESH)
+    assert spec.w == P(None, None)
+
+
+def test_quantized_side_tensors_inherit():
+    lin = init_linear(jax.random.PRNGKey(0), 2048, 4096, role="attn_qkv")
+    qlin = quantize_params(lin, Q8_0_POLICY)
+    spec = sharding.linear_specs(qlin, MESH)
+    assert spec.w.qs == P("model", "data")
+    assert spec.w.d == P("model", "data")  # 2048/32=64 divides 16
+
+
+def test_fsdp_off_drops_data_axis():
+    lin = init_linear(jax.random.PRNGKey(0), 4096, 8192, role="mlp_up")
+    specs = sharding.param_specs({"l": lin}, MESH, fsdp=False)
+    assert specs["l"].w == P("model", None)
+
+
+def test_expert_weights_ep():
+    w = jnp.zeros((64, 128, 2048), jnp.bfloat16)  # (E, ff, d)
+    lin = Linear(w, role="expert_up")
+    spec = sharding.linear_specs(lin, MESH)
+    assert spec.w[0] == "model"  # EP on the model axis
+
+
+def test_batch_specs_multi_pod():
+    batch = {"tokens": jnp.zeros((256, 128), jnp.int32)}
+    spec = sharding.batch_specs(batch, MESH3)
+    assert spec["tokens"][0] == ("pod", "data")
+    small = sharding.batch_specs({"t": jnp.zeros((3, 4))}, MESH3)
+    assert small["t"] == P(None, None)
+
+
+def test_cache_specs_long_context_batch1():
+    """batch=1 decode: sequence must shard over model AND data axes."""
+    cache = {"k": jnp.zeros((9, 1, 8, 4096, 128), jnp.bfloat16)}
+    spec = sharding.cache_specs(cache, MESH)
+    assert spec["k"][3] in (("model", "data"), ("model",), "model")
+    # batch divisible: batch->data, seq->model
+    cache2 = {"k": jnp.zeros((4, 128, 8, 4096, 128), jnp.bfloat16)}
+    spec2 = sharding.cache_specs(cache2, MESH)
+    assert spec2["k"][1] == "data" and spec2["k"][3] == "model"
