@@ -1,0 +1,69 @@
+"""Engine throughput microbench: requests/sec on mixed workloads.
+
+Submits a mixed sampler/step workload (turbo-1, ddim-2, ddim-4,
+euler-2, plus a CFG-guided ddim-4 group) to a ``DiffusionEngine`` and
+reports cold (incl. compile) and steady-state requests/sec together
+with the jit trace count — the compile cache means the steady pass
+must add zero traces.
+
+Run:  PYTHONPATH=src python benchmarks/engine_throughput.py \
+          [--requests 12] [--max-batch 4]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import (TINY_SD, DiffusionEngine, GenerateRequest,
+                          init_pipeline)
+
+# (sampler, steps, guidance_scale) round-robin mix.
+MIX = [("turbo", 1, 1.0), ("ddim", 2, 1.0), ("ddim", 4, 1.0),
+       ("euler", 2, 1.0), ("ddim", 4, 7.5)]
+
+
+def _submit(engine: DiffusionEngine, toks, n: int, rid0: int) -> None:
+    for i in range(n):
+        sampler, steps, g = MIX[i % len(MIX)]
+        engine.submit(GenerateRequest(
+            rid=rid0 + i, tokens=toks, sampler=sampler, steps=steps,
+            guidance_scale=g, seed=rid0 + i))
+
+
+def run(verbose: bool = True, n_requests: int = 12,
+        max_batch: int = 4) -> list[str]:
+    params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (TINY_SD.text_len,),
+                              0, TINY_SD.clip_cfg().vocab_size)
+    engine = DiffusionEngine(params, TINY_SD, max_batch=max_batch)
+
+    rows = []
+    for label, rid0 in (("cold", 0), ("steady", n_requests)):
+        traces0 = engine.traces
+        _submit(engine, toks, n_requests, rid0)
+        t0 = time.time()
+        engine.run()
+        jax.block_until_ready(engine.finished[-1].image)
+        dt = time.time() - t0
+        row = (f"engine_throughput/{label},{n_requests / dt:.2f} req/s,"
+               f"{dt:.2f}s for {n_requests} reqs (max_batch={max_batch}),"
+               f"traces +{engine.traces - traces0}")
+        rows.append(row)
+        if verbose:
+            print(row)
+    assert engine.traces - traces0 == 0, "steady-state pass retraced"
+    assert len(engine.finished) == 2 * n_requests
+    assert all(bool(jnp.isfinite(r.image.astype(jnp.float32)).all())
+               for r in engine.finished)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    a = ap.parse_args()
+    run(n_requests=a.requests, max_batch=a.max_batch)

@@ -1,23 +1,29 @@
-"""Serve a (reduced) assigned architecture with batched requests.
+"""Serve a (reduced) assigned architecture through the engine API.
 
 Demonstrates the quantized-offload serving path the paper targets:
-weights quantized per policy, prefill + batched greedy decode with the
-KV/SSM cache machinery (ring-buffer SWA, recurrent states, cross-KV).
+weights quantized per policy, then requests submitted to the
+``ContinuousBatcher`` — the LM engine behind the same
+``submit()``/``step()``/``run()`` protocol as ``DiffusionEngine``.
+Finished requests free their slot mid-flight and queued ones are
+admitted, so the jitted decode step always runs at the fixed batch
+shape (KV/SSM cache machinery: ring-buffer SWA, recurrent states,
+cross-KV).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-1.3b \
-          [--policy q3_k] [--batch 4] [--gen 32]
+          [--policy q3_k] [--slots 4] [--requests 8] [--gen 32]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
 from repro.models.transformer import init_lm
-from repro.train.serve_step import make_cache, make_decode, make_prefill
+from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.train.serve_step import make_prefill
 
 
 def main():
@@ -25,7 +31,8 @@ def main():
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--policy", default="q8_0",
                     choices=["none", "q8_0", "q3_k", "q3_k_imax"])
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--quantized-kv", action="store_true")
@@ -38,31 +45,27 @@ def main():
     print(f"{cfg.name}: {param_bytes(params)/1e6:.1f} MB -> "
           f"{param_bytes(qp)/1e6:.1f} MB ({args.policy})")
 
-    inp = smoke_inputs(key, cfg, batch=args.batch, seq=args.prompt_len)
-    enc = inp.get("enc_embeds")
-    max_len = args.prompt_len + args.gen
-    cache = make_cache(qp, cfg, args.batch, max_len,
-                       quantized_kv=args.quantized_kv, enc_embeds=enc)
-    decode = jax.jit(make_decode(cfg), donate_argnums=(3,))
-    prefill = jax.jit(make_prefill(cfg))
+    inp = smoke_inputs(key, cfg, batch=args.slots, seq=args.prompt_len)
+    max_len = ContinuousBatcher.required_len(args.requests, args.slots,
+                                             args.prompt_len, args.gen)
+    engine = ContinuousBatcher(qp, cfg, slots=args.slots, max_len=max_len,
+                               enc_embeds=inp.get("enc_embeds"),
+                               quantized_kv=args.quantized_kv)
+    prompts = np.asarray(inp["tokens"])
+    for r in range(args.requests):
+        engine.submit(Request(rid=r,
+                              prompt=prompts[r % args.slots].tolist(),
+                              max_new=args.gen))
 
-    # Prefill (teacher-forced through decode to fill the cache) + decode.
     t0 = time.time()
-    tok = inp["tokens"][:, :1]
-    out = [tok]
-    for t in range(max_len - 1):
-        nxt, logits, cache = decode(qp, tok, jnp.int32(t), cache)
-        tok = (inp["tokens"][:, t + 1:t + 2]
-               if t + 1 < args.prompt_len else nxt)
-        out.append(tok)
-    seq = jax.block_until_ready(jnp.concatenate(out, axis=1))
+    done = engine.run()
     dt = time.time() - t0
-    print(f"generated {seq.shape} in {dt:.2f}s "
-          f"({args.batch * max_len / dt:.1f} tok/s incl. compile)")
-    print("sample token ids:", seq[0, args.prompt_len:
-                                   args.prompt_len + 12].tolist())
+    n_tok = sum(len(d.prompt) + len(d.out) for d in done)
+    print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s incl. compile) on {args.slots} slots")
+    print("first request out:", done[0].out[:12])
     # Last-position prefill logits must agree with the decode path.
-    pl = prefill(qp, inp)
+    pl = jax.jit(make_prefill(cfg))(qp, inp)
     print("prefill/decode consistency check: logits shape", pl.shape)
 
 

@@ -1,86 +1,62 @@
-"""Text-to-image pipeline: CLIP -> UNet (denoise loop) -> VAE decode.
+"""Compatibility wrapper over the request-based engine API.
 
-This is the stable-diffusion.cpp execution path the paper profiles:
-every linear/conv weight is role-tagged, so applying an
-``OffloadPolicy`` quantizes exactly the tensors GGML would (Q8_0 or
-Q3_K model files), and the un-quantized remainder (norms, softmax,
-attention score/PV) is the paper's F32/F16 "host" share.
+The text-to-image pipeline (CLIP -> UNet denoise -> VAE decode, the
+stable-diffusion.cpp path the paper profiles) now lives in
+:mod:`repro.engine.diffusion_engine`:
+
+* serving callers build a :class:`repro.engine.DiffusionEngine` and
+  ``submit()`` :class:`repro.engine.GenerateRequest` objects — that
+  path gets micro-batching, the sampler registry, per-request CFG
+  scales, and the jitted ``lax.scan`` denoise loop with an explicit
+  compile cache;
+* this module re-exports the configs/init/quantize helpers and keeps
+  ``generate`` as a thin, fully-traceable single-shot wrapper (it is
+  called under ``jax.jit`` and ``jax.eval_shape`` by the benchmarks).
+
+Every linear/conv weight remains role-tagged, so applying an
+``OffloadPolicy`` still quantizes exactly the tensors GGML would
+(Q8_0 or Q3_K model files).  The engine redesign kept the sampler
+math and the noise draw (same bf16 values per key) but restructured
+the program around ``lax.scan``, so outputs for a fixed key agree
+with the pre-engine pipeline to bf16 reassociation tolerance
+(corr > 0.9999), not bit-exactly.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import OffloadPolicy
-from repro.core.qlinear import quantize_params
+# Re-exported for compatibility: configs and weight helpers moved to
+# the engine subsystem (benchmarks/ and examples/ import them here).
+from repro.engine.api import default_sampler, uses_cfg
+from repro.engine.diffusion_engine import (SD_TURBO, TINY_SD,  # noqa: F401
+                                           SDConfig, build_denoise,
+                                           init_pipeline, quantize_pipeline)
+from repro.engine.samplers import get_sampler
 from repro.diffusion import schedule as sched_mod
-from repro.models import clip as clip_mod
-from repro.models import unet as unet_mod
-from repro.models import vae as vae_mod
-
-
-@dataclasses.dataclass(frozen=True)
-class SDConfig:
-    name: str = "sd-turbo"
-    unet: unet_mod.UNetConfig = unet_mod.SD15_UNET
-    vae: vae_mod.VAEConfig = vae_mod.SD15_VAE
-    clip: Any = None   # ModelConfig; None -> clip_mod.clip_config()
-    latent_hw: int = 64          # 512x512 image -> 64x64 latent
-    text_len: int = 77
-    steps: int = 1               # SD-Turbo single step
-
-    def clip_cfg(self):
-        return self.clip or clip_mod.clip_config()
-
-
-SD_TURBO = SDConfig()
-TINY_SD = SDConfig(name="tiny-sd", unet=unet_mod.TINY_UNET,
-                   vae=vae_mod.TINY_VAE, clip=clip_mod.TINY_CLIP,
-                   latent_hw=8, steps=1)
-
-
-def init_pipeline(key: jax.Array, cfg: SDConfig) -> dict:
-    ks = jax.random.split(key, 3)
-    return {
-        "clip": clip_mod.init_clip(ks[0], cfg.clip_cfg()),
-        "unet": unet_mod.init_unet(ks[1], cfg.unet),
-        "vae": vae_mod.init_vae_decoder(ks[2], cfg.vae),
-    }
-
-
-def quantize_pipeline(params: dict, policy: OffloadPolicy) -> dict:
-    """GGML-style model-file quantization (the paper's two models)."""
-    return quantize_params(params, policy)
 
 
 def generate(params: dict, cfg: SDConfig, tokens: jax.Array,
-             key: jax.Array, *, steps: int | None = None) -> jax.Array:
-    """tokens: (B, 77) -> images (B, 8*latent_hw, 8*latent_hw, 3)."""
+             key: jax.Array, *, steps: int | None = None,
+             sampler: str | None = None, guidance_scale: float = 1.0,
+             neg_tokens: jax.Array | None = None) -> jax.Array:
+    """tokens: (B, 77) -> images (B, 8*latent_hw, 8*latent_hw, 3).
+
+    Single-shot traceable path: picks the sampler by name from the
+    registry (default: turbo for 1 step, ddim otherwise) and runs the
+    shared scan-based denoise program once at batch shape ``B``.
+    Serving workloads should prefer ``DiffusionEngine``.
+    """
     steps = steps or cfg.steps
+    name = sampler or default_sampler(steps)
+    use_cfg = uses_cfg(neg_tokens, guidance_scale)
     b = tokens.shape[0]
-    ctx = clip_mod.clip_encode(params["clip"], cfg.clip_cfg(), tokens)
-    noise_sched = sched_mod.NoiseSchedule()
-    x = jax.random.normal(key, (b, cfg.latent_hw, cfg.latent_hw, 4),
-                          jnp.bfloat16)
-    if steps == 1:  # SD-Turbo
-        t = jnp.full((b,), 999)
-        eps = unet_mod.apply_unet(params["unet"], cfg.unet, x, t, ctx)
-        x0 = sched_mod.turbo_step(noise_sched, x.astype(jnp.float32),
-                                  eps.astype(jnp.float32))
-    else:
-        ts = sched_mod.ddim_timesteps(steps)
-        x0 = x.astype(jnp.float32)
-        for i in range(steps):
-            t = jnp.full((b,), ts[i])
-            eps = unet_mod.apply_unet(params["unet"], cfg.unet,
-                                      x0.astype(jnp.bfloat16), t, ctx)
-            t_prev = ts[i + 1] if i + 1 < steps else jnp.array(-1)
-            x0 = sched_mod.ddim_step(noise_sched, x0,
-                                     eps.astype(jnp.float32),
-                                     ts[i], t_prev)
-    img = vae_mod.apply_vae_decoder(params["vae"], cfg.vae,
-                                    x0.astype(jnp.bfloat16))
-    return img
+    # bf16 draw upcast to f32: bit-compatible with the pre-engine
+    # pipeline for a fixed key (random.normal differs per dtype).
+    noise = jax.random.normal(key, (b, cfg.latent_hw, cfg.latent_hw, 4),
+                              jnp.bfloat16).astype(jnp.float32)
+    plan = get_sampler(name).plan(sched_mod.NoiseSchedule(), steps, steps)
+    neg = neg_tokens if neg_tokens is not None else jnp.zeros_like(tokens)
+    g = jnp.full((b,), guidance_scale, jnp.float32)
+    fn = build_denoise(cfg, name, use_cfg)
+    return fn(params, tokens, neg, g, noise, plan)

@@ -27,6 +27,14 @@ class NoiseSchedule:
 
 
 def ddim_timesteps(num_steps: int, num_train: int = 1000) -> jax.Array:
+    """Evenly spaced descending timesteps, starting at ``num_train - 1``.
+
+    ``num_steps`` is clamped to ``[1, num_train]`` (more steps than
+    training timesteps would make the stride 0 and crash ``arange``);
+    the result always holds exactly ``min(num_steps, num_train)``
+    unique timesteps.
+    """
+    num_steps = max(1, min(int(num_steps), int(num_train)))
     step = num_train // num_steps
     return jnp.arange(num_train - 1, -1, -step)[:num_steps]
 
@@ -40,10 +48,22 @@ def ddim_step(sched: NoiseSchedule, x: jax.Array, eps: jax.Array,
     return jnp.sqrt(a_prev) * x0 + jnp.sqrt(1 - a_prev) * eps
 
 
+def euler_timestep_indices(sched: NoiseSchedule,
+                           num_steps: int) -> jax.Array:
+    """Descending timestep indices for the Euler sigma spacing.
+
+    Shared by ``euler_sigmas`` and the engine's Euler sampler plan so
+    the UNet's conditioning timestep always matches the sigma fed to
+    ``euler_step``.
+    """
+    return jnp.linspace(sched.num_train_timesteps - 1, 0,
+                        num_steps).round().astype(jnp.int32)
+
+
 def euler_sigmas(sched: NoiseSchedule, num_steps: int) -> jax.Array:
     ac = sched.alphas_cumprod()
     sigmas = jnp.sqrt((1 - ac) / ac)
-    idx = jnp.linspace(len(sigmas) - 1, 0, num_steps).round().astype(int)
+    idx = euler_timestep_indices(sched, num_steps)
     return jnp.concatenate([sigmas[idx], jnp.zeros((1,))])
 
 

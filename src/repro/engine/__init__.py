@@ -1,0 +1,17 @@
+"""Unified request-based serving engine (diffusion + LM decode)."""
+from repro.engine.api import (Engine, GenerateRequest, GenerateResult,
+                              default_sampler, uses_cfg)
+from repro.engine.diffusion_engine import (SD_TURBO, TINY_SD, DiffusionEngine,
+                                           SDConfig, build_denoise,
+                                           init_pipeline, quantize_pipeline,
+                                           steps_bucket)
+from repro.engine.samplers import (get_sampler, list_samplers,
+                                   register_sampler)
+
+__all__ = [
+    "Engine", "GenerateRequest", "GenerateResult", "default_sampler",
+    "uses_cfg",
+    "DiffusionEngine", "SDConfig", "SD_TURBO", "TINY_SD",
+    "build_denoise", "init_pipeline", "quantize_pipeline", "steps_bucket",
+    "get_sampler", "list_samplers", "register_sampler",
+]

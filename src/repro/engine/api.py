@@ -1,0 +1,86 @@
+"""Request-based generation API shared by diffusion and LM serving.
+
+The paper treats Stable Diffusion as a *serving* workload (the
+stable-diffusion.cpp path profiled on IMAX3), and its companion LLM
+study serves decode on the same platform.  Both workloads therefore
+share one engine surface:
+
+* a typed request (``GenerateRequest`` for text-to-image; the LM path
+  keeps its own ``serving.scheduler.Request``) is ``submit()``-ed;
+* ``step()`` advances the engine by one scheduling quantum — one
+  micro-batched denoise program for diffusion, one batched decode step
+  for the LM ``ContinuousBatcher`` — and returns how many requests it
+  touched;
+* ``run()`` drains the queue and returns the finished results.
+
+``Engine`` is a structural :class:`typing.Protocol`:
+``DiffusionEngine`` and ``ContinuousBatcher`` both satisfy it without
+inheriting from a common base, so host-side schedulers (the paper's
+"host" role) can drive either workload through the same loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import jax
+
+
+def default_sampler(steps: int) -> str:
+    """Paper default: SD-Turbo for single-step, DDIM otherwise."""
+    return "turbo" if steps == 1 else "ddim"
+
+
+def uses_cfg(neg_tokens, guidance_scale: float) -> bool:
+    """Whether classifier-free guidance changes the output (and thus
+    which of the two compiled program variants a request needs)."""
+    return neg_tokens is not None or guidance_scale != 1.0
+
+
+@dataclasses.dataclass
+class GenerateRequest:
+    """One text-to-image generation request.
+
+    ``tokens``/``neg_tokens`` are prompt token ids of length
+    ``cfg.text_len`` (list or array).  ``guidance_scale`` is the
+    classifier-free-guidance weight: ``eps = eps_uncond +
+    scale * (eps_cond - eps_uncond)``; ``1.0`` with no negative prompt
+    disables the unconditional branch entirely.  ``seed`` alone
+    determines the initial latent noise, so the same request is
+    bit-identical whether it runs alone or co-batched.
+    """
+    rid: int
+    tokens: Sequence[int] | jax.Array
+    neg_tokens: Sequence[int] | jax.Array | None = None
+    guidance_scale: float = 1.0
+    sampler: str = "turbo"
+    steps: int = 1
+    seed: int = 0
+    latent_hw: int | None = None    # None -> engine config default
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    """Finished request: decoded image plus the settings that made it."""
+    rid: int
+    image: jax.Array                # (H, W, 3) in [-1, 1]
+    sampler: str
+    steps: int
+    seed: int
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """Structural protocol every serving engine implements."""
+
+    def submit(self, request: Any) -> None:
+        """Enqueue a request (admission happens inside ``step``)."""
+        ...
+
+    def step(self) -> int:
+        """Advance one scheduling quantum; return #requests progressed."""
+        ...
+
+    def run(self, max_steps: int = 10_000) -> list:
+        """Drive ``step`` until the queue drains; return finished items."""
+        ...

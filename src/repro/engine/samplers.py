@@ -1,0 +1,156 @@
+"""Sampler registry: named denoise strategies over one scan skeleton.
+
+Replaces the hardcoded ``if steps == 1`` / DDIM-else branch that used
+to live in ``diffusion.pipeline.generate``.  A sampler contributes
+four pure pieces to the jitted denoise ``lax.scan`` (built in
+:mod:`repro.engine.diffusion_engine`):
+
+* ``plan(sched, num_steps, num_padded)`` — per-step scan inputs as a
+  dict of arrays with leading dim ``num_padded`` and a ``valid`` mask.
+  Padding steps are no-ops (masked with ``jnp.where``), which is what
+  lets the engine bucket step counts: every request whose steps round
+  up to the same bucket shares one compiled program.
+* ``init_latent(noise, plan)`` — map unit-normal noise to the
+  sampler's working latent (VP space for ddim/turbo, VE for euler).
+* ``model_input(x, step)`` — what the eps-prediction UNet sees.
+* ``update(sched, x, eps, step)`` — one solver step; the actual math
+  stays in :mod:`repro.diffusion.schedule` (``ddim_step``,
+  ``euler_step``, ``turbo_step``) so sampler classes are thin wiring.
+
+Register new samplers with ``@register_sampler("name")``; look them up
+by name with ``get_sampler`` (the engine and ``GenerateRequest`` refer
+to samplers only by name).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion import schedule as S
+
+_REGISTRY: dict[str, "Sampler"] = {}
+
+
+def register_sampler(name: str):
+    """Class decorator: register a Sampler subclass under ``name``."""
+    def deco(cls):
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def get_sampler(name: str) -> "Sampler":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown sampler {name!r}; registered samplers: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_samplers() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class Sampler:
+    """Stateless sampler strategy (see module docstring for the hooks)."""
+
+    # When set, the sampler always runs this many solver steps and the
+    # engine normalizes request step counts to it (e.g. turbo is
+    # single-step by construction).
+    fixed_steps: int | None = None
+
+    def plan(self, sched: S.NoiseSchedule, num_steps: int,
+             num_padded: int) -> dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def init_latent(self, noise: jax.Array,
+                    plan: dict[str, jax.Array]) -> jax.Array:
+        return noise
+
+    def model_input(self, x: jax.Array,
+                    step: dict[str, jax.Array]) -> tuple[jax.Array, jax.Array]:
+        return x, step["t"]
+
+    def update(self, sched: S.NoiseSchedule, x: jax.Array, eps: jax.Array,
+               step: dict[str, jax.Array]) -> jax.Array:
+        raise NotImplementedError
+
+    def finalize(self, x: jax.Array) -> jax.Array:
+        return x
+
+
+def _pad_plan(plan: dict[str, jax.Array], num_steps: int, num_padded: int,
+              pad_vals: dict[str, float]) -> dict[str, jax.Array]:
+    """Extend per-step arrays to ``num_padded`` with masked filler steps.
+
+    Pad values must keep the masked step math finite (``jnp.where``
+    evaluates both branches); validity is carried in ``valid``.
+    """
+    out = {"valid": jnp.arange(num_padded) < num_steps}
+    for k, v in plan.items():
+        pad = jnp.full((num_padded - num_steps,), pad_vals[k], v.dtype)
+        out[k] = jnp.concatenate([v, pad])
+    return out
+
+
+@register_sampler("ddim")
+class DDIMSampler(Sampler):
+    """Deterministic DDIM (eta=0) over evenly spaced VP timesteps."""
+
+    def plan(self, sched, num_steps, num_padded):
+        ts = S.ddim_timesteps(num_steps, sched.num_train_timesteps)
+        ts = ts.astype(jnp.int32)
+        n = int(ts.shape[0])            # ddim_timesteps clamps to train len
+        ts_prev = jnp.concatenate([ts[1:], jnp.array([-1], jnp.int32)])
+        return _pad_plan({"t": ts, "t_prev": ts_prev}, n, num_padded,
+                         {"t": 0, "t_prev": -1})
+
+    def update(self, sched, x, eps, step):
+        return S.ddim_step(sched, x, eps, step["t"], step["t_prev"])
+
+
+@register_sampler("euler")
+class EulerSampler(Sampler):
+    """Euler ancestral-free ODE solver in the VE (sigma) view.
+
+    The latent is initialized as ``noise * sqrt(1 + sigma_max^2)`` (not
+    the k-diffusion ``noise * sigma_max``) so the first model input is
+    exactly the unit noise — at SD's sigma_max the two differ by ~0.2%,
+    and this choice makes 1-step Euler agree with ``turbo_step``.
+    """
+
+    def plan(self, sched, num_steps, num_padded):
+        num_steps = max(1, min(num_steps, sched.num_train_timesteps))
+        sigmas = S.euler_sigmas(sched, num_steps)      # (num_steps + 1,)
+        ts = S.euler_timestep_indices(sched, num_steps)
+        return _pad_plan({"t": ts, "sigma": sigmas[:-1],
+                          "sigma_next": sigmas[1:]},
+                         num_steps, num_padded,
+                         {"t": 0, "sigma": 0.0, "sigma_next": 0.0})
+
+    def init_latent(self, noise, plan):
+        return noise * jnp.sqrt(1.0 + plan["sigma"][0] ** 2)
+
+    def model_input(self, x, step):
+        return x / jnp.sqrt(1.0 + step["sigma"] ** 2), step["t"]
+
+    def update(self, sched, x, eps, step):
+        return S.euler_step(x, eps, step["sigma"], step["sigma_next"])
+
+
+@register_sampler("turbo")
+class TurboSampler(Sampler):
+    """SD-Turbo: one step from pure noise to the x0 estimate (the
+    paper's experiment).  ``fixed_steps`` tells the engine to
+    normalize any requested step count to 1 — turbo is single-step by
+    construction."""
+
+    fixed_steps = 1
+
+    def plan(self, sched, num_steps, num_padded):
+        t_max = sched.num_train_timesteps - 1
+        return _pad_plan({"t": jnp.array([t_max], jnp.int32)}, 1,
+                         num_padded, {"t": t_max})
+
+    def update(self, sched, x, eps, step):
+        return S.turbo_step(sched, x, eps, step["t"])

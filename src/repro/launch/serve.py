@@ -1,11 +1,14 @@
-"""Serving launcher: quantized-offload LM serving with batched decode.
+"""Serving launcher: quantized-offload LM serving via the engine API.
 
   python -m repro.launch.serve --arch deepseek-moe-16b [--policy q8_0] \
-      [--batch 4] [--gen 16]
+      [--slots 4] [--requests 8] [--gen 16]
 
-Runs reduced configs on CPU; on TPU the same path serves full configs
-with TP-only weight sharding (no FSDP — see DESIGN.md) and the Pallas
-fused-dequant kernels.
+Requests flow through the ``ContinuousBatcher`` engine (the same
+``submit()``/``step()``/``run()`` protocol as the diffusion engine):
+a fixed slot pool over the batched decode cache, mid-flight admission,
+EOS/max-length retirement.  Runs reduced configs on CPU; on TPU the
+same path serves full configs with TP-only weight sharding (no FSDP —
+see DESIGN.md) and the Pallas fused-dequant kernels.
 """
 from __future__ import annotations
 
@@ -13,20 +16,22 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
 from repro.models.transformer import init_lm
-from repro.train.serve_step import make_cache, make_decode
+from repro.serving.scheduler import ContinuousBatcher, Request
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--policy", default=None)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="default: one per slot")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
@@ -39,24 +44,24 @@ def main() -> None:
     qp = quantize_params(params, policy)
     print(f"{cfg.name} [{policy.name}]: {param_bytes(qp)/1e6:.1f} MB")
 
-    inp = smoke_inputs(jax.random.PRNGKey(1), cfg, batch=args.batch,
+    n_requests = args.requests or args.slots
+    inp = smoke_inputs(jax.random.PRNGKey(1), cfg, batch=args.slots,
                        seq=args.prompt_len)
-    cache = make_cache(qp, cfg, args.batch,
-                       args.prompt_len + args.gen,
-                       enc_embeds=inp.get("enc_embeds"))
-    decode = jax.jit(make_decode(cfg), donate_argnums=(3,))
-    tok = inp["tokens"][:, :1]
+    max_len = ContinuousBatcher.required_len(n_requests, args.slots,
+                                             args.prompt_len, args.gen)
+    engine = ContinuousBatcher(qp, cfg, slots=args.slots, max_len=max_len,
+                               enc_embeds=inp.get("enc_embeds"))
+    prompts = np.asarray(inp["tokens"])
+    for r in range(n_requests):
+        engine.submit(Request(rid=r,
+                              prompt=prompts[r % args.slots].tolist(),
+                              max_new=args.gen))
     t0 = time.time()
-    toks = [tok]
-    for t in range(args.prompt_len + args.gen - 1):
-        nxt, _, cache = decode(qp, tok, jnp.int32(t), cache)
-        tok = (inp["tokens"][:, t + 1:t + 2]
-               if t + 1 < args.prompt_len else nxt)
-        toks.append(tok)
-    out = jax.block_until_ready(jnp.concatenate(toks, 1))
+    done = engine.run()
     dt = time.time() - t0
-    print(f"served {out.shape[0]}x{out.shape[1]} tokens in {dt:.2f}s")
-    print("first request:", out[0].tolist())
+    n_tok = sum(len(d.prompt) + len(d.out) for d in done)
+    print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s")
+    print("first request:", done[0].prompt + done[0].out)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
-"""Continuous-batching serving scheduler (slot-based, vLLM-lite).
+"""Continuous-batching LM serving scheduler (slot-based, vLLM-lite).
+
+Implements the shared :class:`repro.engine.api.Engine` protocol
+(``submit()`` / ``step()`` / ``run()``) — the LM counterpart of
+``repro.engine.DiffusionEngine``, so one host loop can drive either
+workload.
 
 Production serving keeps the decode batch full: finished requests leave
 their slot, queued requests are admitted into free slots mid-flight,
@@ -7,11 +12,18 @@ recompilation).  Mechanics:
 
 * a fixed pool of B slots over a shared fixed-capacity cache (the
   decode cache is batched, so per-slot state is just the row index);
-* per-slot position counters (positions differ per slot — the decode
-  step takes a position *vector*);
-* admission copies the prompt in teacher-forced decode steps (simple,
-  correct; real deployments chunk-prefill — noted);
+* one shared scalar position (the cache high-water mark) for all
+  slots — per-slot position vectors are a ROADMAP open item;
+* admission copies the prompt in teacher-forced decode steps (simple;
+  real deployments chunk-prefill — noted);
 * EOS / max-length retirement frees the slot.
+
+Known simplification: the cache position is a *shared* high-water
+mark, so a request admitted into a freed slot mid-flight attends to
+the previous occupant's stale KV prefix (and recurrent states are not
+reset).  First-wave requests are exact; later waves are a throughput
+demo, not bit-exact decoding.  Per-slot position vectors / cache
+offsets are a ROADMAP open item.
 
 This module is deliberately jit-boundary-clean: the scheduler is Python
 (host-side request plumbing — the paper's "host" role), the step is one
@@ -38,19 +50,20 @@ class Request:
     eos: int | None = None
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Prompt feed cursor, owned by the scheduler.  A declared field
+    # (not injected at admission) so copied/replayed requests have it.
+    _cursor: int = dataclasses.field(default=0, repr=False)
 
 
 def make_batched_decode(cfg: ModelConfig):
-    """Decode step with a per-slot position vector.
+    """Greedy decode step at the fixed slot-batch shape.
 
-    The shared cache is written at each slot's own position; attention
-    validity is per-slot.  Implemented by running the stacked decode at
-    a common physical step while masking per-slot: we keep per-slot
-    positions by passing the *max* position for cache writes guarded by
-    slot-specific slot indices — for the CPU-scale scheduler we use the
-    simpler invariant that all slots share the cache length high-water
-    mark and per-slot validity comes from each slot's own history
-    (empty-slot rows decode garbage that is never emitted).
+    All slots share one scalar position (the cache high-water mark):
+    the cache is written at that position for every row, and rows
+    whose slot is empty decode garbage that is never emitted.  This is
+    the CPU-scale simplification — requests admitted into a freed slot
+    attend to the previous occupant's prefix (see the module
+    docstring); true per-slot position vectors are future work.
     """
     def step(params, tokens, pos, cache):
         logits, cache = lm_decode_step(params, cfg, tokens, pos, cache)
@@ -61,13 +74,15 @@ def make_batched_decode(cfg: ModelConfig):
 class ContinuousBatcher:
     def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
                  max_len: int, enc_embeds=None,
-                 decode_fn: Callable | None = None):
+                 decode_fn: Callable | None = None,
+                 quantized_kv: bool = False):
         self.params = params
         self.cfg = cfg
         self.slots: list[Request | None] = [None] * slots
         self.max_len = max_len
         self.queue: deque[Request] = deque()
         self.cache = init_cache(params, cfg, slots, max_len,
+                                quantized_kv=quantized_kv,
                                 enc_embeds=enc_embeds)
         self.step_fn = decode_fn or make_batched_decode(cfg)
         self.pos = 0                    # shared high-water position
@@ -75,6 +90,19 @@ class ContinuousBatcher:
         self.finished: list[Request] = []
 
     # ------------------------------------------------------------ API
+    @staticmethod
+    def required_len(n_requests: int, slots: int, prompt_len: int,
+                     max_new: int) -> int:
+        """Cache length covering every admission wave.
+
+        The cache position is a shared high-water mark, so requests
+        beyond the slot count are served in waves and the cache must
+        cover all of them — an undersized ``max_len`` silently retires
+        late requests with truncated (possibly empty) output.
+        """
+        waves = -(-n_requests // slots)
+        return waves * (prompt_len + max_new) + 1
+
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
@@ -82,7 +110,7 @@ class ContinuousBatcher:
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
                 req = self.queue.popleft()
-                req._cursor = 0          # prompt feed cursor
+                req._cursor = 0          # reset on (re-)admission
                 self.slots[i] = req
                 self.tokens = self.tokens.at[i, 0].set(req.prompt[0])
 
@@ -120,4 +148,4 @@ class ContinuousBatcher:
             if not self.queue and all(s is None for s in self.slots):
                 break
             self.step()
-        return self.finished
+        return list(self.finished)    # snapshot: later runs keep appending

@@ -23,6 +23,17 @@ def test_ddim_timesteps():
     assert len(ts) == 4 and int(ts[0]) == 999
 
 
+def test_ddim_timesteps_clamped_above_num_train():
+    """num_steps > num_train used to make the stride 0 and crash."""
+    ts = np.asarray(S.ddim_timesteps(2000, 1000))
+    assert len(ts) == 1000 and len(np.unique(ts)) == 1000
+    assert ts[0] == 999 and ts[-1] == 0
+    for n in (1, 7, 999, 1000):
+        tsn = np.asarray(S.ddim_timesteps(n, 1000))
+        assert len(tsn) == n and len(np.unique(tsn)) == n
+        assert (np.diff(tsn) < 0).all() and tsn[0] == 999
+
+
 @pytest.mark.parametrize("policy", ["none", "q8_0", "q3_k", "q3_k_imax"])
 def test_generate_finite_all_policies(policy):
     params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)

@@ -1,0 +1,187 @@
+"""Engine API tests: protocol conformance, sampler registry, CFG,
+co-batch determinism, compile-cache / trace-count behavior."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.diffusion import schedule as S
+from repro.engine import (TINY_SD, DiffusionEngine, Engine, GenerateRequest,
+                          build_denoise, get_sampler, init_pipeline,
+                          list_samplers, steps_bucket)
+from repro.models.transformer import init_lm
+from repro.serving.scheduler import ContinuousBatcher
+from repro.serving.scheduler import Request as LMRequest
+
+LM_CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                     head_dim=16)
+
+
+@pytest.fixture(scope="module")
+def sd_params():
+    return init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 77), 0, 512)
+
+
+def f32(x):
+    return np.asarray(jnp.asarray(x, jnp.float32))
+
+
+# ----------------------------------------------------------- protocol
+def test_both_engines_satisfy_protocol(sd_params):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    assert isinstance(eng, Engine)
+    lm = ContinuousBatcher(init_lm(jax.random.PRNGKey(0), LM_CFG), LM_CFG,
+                           slots=1, max_len=8)
+    assert isinstance(lm, Engine)
+
+
+def test_lm_request_cursor_is_declared_field():
+    """_cursor is a real dataclass field: copies/replays keep it."""
+    r = LMRequest(rid=0, prompt=[1, 2, 3])
+    assert r._cursor == 0
+    assert dataclasses.replace(r)._cursor == 0
+    assert "_cursor" in {f.name for f in dataclasses.fields(LMRequest)}
+
+
+# ----------------------------------------------------------- registry
+def test_registry_has_all_paper_samplers():
+    assert {"ddim", "euler", "turbo"} <= set(list_samplers())
+
+
+def test_unknown_sampler_fails_fast(sd_params):
+    with pytest.raises(KeyError, match="unknown sampler"):
+        get_sampler("dpm++")
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    with pytest.raises(KeyError):
+        eng.submit(GenerateRequest(rid=0, tokens=[0] * 77, sampler="nope"))
+
+
+def test_steps_bucket_pow2():
+    assert [steps_bucket(s) for s in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+
+
+def test_euler_one_step_matches_turbo_x0(sd_params, toks):
+    """The orphaned euler_sigmas/euler_step path, wired through the
+    registry, must reproduce turbo_step's x0 estimate in one step."""
+    sched = S.NoiseSchedule()
+    noise = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 8, 4),
+                              jnp.float32)
+    g = jnp.ones((1,), jnp.float32)
+    neg = jnp.zeros_like(toks[:1])
+    x0 = {}
+    for name in ("turbo", "euler"):
+        fn = build_denoise(TINY_SD, name, False, decode=False)
+        plan = get_sampler(name).plan(sched, 1, 1)
+        x0[name] = f32(fn(sd_params, toks[:1], neg, g, noise, plan))
+    np.testing.assert_allclose(x0["euler"], x0["turbo"],
+                               atol=1e-3, rtol=1e-3)
+
+
+# ------------------------------------------------------------- engine
+def test_engine_retires_all_requests_across_buckets(sd_params, toks):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    mix = [("turbo", 1), ("ddim", 2), ("ddim", 2), ("euler", 2),
+           ("ddim", 2)]
+    for i, (sampler, steps) in enumerate(mix):
+        eng.submit(GenerateRequest(rid=i, tokens=toks[i % 2],
+                                   sampler=sampler, steps=steps, seed=i))
+    res = eng.run()
+    assert sorted(r.rid for r in res) == list(range(5))
+    for r in res:
+        assert r.image.shape == (16, 16, 3)
+        assert bool(jnp.isfinite(r.image.astype(jnp.float32)).all())
+    assert eng.step() == 0          # queue drained
+
+
+def test_same_seed_bit_identical_alone_vs_cobatched(sd_params, toks):
+    req = GenerateRequest(rid=0, tokens=toks[0], sampler="ddim", steps=2,
+                          seed=123)
+    e1 = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    e1.submit(req)
+    solo = e1.run()[0].image
+    e2 = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    e2.submit(dataclasses.replace(req, rid=5))
+    e2.submit(GenerateRequest(rid=6, tokens=toks[1], sampler="ddim",
+                              steps=2, seed=999))
+    cob = next(r.image for r in e2.run() if r.rid == 5)
+    np.testing.assert_array_equal(f32(solo), f32(cob))
+
+
+def test_compile_cache_no_retrace(sd_params, toks):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="ddim",
+                               steps=3, seed=1))
+    eng.run()
+    assert eng.traces == 1          # the whole 3-step loop is one trace
+    # Same (sampler, steps, shape): cache hit, no retrace.
+    eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="ddim",
+                               steps=3, seed=2))
+    eng.run()
+    assert eng.traces == 1
+    # steps=4 shares the pow2 steps-bucket of 3: still no retrace.
+    eng.submit(GenerateRequest(rid=2, tokens=toks[0], sampler="ddim",
+                               steps=4, seed=3))
+    eng.run()
+    assert eng.traces == 1
+    # A different sampler compiles exactly once more.
+    eng.submit(GenerateRequest(rid=3, tokens=toks[0], sampler="euler",
+                               steps=4, seed=4))
+    eng.run()
+    assert eng.traces == 2
+
+
+def test_turbo_normalizes_steps(sd_params, toks):
+    """Turbo declares fixed_steps=1: a steps=8 turbo request reuses the
+    1-step program (no extra compile, no padded UNet evals) and the
+    result reports the steps actually run."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="turbo",
+                               steps=1, seed=1))
+    eng.run()
+    eng.submit(GenerateRequest(rid=1, tokens=toks[0], sampler="turbo",
+                               steps=8, seed=1))
+    res = eng.run()
+    assert eng.traces == 1
+    assert res[-1].steps == 1
+    np.testing.assert_array_equal(f32(res[0].image), f32(res[1].image))
+
+
+def test_per_request_guidance_scale_applies(sd_params, toks):
+    """Two co-batched CFG requests differing only in guidance scale
+    must produce different images (per-request scale vector works)."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    neg = jnp.zeros((77,), jnp.int32)
+    for rid, g in ((0, 1.5), (1, 7.5)):
+        eng.submit(GenerateRequest(rid=rid, tokens=toks[0], neg_tokens=neg,
+                                   guidance_scale=g, sampler="turbo",
+                                   steps=1, seed=42))
+    res = eng.run()
+    assert eng.traces == 1          # one CFG program, scales batched
+    imgs = {r.rid: f32(r.image) for r in res}
+    assert np.isfinite(imgs[0]).all() and np.isfinite(imgs[1]).all()
+    assert np.abs(imgs[0] - imgs[1]).max() > 1e-4
+
+
+def test_guided_and_unguided_programs_agree_at_scale_one(sd_params, toks):
+    """gscale=1 reduces CFG to the conditional branch: the guided
+    program must match the plain one up to fp reassociation."""
+    sched = S.NoiseSchedule()
+    noise = jax.random.normal(jax.random.PRNGKey(9), (1, 8, 8, 4),
+                              jnp.float32)
+    g = jnp.ones((1,), jnp.float32)
+    neg = jnp.zeros_like(toks[:1])
+    plan = get_sampler("ddim").plan(sched, 2, 2)
+    out = [f32(build_denoise(TINY_SD, "ddim", use_cfg, decode=False)(
+        sd_params, toks[:1], neg, g, noise, plan))
+        for use_cfg in (False, True)]
+    np.testing.assert_allclose(out[0], out[1], atol=5e-2, rtol=5e-2)
