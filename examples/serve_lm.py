@@ -4,10 +4,11 @@ Demonstrates the quantized-offload serving path the paper targets:
 weights quantized per policy, then requests submitted to the
 ``ContinuousBatcher`` — the LM engine behind the same
 ``submit()``/``step()``/``run()`` protocol as ``DiffusionEngine``.
-Finished requests free their slot mid-flight and queued ones are
-admitted, so the jitted decode step always runs at the fixed batch
-shape (KV/SSM cache machinery: ring-buffer SWA, recurrent states,
-cross-KV).
+Finished requests free their slot mid-flight (their cache blocks
+return to the paged pool) and queued ones are admitted with chunked
+prefill, so the jitted decode step always runs at the fixed batch
+shape (KV/SSM cache machinery: paged block tables, per-slot positions,
+recurrent states, cross-KV).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-1.3b \
           [--policy q3_k] [--slots 4] [--requests 8] [--gen 32]
@@ -22,7 +23,7 @@ from repro.configs import get_config, reduced, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
 from repro.models.transformer import init_lm
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request
 from repro.train.serve_step import make_prefill
 
 
@@ -63,6 +64,9 @@ def main():
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
     print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s incl. compile) on {args.slots} slots")
+    print(f"quanta: {engine.prefill_quanta} prefill + "
+          f"{engine.decode_quanta} decode "
+          f"({engine.runtime.allocated_blocks} cache blocks live)")
     print("first request out:", done[0].out[:12])
     # Last-position prefill logits must agree with the decode path.
     pl = jax.jit(make_prefill(cfg))(qp, inp)

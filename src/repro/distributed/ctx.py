@@ -134,5 +134,9 @@ def kv_cache(x):  # (B, Hkv, C, hd) per-layer cache inside the scan
     return constrain(x, {0: "dp", 2: "tp"})
 
 
+def paged_kv(x):  # (NB, Hkv, bs, hd) paged block pool: shard kv heads
+    return constrain(x, {1: "tp"})
+
+
 def decode_logits(x):  # (B, Hkv, G, C) decode attention logits
     return constrain(x, {0: "dp", 3: "tp"})

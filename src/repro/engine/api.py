@@ -61,12 +61,22 @@ class GenerateRequest:
 
 @dataclasses.dataclass
 class GenerateResult:
-    """Finished request: decoded image plus the settings that made it."""
+    """Finished request: decoded image plus the settings that made it.
+
+    ``prefill_steps``/``decode_steps`` report the scheduling quanta the
+    request consumed — the same accounting the LM path keeps on
+    ``serving.scheduler.Request``, so mixed-workload hosts can bill and
+    load-balance both engines uniformly.  For diffusion, ingestion is
+    free (prompts ride into the denoise program) and every denoise step
+    is a decode quantum.
+    """
     rid: int
     image: jax.Array                # (H, W, 3) in [-1, 1]
     sampler: str
     steps: int
     seed: int
+    prefill_steps: int = 0          # quanta spent ingesting the prompt
+    decode_steps: int = 0           # quanta spent generating
 
 
 @runtime_checkable

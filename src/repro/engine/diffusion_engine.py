@@ -248,4 +248,4 @@ class DiffusionEngine:
         for i, r in enumerate(reqs):
             self.finished.append(GenerateResult(
                 rid=r.rid, image=imgs[i], sampler=sampler_name,
-                steps=steps, seed=r.seed))
+                steps=steps, seed=r.seed, decode_steps=steps))

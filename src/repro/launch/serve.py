@@ -5,8 +5,9 @@
 
 Requests flow through the ``ContinuousBatcher`` engine (the same
 ``submit()``/``step()``/``run()`` protocol as the diffusion engine):
-a fixed slot pool over the batched decode cache, mid-flight admission,
-EOS/max-length retirement.  Runs reduced configs on CPU; on TPU the
+a fixed slot pool over the paged KV block pool, chunked-prefill
+admission mid-flight, EOS/max-length retirement freeing blocks back to
+the pool.  Runs reduced configs on CPU; on TPU the
 same path serves full configs with TP-only weight sharding (no FSDP —
 see DESIGN.md) and the Pallas fused-dequant kernels.
 """
@@ -22,7 +23,7 @@ from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
 from repro.models.transformer import init_lm
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving import ContinuousBatcher, Request
 
 
 def main() -> None:
@@ -60,7 +61,9 @@ def main() -> None:
     done = engine.run()
     dt = time.time() - t0
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
-    print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s")
+    print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({engine.prefill_quanta} prefill + {engine.decode_quanta} "
+          f"decode quanta)")
     print("first request:", done[0].prompt + done[0].out)
 
 

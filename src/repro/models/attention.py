@@ -49,6 +49,28 @@ def init_kv_cache(batch: int, cfg: ModelConfig, max_len: int,
                    jnp.zeros(shape, jnp.bfloat16), None, None)
 
 
+def init_paged_kv_cache(num_blocks: int, cfg: ModelConfig, block_size: int,
+                        quantized: bool = False) -> KVCache:
+    """Physical block pool for the paged serving runtime.
+
+    k/v: (num_blocks, Hkv, block_size, hd).  Block 0 is the reserved
+    null block: idle slots point their table at it, so their (discarded)
+    writes never touch live data.  Logical per-request capacity and the
+    slot -> block mapping live host-side in ``serving.kvcache``.
+    Sliding-window configs keep full positions here (masking enforces
+    the window); the ring-buffer compaction only applies to the
+    contiguous layout.
+    """
+    shape = (num_blocks, cfg.num_kv_heads, block_size, cfg.hd)
+    if quantized:
+        sshape = (num_blocks, cfg.num_kv_heads, block_size, cfg.hd // 32)
+        return KVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                       jnp.zeros(sshape, jnp.float16),
+                       jnp.zeros(sshape, jnp.float16))
+    return KVCache(jnp.zeros(shape, jnp.bfloat16),
+                   jnp.zeros(shape, jnp.bfloat16), None, None)
+
+
 def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per-32-block int8 quantization along head_dim."""
     from repro.core import quant
@@ -135,22 +157,10 @@ def attention_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
 
 # ------------------------------------------------------------- decode
 
-def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
-                     pos: jax.Array, cache: KVCache,
-                     *, rope: bool = True) -> tuple[jax.Array, KVCache]:
-    """One-token decode. x: (B, 1, d); pos: scalar int32 (tokens so far).
+def _update_read_contiguous(cfg: ModelConfig, cache: KVCache, k, v, pos):
+    """Legacy layout: per-slot contiguous rows, one shared scalar ``pos``.
 
-    Returns (out (B, 1, d), updated cache).
-    """
-    b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
-    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
-    k = _split_heads(apply_linear(p["wk"], x), cfg.num_kv_heads)
-    v = _split_heads(apply_linear(p["wv"], x), cfg.num_kv_heads)
-    if rope:
-        q = _rope(cfg, q, positions)
-        k = _rope(cfg, k, positions)
-
+    Returns (new_cache, keys, vals, valid (B|1, C))."""
     cap = cache.capacity
     if cfg.sliding_window is not None:
         slot = pos % cap                      # ring buffer
@@ -176,6 +186,131 @@ def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
             cc(jax.lax.dynamic_update_slice(cache.v, v, (0, 0, slot, 0))),
             None, None)
         keys, vals = new.k, new.v
+    # Validity: slot c holds a token iff c < pos+1 (full) or within the
+    # last `window` tokens (ring buffer: all filled slots are valid).
+    idx = jnp.arange(cap)
+    valid = idx <= jnp.minimum(pos, cap - 1) \
+        if cfg.sliding_window is None else idx < jnp.minimum(pos + 1, cap)
+    return new, keys, vals, valid[None, :]
+
+
+def _update_read_rowwise(cfg: ModelConfig, cache: KVCache, k, v, pos_vec):
+    """Contiguous layout with *per-row* positions ((B,) int32)."""
+    cap = cache.capacity
+    b = k.shape[0]
+    rows = jnp.arange(b)
+    if cfg.sliding_window is not None:
+        slot = pos_vec % cap
+    else:
+        slot = jnp.minimum(pos_vec, cap - 1)
+    quantized = cache.k_scale is not None
+    cc = ctx.kv_cache
+
+    def scatter(buf, upd):
+        # upd: (B, Hkv, 1, d*) -> write row r at column slot[r].
+        return cc(buf.at[rows, :, slot].set(upd[:, :, 0]))
+
+    if quantized:
+        kq, kd = _quantize_kv(k)
+        vq, vd = _quantize_kv(v)
+        new = KVCache(scatter(cache.k, kq), scatter(cache.v, vq),
+                      scatter(cache.k_scale, kd), scatter(cache.v_scale, vd))
+        keys = cc(_dequantize_kv(new.k, new.k_scale))
+        vals = cc(_dequantize_kv(new.v, new.v_scale))
+    else:
+        new = KVCache(scatter(cache.k, k), scatter(cache.v, v), None, None)
+        keys, vals = new.k, new.v
+    idx = jnp.arange(cap)[None, :]
+    if cfg.sliding_window is None:
+        valid = idx <= jnp.minimum(pos_vec, cap - 1)[:, None]
+    else:
+        valid = idx < jnp.minimum(pos_vec + 1, cap)[:, None]
+    return new, keys, vals, valid
+
+
+def _update_read_paged(cfg: ModelConfig, cache: KVCache, k, v, pos_vec,
+                       block_tables):
+    """Paged layout: pool (NB, Hkv, bs, hd) + per-row block tables.
+
+    Row r writes its token at block ``tables[r, pos // bs]`` offset
+    ``pos % bs`` and attends to the gathered logical window
+    (MB * bs positions) with per-row masking ``idx <= pos`` (AND the
+    sliding window, if configured — paged SWA stores full positions).
+    """
+    b = k.shape[0]
+    bs = cache.k.shape[2]
+    mb = block_tables.shape[1]
+    rows = jnp.arange(b)
+    bid = block_tables[rows, pos_vec // bs]           # (B,) physical block
+    off = pos_vec % bs
+    cc = ctx.paged_kv
+    quantized = cache.k_scale is not None
+
+    def scatter(pool, upd):
+        return cc(pool.at[bid, :, off].set(upd[:, :, 0]))
+
+    def gather(pool):
+        # (B, MB, Hkv, bs, d*) -> (B, Hkv, MB*bs, d*)
+        g = pool[block_tables]
+        g = g.transpose(0, 2, 1, 3, 4)
+        return g.reshape(b, g.shape[1], mb * bs, g.shape[-1])
+
+    if quantized:
+        kq, kd = _quantize_kv(k)
+        vq, vd = _quantize_kv(v)
+        new = KVCache(scatter(cache.k, kq), scatter(cache.v, vq),
+                      scatter(cache.k_scale, kd), scatter(cache.v_scale, vd))
+        keys = _dequantize_kv(gather(new.k), gather(new.k_scale))
+        vals = _dequantize_kv(gather(new.v), gather(new.v_scale))
+    else:
+        new = KVCache(scatter(cache.k, k), scatter(cache.v, v), None, None)
+        keys, vals = gather(new.k), gather(new.v)
+    idx = jnp.arange(mb * bs)[None, :]
+    valid = idx <= pos_vec[:, None]
+    if cfg.sliding_window is not None:
+        valid &= idx > (pos_vec[:, None] - cfg.sliding_window)
+    # Pool blocks are recycled, not zeroed: a masked position may hold a
+    # previous occupant's bytes.  The -inf mask already zeroes its
+    # probability, but 0 * NaN = NaN, so neutralize the values too —
+    # masked contributions are exactly 0.0 either way.
+    vals = jnp.where(valid[:, None, :, None], vals, 0)
+    return new, keys, vals, valid
+
+
+def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                     pos: jax.Array, cache: KVCache,
+                     *, rope: bool = True,
+                     block_tables: jax.Array | None = None
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, d); pos: scalar int32 (tokens so far,
+    shared by all rows) or (B,) int32 per-slot positions.
+
+    ``block_tables`` (B, MB) int32 switches the cache to the paged
+    block-pool layout (see :func:`init_paged_kv_cache`); it requires
+    per-slot positions.  Returns (out (B, 1, d), updated cache).
+    """
+    b = x.shape[0]
+    per_row = jnp.ndim(pos) > 0
+    pos_vec = (jnp.asarray(pos, jnp.int32) if per_row
+               else jnp.full((b,), pos, jnp.int32))
+    positions = pos_vec[:, None]
+    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
+    k = _split_heads(apply_linear(p["wk"], x), cfg.num_kv_heads)
+    v = _split_heads(apply_linear(p["wv"], x), cfg.num_kv_heads)
+    if rope:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+
+    if block_tables is not None:
+        assert per_row, "paged decode requires per-slot positions"
+        new, keys, vals, valid = _update_read_paged(cfg, cache, k, v,
+                                                    pos_vec, block_tables)
+    elif per_row:
+        new, keys, vals, valid = _update_read_rowwise(cfg, cache, k, v,
+                                                      pos_vec)
+    else:
+        new, keys, vals, valid = _update_read_contiguous(cfg, cache, k, v,
+                                                         pos)
 
     # GQA: fold query heads into groups over kv heads.  bf16 operands
     # with f32 accumulation (no materialized f32 cache copy).
@@ -184,12 +319,7 @@ def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     logits = ctx.decode_logits(
         jnp.einsum("bhgd,bhcd->bhgc", qg.astype(keys.dtype), keys,
                    preferred_element_type=jnp.float32)) * (cfg.hd ** -0.5)
-    # Validity: slot c holds a token iff c < pos+1 (full) or within the
-    # last `window` tokens (ring buffer: all filled slots are valid).
-    idx = jnp.arange(cap)
-    valid = idx <= jnp.minimum(pos, cap - 1) \
-        if cfg.sliding_window is None else idx < jnp.minimum(pos + 1, cap)
-    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgc,bhcd->bhgd", probs.astype(vals.dtype), vals,
                      preferred_element_type=jnp.float32)

@@ -271,11 +271,22 @@ class LayerCache(NamedTuple):
 
 def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
                *, quantized_kv: bool = False,
-               enc_embeds: jax.Array | None = None) -> Any:
-    """Stacked per-period cache pytree (+ precomputed cross KV)."""
+               enc_embeds: jax.Array | None = None,
+               block_size: int | None = None,
+               num_blocks: int | None = None) -> Any:
+    """Stacked per-period cache pytree (+ precomputed cross KV).
+
+    With ``block_size``/``num_blocks`` set, self-attention KV uses the
+    *paged* block-pool layout (one (num_blocks, Hkv, block_size, hd)
+    pool per attn layer; slot -> block mapping lives host-side in
+    ``serving.kvcache``).  Recurrent (SSM / xLSTM) states and the
+    precomputed cross KV stay slot-indexed either way.
+    """
     kinds = _period_kinds(cfg)
     plen = len(kinds)
     n_periods = cfg.num_layers // plen
+    if (block_size is None) != (num_blocks is None):
+        raise ValueError("paged cache needs both block_size and num_blocks")
 
     enc_out = None
     if cfg.is_enc_dec:
@@ -285,8 +296,13 @@ def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
         kind = kinds[j]
         kv = mamba = mlstm = slstm = ck = cv = ()
         if kind == "attn":
-            kv = attn_mod.init_kv_cache(batch, cfg, max_len,
-                                        quantized=quantized_kv)
+            if block_size is not None:
+                kv = attn_mod.init_paged_kv_cache(num_blocks, cfg,
+                                                  block_size,
+                                                  quantized=quantized_kv)
+            else:
+                kv = attn_mod.init_kv_cache(batch, cfg, max_len,
+                                            quantized=quantized_kv)
         elif kind == "mamba":
             mamba = ssm_mod.init_mamba_state(batch, cfg)
         elif kind == "mlstm":
@@ -314,12 +330,13 @@ def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _block_decode(p: dict, cfg: ModelConfig, kind: str, x, pos,
-                  cache: LayerCache):
+                  cache: LayerCache, block_tables=None):
     h = _apply_norm(cfg, p["norm1"], x)
     rope = cfg.pos_embed == "rope"
     if kind == "attn":
         y, kv = attn_mod.attention_decode(p["attn"], cfg, h, pos, cache.kv,
-                                          rope=rope)
+                                          rope=rope,
+                                          block_tables=block_tables)
         cache = cache._replace(kv=kv)
     elif kind == "mamba":
         y, st = ssm_mod.mamba_decode(p["mamba"], cfg, h, cache.mamba)
@@ -341,20 +358,31 @@ def _block_decode(p: dict, cfg: ModelConfig, kind: str, x, pos,
 
 
 def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                   pos: jax.Array, cache: Any
+                   pos: jax.Array, cache: Any, *,
+                   block_tables: jax.Array | None = None
                    ) -> tuple[jax.Array, Any]:
-    """token: (B, 1) int32; pos: scalar int32 -> (logits (B,1,V), cache)."""
+    """token: (B, 1) int32; pos: scalar int32 shared by all rows, or
+    (B,) int32 per-slot positions -> (logits (B,1,V), cache).
+
+    ``block_tables`` (B, MB) int32 selects the paged KV layout (see
+    :func:`init_cache`); it requires per-slot positions.
+    """
     kinds = _period_kinds(cfg)
     x = L.apply_embedding(params["embed"], token)
     if cfg.pos_embed == "sinusoidal":
-        x = x + _sinusoidal(1, cfg.d_model, offset=pos)[None]
+        if jnp.ndim(pos) > 0:        # per-row absolute offsets
+            x = x + jax.vmap(
+                lambda o: _sinusoidal(1, cfg.d_model, offset=o))(pos)
+        else:
+            x = x + _sinusoidal(1, cfg.d_model, offset=pos)[None]
 
     def period_body(x, scanned):
         period_params, period_cache = scanned
         new_caches = []
         for j, kind in enumerate(kinds):
             x, c = _block_decode(period_params[j], cfg, kind, x, pos,
-                                 period_cache[j])
+                                 period_cache[j],
+                                 block_tables=block_tables)
             new_caches.append(c)
             fk = _ffn_kind(cfg, j)
             if fk == "mlp":
@@ -375,3 +403,77 @@ def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                                            role="lm_head")
     logits = L.apply_unembed(head, x)
     return logits, new_cache
+
+
+def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                     pos0: jax.Array, cache: Any, *,
+                     block_tables: jax.Array | None = None
+                     ) -> tuple[jax.Array, Any]:
+    """Teacher-forced prefill of one chunk: tokens (B, C) are fed at
+    positions ``pos0 .. pos0+C-1`` via a ``lax.scan`` of
+    :func:`lm_decode_step`, so the written cache (and the returned
+    logits of the *last* position) are bit-identical to feeding the
+    chunk through single-token decode — that equivalence is what makes
+    chunked admission exact for recurrent states and quantized KV alike.
+    One compiled program per chunk length; pos0: (B,) int32.
+    """
+    def body(carry, tok_col):
+        pos, cache = carry
+        logits, cache = lm_decode_step(params, cfg, tok_col[:, None], pos,
+                                       cache, block_tables=block_tables)
+        return (pos + 1, cache), logits
+
+    (_, cache), logits = jax.lax.scan(body, (pos0, cache), tokens.T)
+    return logits[-1], cache
+
+
+# ---------------------------------------------------- slot cache surgery
+# Host-side serving (serving.kvcache / serving.scheduler) runs chunked
+# prefill at batch 1 for the slot being admitted.  These helpers carve a
+# batch-1 view out of the slot-batched cache: paged KV pools are shared
+# (the block table already isolates the slot), while recurrent states
+# and cross KV are sliced / written back by row.
+
+def _slot_rows(sub, fn):
+    return jax.tree.map(fn, sub)
+
+
+def cache_slot_view(cache: Any, slot: jax.Array) -> Any:
+    """Batch-1 view of ``slot``'s rows (paged KV pools pass through)."""
+    def take(x):
+        return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1)
+    return [c._replace(mamba=_slot_rows(c.mamba, take),
+                       mlstm=_slot_rows(c.mlstm, take),
+                       slstm=_slot_rows(c.slstm, take),
+                       cross_k=_slot_rows(c.cross_k, take),
+                       cross_v=_slot_rows(c.cross_v, take))
+            for c in cache]
+
+
+def cache_slot_merge(cache: Any, local: Any, slot: jax.Array) -> Any:
+    """Fold a batch-1 view back: KV pools are taken from ``local``
+    (updated in place by paged writes), recurrent rows are scattered
+    back at ``slot``; cross KV is read-only during decode."""
+    def put(full, sub):
+        return jax.tree.map(
+            lambda f, s: jax.lax.dynamic_update_slice_in_dim(f, s, slot,
+                                                             axis=1),
+            full, sub)
+    return [c._replace(kv=l.kv,
+                       mamba=put(c.mamba, l.mamba),
+                       mlstm=put(c.mlstm, l.mlstm),
+                       slstm=put(c.slstm, l.slstm))
+            for c, l in zip(cache, local)]
+
+
+def cache_slot_reset(cache: Any, slot: jax.Array) -> Any:
+    """Zero ``slot``'s recurrent (SSM / xLSTM) states — a freshly
+    admitted request must not inherit the previous occupant's state.
+    Paged KV needs no reset: the allocator hands out whole blocks and
+    per-row masking never reads past the slot's own positions."""
+    def zero(x):
+        return x.at[:, slot].set(jnp.zeros_like(x[:, :1])[:, 0])
+    return [c._replace(mamba=_slot_rows(c.mamba, zero),
+                       mlstm=_slot_rows(c.mlstm, zero),
+                       slstm=_slot_rows(c.slstm, zero))
+            for c in cache]

@@ -1,0 +1,9 @@
+"""LM serving: paged KV-cache runtime + continuous-batching scheduler."""
+from repro.serving.kvcache import (NULL_BLOCK, BlockAllocator, PagedKVRuntime,
+                                   PrefixCache)
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = [
+    "NULL_BLOCK", "BlockAllocator", "PagedKVRuntime", "PrefixCache",
+    "ContinuousBatcher", "Request",
+]

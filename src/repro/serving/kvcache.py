@@ -1,0 +1,275 @@
+"""Block-paged KV-cache runtime for continuous-batching LM serving.
+
+The paper's companion LLM study makes KV-cache movement the dominant
+serving cost; the host's job (the paper's CPU role) is to keep the
+accelerator's cache footprint at the *logical* working set, not a
+preallocated high-water mark.  This module is that host-side runtime —
+a vLLM-style paged allocator scaled to this repo:
+
+* **Physical pool** — every self-attention layer owns a
+  ``(num_blocks, Hkv, block_size, hd)`` pool (see
+  ``models.attention.init_paged_kv_cache``).  Block 0 is the reserved
+  *null block*: idle batch rows point their table at it so the fixed-
+  shape decode step can scatter harmlessly.
+* **:class:`BlockAllocator`** — a free-list with per-block refcounts;
+  refcount > 1 means the block is shared read-only between slots
+  and/or the prefix cache.
+* **:class:`PrefixCache`** — hash-chained full prompt blocks retained
+  at retirement; a later request with the same prompt prefix adopts
+  the blocks (refcount bump) and skips recomputing their KV.  Entries
+  are LRU-evicted under pool pressure, so retention never blocks
+  admission.
+* **:class:`PagedKVRuntime`** — per-slot position vectors and block
+  tables, admission (``admit``), retirement (``release``), and a
+  copy-on-write guard (``ensure_writable``) so a slot never mutates a
+  block another holder can still read.
+
+The runtime is pure host Python over integer state — device arrays
+only appear through the ``copy_block`` callback a scheduler installs
+for CoW — which keeps it unit-testable without a model.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Callable, Sequence
+
+NULL_BLOCK = 0
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class BlockAllocator:
+    """Free-list allocator with refcounts over ``num_blocks`` physical
+    blocks.  Block 0 (the null block) is never handed out."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one allocatable block")
+        self.num_blocks = num_blocks
+        self._free: deque[int] = deque(range(1, num_blocks))
+        self._refs: dict[int, int] = {}
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def refcount(self, bid: int) -> int:
+        return self._refs.get(bid, 0)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Atomically allocate ``n`` blocks (refcount 1), or None."""
+        if n > len(self._free):
+            return None
+        out = [self._free.popleft() for _ in range(n)]
+        for bid in out:
+            self._refs[bid] = 1
+        return out
+
+    def share(self, bid: int) -> None:
+        """Add a reader to an allocated block."""
+        if bid == NULL_BLOCK:
+            return
+        if bid not in self._refs:
+            raise ValueError(f"share of unallocated block {bid}")
+        self._refs[bid] += 1
+
+    def release(self, bid: int) -> bool:
+        """Drop one reference; True when the block returned to the
+        free list."""
+        if bid == NULL_BLOCK:
+            return False
+        n = self._refs.get(bid)
+        if n is None:
+            raise ValueError(f"release of unallocated block {bid}")
+        if n > 1:
+            self._refs[bid] = n - 1
+            return False
+        del self._refs[bid]
+        self._free.append(bid)
+        return True
+
+
+class PrefixCache:
+    """Hash-chained prompt prefix -> physical block index.
+
+    Keys chain the parent hash with the block's token tuple, so a hit
+    for block *i* implies blocks ``0..i-1`` matched too.  The cache
+    holds one reference per entry; ``evict_lru`` drops the
+    least-recently-used entry to relieve pool pressure."""
+
+    def __init__(self, allocator: BlockAllocator, block_size: int):
+        self.alloc = allocator
+        self.block_size = block_size
+        self._entries: OrderedDict[int, int] = OrderedDict()  # key -> bid
+        self.hits = 0          # blocks adopted by admissions
+        self.insertions = 0
+
+    @staticmethod
+    def _chain(parent: int, toks: tuple) -> int:
+        return hash((parent, toks))
+
+    def _keys(self, prompt: Sequence[int], n_blocks: int) -> list[int]:
+        keys, parent = [], 0
+        for i in range(n_blocks):
+            toks = tuple(prompt[i * self.block_size:
+                                (i + 1) * self.block_size])
+            parent = self._chain(parent, toks)
+            keys.append(parent)
+        return keys
+
+    def match(self, prompt: Sequence[int], max_blocks: int) -> list[int]:
+        """Longest chain of cached full blocks (<= max_blocks); bumps
+        each matched block's refcount (caller owns the references)."""
+        out = []
+        for key in self._keys(prompt, max_blocks):
+            bid = self._entries.get(key)
+            if bid is None:
+                break
+            self._entries.move_to_end(key)
+            self.alloc.share(bid)
+            out.append(bid)
+        self.hits += len(out)
+        return out
+
+    def insert(self, prompt: Sequence[int], table: Sequence[int]) -> None:
+        """Retain the prompt's *full* blocks (immutable after prefill:
+        decode writes land strictly beyond them)."""
+        n_full = len(prompt) // self.block_size
+        for key, bid in zip(self._keys(prompt, n_full), table):
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            self.alloc.share(bid)
+            self._entries[key] = bid
+            self.insertions += 1
+
+    def evict_lru(self) -> bool:
+        if not self._entries:
+            return False
+        _, bid = self._entries.popitem(last=False)
+        self.alloc.release(bid)
+        return True
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class PagedKVRuntime:
+    """Per-slot positions + block tables over a shared physical pool.
+
+    ``max_len`` is the *per-request* logical capacity (positions
+    ``0..max_len-1``); the pool defaults to exactly one block span per
+    slot plus the null block, with ``extra_blocks`` headroom for
+    prefix retention.  All state is host-side; the device cache pytree
+    is built separately with matching ``(num_blocks, block_size)``.
+    """
+
+    def __init__(self, slots: int, max_len: int, block_size: int = 16, *,
+                 num_blocks: int | None = None, extra_blocks: int = 0,
+                 prefix_share: bool = False,
+                 copy_block: Callable[[int, int], None] | None = None):
+        self.slots = slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.blocks_per_slot = cdiv(max_len, block_size)
+        self.num_blocks = (num_blocks if num_blocks is not None
+                           else slots * self.blocks_per_slot + 1
+                           + extra_blocks)
+        self.alloc = BlockAllocator(self.num_blocks)
+        self.prefix: PrefixCache | None = (
+            PrefixCache(self.alloc, block_size) if prefix_share else None)
+        self.copy_block = copy_block      # device CoW hook (src, dst)
+        self.pos = [0] * slots            # tokens cached per slot
+        self.tables = [[NULL_BLOCK] * self.blocks_per_slot
+                       for _ in range(slots)]
+        self._owned = [0] * slots         # blocks in use (incl. shared)
+        self.cow_copies = 0
+
+    # -------------------------------------------------------- admission
+    def _alloc_with_eviction(self, n: int) -> list[int] | None:
+        while self.alloc.num_free < n:
+            if self.prefix is None or not self.prefix.evict_lru():
+                return None
+        return self.alloc.alloc(n)
+
+    def admit(self, slot: int, prompt: Sequence[int],
+              max_new: int) -> int | None:
+        """Reserve blocks for ``prompt`` + ``max_new`` generated tokens
+        and return the number of prompt tokens whose KV was adopted
+        from the prefix cache (0 without a hit).  None if the pool
+        cannot cover the request right now (caller requeues)."""
+        if self._owned[slot]:
+            raise RuntimeError(f"slot {slot} already admitted")
+        total = min(len(prompt) + max_new - 1, self.max_len)
+        need = cdiv(total, self.block_size)
+        shared: list[int] = []
+        if self.prefix is not None:
+            # Full blocks only, and never the whole prompt: the last
+            # prompt token must be recomputed to produce first logits.
+            max_shared = min(need, (len(prompt) - 1) // self.block_size)
+            shared = self.prefix.match(prompt, max_shared)
+        fresh = self._alloc_with_eviction(need - len(shared))
+        if fresh is None:
+            for bid in shared:
+                self.alloc.release(bid)
+            if self.prefix is not None:  # adoption didn't happen: keep
+                self.prefix.hits -= len(shared)   # the stat honest
+            return None
+        table = shared + fresh
+        self.tables[slot] = (table
+                             + [NULL_BLOCK] * (self.blocks_per_slot
+                                               - len(table)))
+        self._owned[slot] = len(table)
+        n_reused = len(shared) * self.block_size
+        self.pos[slot] = n_reused
+        return n_reused
+
+    # ------------------------------------------------------ write guard
+    def ensure_writable(self, slot: int, pos: int) -> int:
+        """Copy-on-write guard: the block holding ``pos`` must have
+        refcount 1 before the device step scatters into it.  Under
+        full-block-only sharing this never triggers (shared blocks sit
+        strictly below every write position) but the runtime stays
+        correct under any future sharing policy.  Returns the physical
+        block id the write will land in."""
+        bi = pos // self.block_size
+        bid = self.tables[slot][bi]
+        if self.alloc.refcount(bid) <= 1:
+            return bid
+        fresh = self._alloc_with_eviction(1)
+        if fresh is None:
+            raise RuntimeError("pool exhausted during copy-on-write")
+        if self.copy_block is not None:
+            self.copy_block(bid, fresh[0])
+        self.alloc.release(bid)
+        self.tables[slot][bi] = fresh[0]
+        self.cow_copies += 1
+        return fresh[0]
+
+    # ------------------------------------------------------- retirement
+    def release(self, slot: int, prompt: Sequence[int] | None = None
+                ) -> None:
+        """Free the slot's blocks.  With prefix sharing on and the
+        retiring request's ``prompt`` given, its full prompt blocks are
+        retained in the prefix cache before the slot drops them."""
+        n = self._owned[slot]
+        table = self.tables[slot][:n]
+        if self.prefix is not None and prompt is not None:
+            self.prefix.insert(prompt, table)
+        for bid in table:
+            self.alloc.release(bid)
+        self.tables[slot] = [NULL_BLOCK] * self.blocks_per_slot
+        self._owned[slot] = 0
+        self.pos[slot] = 0
+
+    # ------------------------------------------------------------ stats
+    @property
+    def allocated_blocks(self) -> int:
+        return self.num_blocks - 1 - self.alloc.num_free
+
+    def free_block_ids(self) -> list[int]:
+        """Snapshot of currently free physical blocks (tests poison
+        these to prove no stale reads)."""
+        return list(self.alloc._free)

@@ -1,45 +1,61 @@
-"""Continuous-batching LM serving scheduler (slot-based, vLLM-lite).
+"""Continuous-batching LM serving scheduler over the paged KV runtime.
 
 Implements the shared :class:`repro.engine.api.Engine` protocol
 (``submit()`` / ``step()`` / ``run()``) — the LM counterpart of
 ``repro.engine.DiffusionEngine``, so one host loop can drive either
 workload.
 
-Production serving keeps the decode batch full: finished requests leave
-their slot, queued requests are admitted into free slots mid-flight,
-and the jitted decode step always runs at the fixed batch shape (no
-recompilation).  Mechanics:
+The scheduler is the paper's "host" role: Python request plumbing
+around two compiled programs, with all cache bookkeeping delegated to
+:class:`repro.serving.kvcache.PagedKVRuntime`:
 
-* a fixed pool of B slots over a shared fixed-capacity cache (the
-  decode cache is batched, so per-slot state is just the row index);
-* one shared scalar position (the cache high-water mark) for all
-  slots — per-slot position vectors are a ROADMAP open item;
-* admission copies the prompt in teacher-forced decode steps (simple;
-  real deployments chunk-prefill — noted);
-* EOS / max-length retirement frees the slot.
+* **Paged cache, per-slot state** — every slot carries its own
+  position vector entry and block-table row over a shared physical
+  block pool; a recycled slot starts at position 0 in freshly
+  allocated blocks, so *every* wave is bit-exact (the old shared
+  high-water mark, where second-wave requests attended to the previous
+  occupant's stale KV, is gone).
+* **Chunked prefill** — admission feeds the prompt in fixed-size
+  chunks through a jitted ``lax.scan`` of the decode step at batch 1
+  (``models.transformer.lm_prefill_chunk``), writing straight into the
+  slot's blocks.  Prompt ingestion therefore costs *prefill quanta*,
+  not decode steps at the full slot batch; the final chunk's logits
+  emit the first generated token.  Scan-of-decode keeps recurrent
+  (SSM / xLSTM) states and quantized KV bit-identical to solo decode.
+* **Decode quanta** — one jitted step at the fixed slot-batch shape
+  (no recompilation); idle rows point their block-table entry at the
+  null block and are never emitted.
+* **Prefix reuse (optional)** — with ``prefix_share=True`` (pure
+  attention decoders only), retiring requests donate their full prompt
+  blocks to a hash-chained prefix cache; a later request with the same
+  prefix adopts the blocks read-only and skips their prefill chunks.
+* **Fairness** — the wait queue admits round-robin across request
+  ``group`` ids instead of strict FIFO, so one chatty tenant cannot
+  head-of-line-block the rest.
 
-Known simplification: the cache position is a *shared* high-water
-mark, so a request admitted into a freed slot mid-flight attends to
-the previous occupant's stale KV prefix (and recurrent states are not
-reset).  First-wave requests are exact; later waves are a throughput
-demo, not bit-exact decoding.  Per-slot position vectors / cache
-offsets are a ROADMAP open item.
-
-This module is deliberately jit-boundary-clean: the scheduler is Python
-(host-side request plumbing — the paper's "host" role), the step is one
-compiled function.
+``step()`` runs exactly one scheduling quantum — prefill-prioritized:
+pending prompt chunks first, otherwise one batched decode step — and
+records it in ``last_quantum`` / the ``prefill_quanta`` /
+``decode_quanta`` counters; per-request counts land on
+``Request.prefill_steps`` / ``Request.decode_steps``.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import init_cache, lm_decode_step
+from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
+                                      cache_slot_view, init_cache,
+                                      lm_decode_step, lm_prefill_chunk)
+from repro.serving.kvcache import PagedKVRuntime, cdiv
+
+DEFAULT_BLOCK = 16
 
 
 @dataclasses.dataclass
@@ -48,104 +64,254 @@ class Request:
     prompt: list[int]
     max_new: int = 16
     eos: int | None = None
+    group: int = 0                # fairness class (tenant / priority bin)
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # Prompt feed cursor, owned by the scheduler.  A declared field
-    # (not injected at admission) so copied/replayed requests have it.
+    prefill_steps: int = 0        # prefill quanta this request consumed
+    decode_steps: int = 0         # decode quanta that emitted for it
+    # Prompt tokens cached so far (prefix reuse + prefill chunks).
+    # Observability/compat only — the scheduler's _pending list owns
+    # the feed.  A declared field (not injected at admission) so
+    # copied/replayed requests have it.
     _cursor: int = dataclasses.field(default=0, repr=False)
 
 
-def make_batched_decode(cfg: ModelConfig):
-    """Greedy decode step at the fixed slot-batch shape.
-
-    All slots share one scalar position (the cache high-water mark):
-    the cache is written at that position for every row, and rows
-    whose slot is empty decode garbage that is never emitted.  This is
-    the CPU-scale simplification — requests admitted into a freed slot
-    attend to the previous occupant's prefix (see the module
-    docstring); true per-slot position vectors are future work.
-    """
-    def step(params, tokens, pos, cache):
-        logits, cache = lm_decode_step(params, cfg, tokens, pos, cache)
+def make_paged_decode(cfg: ModelConfig):
+    """Greedy decode step at the fixed slot-batch shape: per-slot
+    positions + block tables, paged KV scatter/gather."""
+    def step(params, tokens, positions, block_tables, cache):
+        logits, cache = lm_decode_step(params, cfg, tokens, positions,
+                                       cache, block_tables=block_tables)
         return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
-    return jax.jit(step, donate_argnums=(3,))
+    return jax.jit(step, donate_argnums=(4,))
+
+
+def make_prefill_chunk(cfg: ModelConfig):
+    """Batch-1 chunked prefill for one slot: carve the slot's recurrent
+    rows out of the batched cache, scan the chunk through the decode
+    step (paged KV writes land via the slot's block-table row), and
+    fold the rows back.  Compiled once per distinct chunk length."""
+    def prefill(params, tokens, pos0, slot, block_row, cache):
+        local = cache_slot_view(cache, slot)
+        logits, local = lm_prefill_chunk(params, cfg, tokens, pos0, local,
+                                         block_tables=block_row)
+        cache = cache_slot_merge(cache, local, slot)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+    return jax.jit(prefill, donate_argnums=(5,))
+
+
+def _make_slot_reset():
+    return jax.jit(cache_slot_reset, donate_argnums=(0,))
+
+
+def _make_copy_block():
+    """Device hook for the runtime's copy-on-write guard."""
+    def copy(cache, src, dst):
+        def cp(x):
+            return x.at[:, dst].set(x[:, src])
+        return [c._replace(kv=jax.tree.map(cp, c.kv)) for c in cache]
+    return jax.jit(copy, donate_argnums=(0,))
 
 
 class ContinuousBatcher:
+    """``max_len`` is the *per-request* logical capacity (size it with
+    :meth:`required_len`); ``decode_fn`` overrides the compiled decode
+    quantum and must follow :func:`make_paged_decode`'s signature —
+    ``(params, tokens (S,1), positions (S,), block_tables (S,MB),
+    cache) -> (next_tokens (S,), cache)`` (the paged runtime changed
+    this from the old ``(params, tokens, pos, cache)`` contract)."""
+
     def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
                  max_len: int, enc_embeds=None,
                  decode_fn: Callable | None = None,
-                 quantized_kv: bool = False):
+                 quantized_kv: bool = False,
+                 block_size: int = DEFAULT_BLOCK,
+                 prefill_chunk: int = 8,
+                 prefix_share: bool = False,
+                 extra_blocks: int = 0):
+        if prefix_share and (set(cfg.block_pattern) != {"attn"}
+                             or cfg.is_enc_dec):
+            raise ValueError(
+                "prefix_share needs a pure-attention decoder: recurrent "
+                "states and encoder KV cannot be adopted from a cache")
         self.params = params
         self.cfg = cfg
-        self.slots: list[Request | None] = [None] * slots
         self.max_len = max_len
-        self.queue: deque[Request] = deque()
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.runtime = PagedKVRuntime(
+            slots, max_len, block_size, prefix_share=prefix_share,
+            extra_blocks=extra_blocks
+            + (slots * cdiv(max_len, block_size) if prefix_share else 0))
+        self.runtime.copy_block = self._copy_block
         self.cache = init_cache(params, cfg, slots, max_len,
                                 quantized_kv=quantized_kv,
-                                enc_embeds=enc_embeds)
-        self.step_fn = decode_fn or make_batched_decode(cfg)
-        self.pos = 0                    # shared high-water position
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+                                enc_embeds=enc_embeds,
+                                block_size=block_size,
+                                num_blocks=self.runtime.num_blocks)
+        self.step_fn = decode_fn or make_paged_decode(cfg)
+        self._prefill_raw = make_prefill_chunk(cfg)
+        self._reset_fn = _make_slot_reset()
+        self._copy_fn = _make_copy_block()
+        self.slots: list[Request | None] = [None] * slots
+        self._pending: list[list[int]] = [[] for _ in range(slots)]
+        self._next_tok = np.zeros(slots, np.int32)
         self.finished: list[Request] = []
+        # Wait queue: one FIFO per fairness group, admitted round-robin.
+        self._groups: "OrderedDict[int, deque[Request]]" = OrderedDict()
+        self._rr: deque[int] = deque()
+        self.prefill_quanta = 0
+        self.decode_quanta = 0
+        self.last_quantum: tuple[str, int] | None = None
 
-    # ------------------------------------------------------------ API
+    # ------------------------------------------------------------ sizing
     @staticmethod
     def required_len(n_requests: int, slots: int, prompt_len: int,
                      max_new: int) -> int:
-        """Cache length covering every admission wave.
+        """Exact per-request logical capacity.
 
-        The cache position is a shared high-water mark, so requests
-        beyond the slot count are served in waves and the cache must
-        cover all of them — an undersized ``max_len`` silently retires
-        late requests with truncated (possibly empty) output.
+        Positions are per-slot and blocks are recycled through the
+        pool, so capacity no longer scales with admission waves: a
+        request writes positions ``0 .. prompt_len + max_new - 2``
+        (the final token is emitted, never cached).  ``n_requests`` /
+        ``slots`` only exist for signature compatibility with the old
+        shared high-water sizing, which multiplied by the wave count.
         """
-        waves = -(-n_requests // slots)
-        return waves * (prompt_len + max_new) + 1
+        del n_requests, slots
+        return prompt_len + max_new - 1
 
+    # --------------------------------------------------------------- API
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        need = len(req.prompt) + req.max_new - 1
+        if need > self.max_len:
+            # Reject instead of silently truncating: sizing is exact
+            # now, so an over-budget request is a misconfiguration
+            # (required_len gives the capacity for this request).
+            raise ValueError(
+                f"prompt {len(req.prompt)} + max_new {req.max_new} needs "
+                f"capacity {need} > per-request max_len={self.max_len}")
+        if req.group not in self._groups:
+            self._groups[req.group] = deque()
+            self._rr.append(req.group)
+        self._groups[req.group].append(req)
+
+    @property
+    def queue_len(self) -> int:
+        return sum(len(q) for q in self._groups.values())
+
+    def _pop_round_robin(self) -> Request | None:
+        while self._rr:
+            gid = self._rr[0]
+            if not self._groups[gid]:
+                self._rr.popleft()      # drop drained groups: state
+                del self._groups[gid]   # stays O(live groups), not
+                continue                # O(groups ever seen)
+            self._rr.rotate(-1)
+            return self._groups[gid].popleft()
+        return None
+
+    def _requeue_front(self, req: Request) -> None:
+        self._groups[req.group].appendleft(req)
+        # Undo the rotation so the group keeps its turn.
+        self._rr.rotate(1)
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        self.cache = self._copy_fn(self.cache, jnp.int32(src),
+                                   jnp.int32(dst))
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.popleft()
-                req._cursor = 0          # reset on (re-)admission
-                self.slots[i] = req
-                self.tokens = self.tokens.at[i, 0].set(req.prompt[0])
-
-    def step(self) -> int:
-        """One decode step across all slots; returns #active slots."""
-        self._admit()
-        active = sum(s is not None for s in self.slots)
-        if active == 0:
-            return 0
-        nxt, self.cache = self.step_fn(self.params, self.tokens,
-                                       jnp.int32(self.pos), self.cache)
-        self.pos += 1
-        nxt_host = jax.device_get(nxt)
-        for i, req in enumerate(self.slots):
-            if req is None:
+            if slot is not None or not self.queue_len:
                 continue
-            req._cursor += 1
-            if req._cursor < len(req.prompt):
-                tok = req.prompt[req._cursor]       # teacher-forced
-            else:
-                tok = int(nxt_host[i])
-                req.out.append(tok)
-            self.tokens = self.tokens.at[i, 0].set(tok)
-            over = len(req.out) >= req.max_new
-            hit_eos = req.eos is not None and req.out \
-                and req.out[-1] == req.eos
-            if over or hit_eos or self.pos >= self.max_len - 1:
-                req.done = True
-                self.finished.append(req)
-                self.slots[i] = None     # slot freed -> next admit fills
-        return active
+            req = self._pop_round_robin()
+            if req is None:
+                break
+            reused = self.runtime.admit(i, req.prompt, req.max_new)
+            if reused is None:          # pool pressure: try again later
+                self._requeue_front(req)
+                break
+            self.slots[i] = req
+            req._cursor = reused        # prompt tokens already cached
+            self._pending[i] = list(req.prompt[reused:])
+            self.cache = self._reset_fn(self.cache, jnp.int32(i))
+
+    # ------------------------------------------------------- scheduling
+    def step(self) -> int:
+        """One scheduling quantum (prefill-prioritized); returns the
+        number of requests progressed."""
+        self._admit()
+        for i, req in enumerate(self.slots):
+            if req is not None and self._pending[i]:
+                return self._prefill_quantum(i)
+        return self._decode_quantum()
+
+    def _prefill_quantum(self, i: int) -> int:
+        req = self.slots[i]
+        chunk = self._pending[i][:self.prefill_chunk]
+        del self._pending[i][:len(chunk)]
+        pos = self.runtime.pos[i]
+        bs = self.runtime.block_size
+        for bi in range(pos // bs, cdiv(pos + len(chunk), bs)):
+            self.runtime.ensure_writable(i, bi * bs)
+        nxt, self.cache = self._prefill_raw(
+            self.params,
+            jnp.asarray([chunk], jnp.int32),
+            jnp.full((1,), pos, jnp.int32),
+            jnp.int32(i),
+            jnp.asarray([self.runtime.tables[i]], jnp.int32),
+            self.cache)
+        self.runtime.pos[i] = pos + len(chunk)
+        req._cursor += len(chunk)
+        req.prefill_steps += 1
+        self.prefill_quanta += 1
+        self.last_quantum = ("prefill", 1)
+        if not self._pending[i]:        # prompt done: first token is out
+            tok = int(jax.device_get(nxt)[0])
+            req.out.append(tok)
+            self._next_tok[i] = tok
+            self._maybe_retire(i)
+        return 1
+
+    def _decode_quantum(self) -> int:
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            self.last_quantum = None
+            return 0
+        for i in active:
+            self.runtime.ensure_writable(i, self.runtime.pos[i])
+        positions = np.asarray(self.runtime.pos, np.int32)
+        tables = np.asarray(self.runtime.tables, np.int32)
+        nxt, self.cache = self.step_fn(
+            self.params, jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray(positions), jnp.asarray(tables), self.cache)
+        self.decode_quanta += 1
+        self.last_quantum = ("decode", len(active))
+        nxt_host = jax.device_get(nxt)
+        for i in active:
+            req = self.slots[i]
+            self.runtime.pos[i] += 1    # the fed token is now cached
+            tok = int(nxt_host[i])
+            req.out.append(tok)
+            req.decode_steps += 1
+            self._next_tok[i] = tok
+            self._maybe_retire(i)
+        return len(active)
+
+    def _maybe_retire(self, i: int) -> None:
+        req = self.slots[i]
+        over = len(req.out) >= req.max_new
+        hit_eos = req.eos is not None and req.out \
+            and req.out[-1] == req.eos
+        trunc = self.runtime.pos[i] >= self.max_len
+        if over or hit_eos or trunc:
+            req.done = True
+            self.finished.append(req)
+            self.runtime.release(i, req.prompt)
+            self.slots[i] = None        # slot freed -> next admit fills
+            self._pending[i] = []
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.queue_len and all(s is None for s in self.slots):
                 break
             self.step()
         return list(self.finished)    # snapshot: later runs keep appending

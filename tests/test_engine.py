@@ -100,6 +100,7 @@ def test_engine_retires_all_requests_across_buckets(sd_params, toks):
     for r in res:
         assert r.image.shape == (16, 16, 3)
         assert bool(jnp.isfinite(r.image.astype(jnp.float32)).all())
+        assert r.decode_steps == r.steps and r.prefill_steps == 0
     assert eng.step() == 0          # queue drained
 
 
