@@ -11,7 +11,15 @@ reports
   naive preallocation the seed used: one shared high-water cache of
   ``waves * (prompt + max_new) + 1`` positions per slot,
 * prefix-cache savings when every request shares a system-prompt
-  prefix.
+  prefix,
+* fused vs scan admission: per-token kernel launches and wall time of
+  the same workload with ``fused_prefill`` on (one fused paged
+  flash-prefill program per chunk) vs off (the decode-step-scan
+  oracle).  **Gating invariant** (CI runs this without
+  continue-on-error): fused admission must use strictly fewer
+  per-token launches than the scan, and the two paths must agree on
+  >= 90% of emitted tokens (bf16-ulp numeric divergence may flip a
+  rare near-tie argmax; wholesale divergence means a kernel bug).
 
 Run:  PYTHONPATH=src python benchmarks/serving_cache.py \
           [--slots 4] [--requests 16] [--prompt-len 24] [--gen 16] \
@@ -97,6 +105,42 @@ def run(slots: int = 4, requests: int = 16, prompt_len: int = 24,
             f"adopted,{cb.runtime.cow_copies} CoW copies")
     assert all(len(r.out) == gen for r in done[-requests:]), \
         "truncated outputs: paged sizing is wrong"
+
+    # ---- fused vs scan admission on an identical workload ----
+    adm = {}
+    for fused in (True, False):
+        cb2 = ContinuousBatcher(params, cfg, slots=slots, max_len=max_len,
+                                block_size=block_size, fused_prefill=fused)
+        for rid, p in enumerate(prompts):   # warm-up wave compiles
+            cb2.submit(Request(rid=rid, prompt=list(p), max_new=gen))
+        cb2.run()
+        l0 = cb2.prefill_launches
+        for rid, p in enumerate(prompts):
+            cb2.submit(Request(rid=rid + requests, prompt=list(p),
+                               max_new=gen))
+        t0 = time.time()
+        out = cb2.run()
+        adm[fused] = (cb2.prefill_launches - l0, time.time() - t0,
+                      {r.rid: r.out for r in out[-requests:]})
+    (fl, ft, fo), (sl, st, so) = adm[True], adm[False]
+    rows.append(
+        f"serving_cache/admission,fused {fl} launches in {ft:.2f}s,"
+        f"scan {sl} launches in {st:.2f}s")
+    # Gating admission-quanta invariant: one fused program per chunk
+    # must beat one decode-step program per prompt token.
+    assert fl < sl, (
+        f"fused admission used {fl} per-token kernel launches, scan "
+        f"used {sl}: the fused path must be strictly cheaper")
+    # Token agreement between the two paths: they are numerically
+    # divergent at bf16 ulp scale (chunk-at-once vs per-token matmuls),
+    # so a rare near-tie greedy argmax may legitimately flip under a
+    # compiler/runtime change.  Gate on overwhelming agreement, not
+    # bit equality — a kernel bug shows up as wholesale divergence.
+    toks = [(a, b) for rid in fo for a, b in zip(fo[rid], so[rid])]
+    agree = sum(a == b for a, b in toks) / max(1, len(toks))
+    assert agree >= 0.9, (
+        f"fused and scan admission agree on only {agree:.0%} of tokens "
+        f"— fused prefill has diverged from the decode-step oracle")
     if verbose:
         for r in rows:
             print(r)

@@ -1,0 +1,216 @@
+"""Pallas TPU kernel: fused paged flash-prefill (multi-token chunk).
+
+Admission used to scan the decode step token-by-token; this kernel
+attends an entire prompt chunk ``(T, Hkv, G, hd)`` in ONE program
+against the paged KV pool — the fused multi-token prefill the CGLA-LLM
+companion study singles out as the phase where kernel fusion pays off.
+
+Per grid step ``(h, j)`` the kernel
+
+1. **writes** the chunk's keys/values that land in physical block
+   ``table[j]`` (an in-kernel scatter expressed as a one-hot matmul, so
+   it lowers to the MXU instead of a per-row dynamic store), then
+2. **attends** all T queries to that block with online softmax:
+   causal masking *within* the chunk (query ``t`` sees chunk tokens
+   ``<= t``) and per-row position masking against prior blocks
+   (positions ``< pos0`` are history, positions ``>= pos0 + T`` are a
+   recycled block's stale bytes and are value-neutralized like the
+   decode kernel).
+
+The pool outputs are aliased onto the pool inputs
+(``input_output_aliases``), so blocks not named by the table are
+untouched and the chunk's KV lands in place — one kernel launch per
+chunk replaces T decode-step launches.
+
+Layouts: q ``(T, Hkv, G, hd)``; k_new/v_new ``(T, Hkv, hd)``;
+pools ``(NB, Hkv, bs, hd)``; block_table ``(MB,)`` int32;
+pos0 scalar int32 (tokens already cached for this slot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(tbl_ref, pos_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref,
+                    o_ref, ko_ref, vo_ref, m_ref, l_ref, acc_ref, *,
+                    scale: float, g: int, t: int, bs: int, mb: int,
+                    window: int | None):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos0 = pos_ref[0]
+    # ---- in-kernel KV write: chunk rows landing in this block ----
+    # Global position of block offset c is j*bs + c; the chunk row that
+    # lands there is r = j*bs + c - pos0 (if 0 <= r < t).  Expressed as
+    # a one-hot (bs, t) matmul so the scatter runs on the MXU.
+    kcol = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)
+    row = kcol - pos0                                       # (bs, 1)
+    write = (row >= 0) & (row < t)                          # (bs, 1)
+    onehot = (row == jax.lax.broadcasted_iota(
+        jnp.int32, (bs, t), 1)).astype(jnp.float32)         # (bs, t)
+    k_wr = jax.lax.dot_general(
+        onehot, kn_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())))         # (bs, hd)
+    v_wr = jax.lax.dot_general(
+        onehot, vn_ref[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())))
+    k_blk = jnp.where(write, k_wr.astype(kp_ref.dtype), kp_ref[0, 0])
+    v_blk = jnp.where(write, v_wr.astype(vp_ref.dtype), vp_ref[0, 0])
+    ko_ref[0, 0] = k_blk
+    vo_ref[0, 0] = v_blk
+
+    # ---- attend all T queries to the (now current) block ----
+    q = q_ref[0]                                            # (t*g, hd)
+    logits = jax.lax.dot_general(
+        q, k_blk, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale         # (t*g, bs)
+    qpos = pos0 + jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, 0) // g
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = kpos <= qpos                  # history + intra-chunk causal
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    # Positions past the chunk's last token are a recycled block's
+    # stale bytes; masked p is ~0 but 0 * NaN = NaN, so zero the values.
+    v_use = jnp.where(kcol < pos0 + t, v_blk, 0.0)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_use.dtype), v_use,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == mb - 1)
+    def _done():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)
+                    ).astype(o_ref.dtype)
+
+
+def flash_prefill_paged(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                        k_pool: jax.Array, v_pool: jax.Array,
+                        block_table: jax.Array, pos0: jax.Array, *,
+                        scale: float | None = None,
+                        window: int | None = None,
+                        interpret: bool = False
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused prefill of one chunk for one slot.
+
+    q: (T, Hkv, G, hd); k_new/v_new: (T, Hkv, hd);
+    k/v pools: (NB, Hkv, bs, hd); block_table: (MB,) int32;
+    pos0: scalar int32 — tokens already cached (the chunk occupies
+    positions ``pos0 .. pos0+T-1``).
+
+    Returns ``(out (T, Hkv, G, hd), k_pool', v_pool')`` where the
+    pools carry the chunk's KV written in place (outputs are aliased
+    onto the pool inputs; unlisted blocks are untouched).
+    """
+    t, h, g, d = q.shape
+    bs = k_pool.shape[2]
+    mb = block_table.shape[0]
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.transpose(1, 0, 2, 3).reshape(h, t * g, d)
+    knf = k_new.transpose(1, 0, 2)
+    vnf = v_new.transpose(1, 0, 2)
+    pos0 = jnp.asarray(pos0, jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(h, mb),
+        in_specs=[
+            pl.BlockSpec((1, t * g, d),
+                         lambda hi, j, tbl, pos: (hi, 0, 0)),
+            pl.BlockSpec((1, t, d),
+                         lambda hi, j, tbl, pos: (hi, 0, 0)),
+            pl.BlockSpec((1, t, d),
+                         lambda hi, j, tbl, pos: (hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda hi, j, tbl, pos: (tbl[j], hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda hi, j, tbl, pos: (tbl[j], hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t * g, d),
+                         lambda hi, j, tbl, pos: (hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda hi, j, tbl, pos: (tbl[j], hi, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda hi, j, tbl, pos: (tbl[j], hi, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, 1), jnp.float32),
+            pltpu.VMEM((t * g, d), jnp.float32),
+        ],
+    )
+    out, kp, vp = pl.pallas_call(
+        functools.partial(_prefill_kernel, scale=scale, g=g, t=t, bs=bs,
+                          mb=mb, window=window),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((h, t * g, d), q.dtype),
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        # Inputs are numbered incl. the two scalar-prefetch operands:
+        # 5/6 are k_pool/v_pool -> outputs 1/2 (in-place KV writes).
+        input_output_aliases={5: 1, 6: 2},
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), pos0, qf, knf, vnf, k_pool, v_pool)
+    return out.reshape(h, t, g, d).transpose(1, 0, 2, 3), kp, vp
+
+
+def flash_prefill_paged_ref(q, k_new, v_new, k_pool, v_pool, block_table,
+                            pos0, *, scale=None, window=None):
+    """Oracle (plain XLA): scatter the chunk into the pools, gather the
+    table, causal + position-masked softmax.  Also the CPU serving path
+    (`ops.paged_prefill_attention` dispatches here off-TPU)."""
+    t, h, g, d = q.shape
+    bs = k_pool.shape[2]
+    mb = block_table.shape[0]
+    if scale is None:
+        scale = d ** -0.5
+    pos0 = jnp.asarray(pos0, jnp.int32).reshape(())
+    chunk_pos = pos0 + jnp.arange(t)
+    bids = block_table[chunk_pos // bs]
+    offs = chunk_pos % bs
+    k_pool = k_pool.at[bids, :, offs].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, :, offs].set(v_new.astype(v_pool.dtype))
+
+    def gather(pool):
+        gth = pool[block_table]                # (MB, Hkv, bs, hd)
+        return gth.transpose(1, 0, 2, 3).reshape(h, mb * bs, d)
+
+    keys, vals = gather(k_pool), gather(v_pool)
+    logits = jnp.einsum("thgd,hcd->thgc", q.astype(jnp.float32),
+                        keys.astype(jnp.float32)) * scale
+    qpos = chunk_pos[:, None]
+    kpos = jnp.arange(mb * bs)[None, :]
+    mask = kpos <= qpos                                     # (t, C)
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    # Stale bytes past the chunk's last token: 0 * NaN guard.
+    vals = jnp.where((kpos[0] < pos0 + t)[None, :, None], vals, 0)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("thgc,hcd->thgd", p, vals.astype(jnp.float32))
+    return out.astype(q.dtype), k_pool, v_pool

@@ -28,6 +28,7 @@ from repro.kernels import q8_matmul as _q8
 from repro.kernels import q4_matmul as _q4
 from repro.kernels import q3k_matmul as _q3k
 from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_prefill as _fp
 
 Force = Literal["auto", "pallas", "xla", "interpret"]
 
@@ -176,3 +177,25 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                   scale=scale, q_chunk=chunk)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                    scale=scale)
+
+
+def paged_prefill_attention(q, k_new, v_new, k_pool, v_pool, block_table,
+                            pos0, *, window: int | None = None,
+                            scale: float | None = None,
+                            force: Force = "auto"):
+    """Fused paged prefill of one chunk for one slot (see
+    ``kernels.flash_prefill``): writes the chunk's KV into its
+    destination blocks and attends all T queries in one program.
+
+    q: (T, Hkv, G, hd); k_new/v_new: (T, Hkv, hd); pools:
+    (NB, Hkv, bs, hd); block_table: (MB,) int32; pos0: scalar int32.
+    Returns ``(out, k_pool', v_pool')``.
+    """
+    use_pallas, interp = _use_pallas(force)
+    if use_pallas:
+        return _fp.flash_prefill_paged(q, k_new, v_new, k_pool, v_pool,
+                                       block_table, pos0, scale=scale,
+                                       window=window, interpret=interp)
+    return _fp.flash_prefill_paged_ref(q, k_new, v_new, k_pool, v_pool,
+                                       block_table, pos0, scale=scale,
+                                       window=window)

@@ -155,6 +155,53 @@ def attention_fwd(p: dict, cfg: ModelConfig, x: jax.Array,
     return ctx.act(apply_linear(p["wo"], _merge_heads(ctx.heads_q(out))))
 
 
+# ----------------------------------------------------- paged prefill
+
+def attention_prefill_paged(p: dict, cfg: ModelConfig, x: jax.Array,
+                            pos0: jax.Array, cache: KVCache,
+                            block_tables: jax.Array, *,
+                            rope: bool = True
+                            ) -> tuple[jax.Array, KVCache]:
+    """Fused multi-token prefill of one chunk against the paged pool.
+
+    x: (1, T, d) — the chunk being admitted (batch-1 slot view);
+    pos0: (1,) int32 — tokens already cached for the slot;
+    block_tables: (1, MB) int32 — the slot's block-table row.
+
+    One ``ops.paged_prefill_attention`` program per layer replaces T
+    per-token decode scatter/gather rounds: the chunk's KV is written
+    into its destination blocks in-kernel and every chunk query attends
+    causally to history + the chunk itself.  Quantized KV keeps the
+    decode-step scan path (``lm_prefill_chunk`` falls back).
+
+    Returns (out (1, T, d), updated cache).
+    """
+    assert cache.k_scale is None, "fused prefill is bf16-KV only"
+    b, t, _ = x.shape
+    assert b == 1, "admission prefill is batch-1 (one slot)"
+    positions = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
+    k = _split_heads(apply_linear(p["wk"], x), cfg.num_kv_heads)
+    v = _split_heads(apply_linear(p["wv"], x), cfg.num_kv_heads)
+    if rope:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+    g = cfg.num_heads // cfg.num_kv_heads
+    # (1, Hq, T, hd) -> (T, Hkv, G, hd); query head ordering kv*G + g
+    # matches the decode path's reshape.
+    qt = q[0].reshape(cfg.num_kv_heads, g, t, cfg.hd).transpose(2, 0, 1, 3)
+    kn = k[0].transpose(1, 0, 2)                 # (T, Hkv, hd)
+    vn = v[0].transpose(1, 0, 2)
+    out, kp, vp = ops.paged_prefill_attention(
+        qt, kn.astype(cache.k.dtype), vn.astype(cache.v.dtype),
+        cache.k, cache.v, block_tables[0], pos0[0],
+        window=cfg.sliding_window, scale=cfg.hd ** -0.5)
+    new = KVCache(ctx.paged_kv(kp), ctx.paged_kv(vp), None, None)
+    out = out.transpose(1, 2, 0, 3)              # (Hkv, G, T, hd)
+    out = out.reshape(1, cfg.num_heads, t, cfg.hd)
+    return apply_linear(p["wo"], _merge_heads(out).astype(x.dtype)), new
+
+
 # ------------------------------------------------------------- decode
 
 def _update_read_contiguous(cfg: ModelConfig, cache: KVCache, k, v, pos):

@@ -157,11 +157,10 @@ def _block_fwd(p: dict, cfg: ModelConfig, kind: str, x, positions,
     return x
 
 
-def _layer_fwd(p: dict, cfg: ModelConfig, j: int, x, positions,
-               *, causal: bool, enc_out=None):
-    kind = _period_kinds(cfg)[j]
-    x = ctx.act(_block_fwd(p, cfg, kind, x, positions, causal=causal,
-                           enc_out=enc_out))
+def _apply_ffn(p: dict, cfg: ModelConfig, j: int, x):
+    """norm2 + MLP/MoE residual tail of layer ``j`` (position-wise, so
+    it is identical for full-sequence, chunk, and one-token inputs).
+    Returns (x, moe aux loss)."""
     fk = _ffn_kind(cfg, j)
     aux = jnp.zeros((), jnp.float32)
     if fk == "mlp":
@@ -172,6 +171,14 @@ def _layer_fwd(p: dict, cfg: ModelConfig, j: int, x, positions,
         y, aux = moe_mod.apply_moe(p["moe"], cfg, h)
         x = x + y
     return x, aux
+
+
+def _layer_fwd(p: dict, cfg: ModelConfig, j: int, x, positions,
+               *, causal: bool, enc_out=None):
+    kind = _period_kinds(cfg)[j]
+    x = ctx.act(_block_fwd(p, cfg, kind, x, positions, causal=causal,
+                           enc_out=enc_out))
+    return _apply_ffn(p, cfg, j, x)
 
 
 def _sinusoidal(seq: int, d: int, offset=0) -> jax.Array:
@@ -384,15 +391,7 @@ def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                                  period_cache[j],
                                  block_tables=block_tables)
             new_caches.append(c)
-            fk = _ffn_kind(cfg, j)
-            if fk == "mlp":
-                h = _apply_norm(cfg, period_params[j]["norm2"], x)
-                x = x + L.apply_mlp(period_params[j]["mlp"], h,
-                                    cfg.activation)
-            elif fk == "moe":
-                h = _apply_norm(cfg, period_params[j]["norm2"], x)
-                y, _ = moe_mod.apply_moe(period_params[j]["moe"], cfg, h)
-                x = x + y
+            x, _ = _apply_ffn(period_params[j], cfg, j, x)
         return x, new_caches
 
     x, new_cache = jax.lax.scan(period_body, x,
@@ -405,18 +404,90 @@ def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     return logits, new_cache
 
 
+def prefill_fused_eligible(cfg: ModelConfig, *,
+                           quantized_kv: bool = False) -> bool:
+    """True when a prompt chunk can go through the fused paged
+    flash-prefill kernel instead of the decode-step scan: every layer
+    must be plain self-attention (recurrent/hybrid state has no fused
+    multi-token update), no encoder-decoder cross attention, and the
+    KV pool must be bf16 (the kernel writes raw keys/values; Q8_0
+    requantization stays on the scan path)."""
+    return (set(_period_kinds(cfg)) == {"attn"}
+            and not cfg.is_enc_dec
+            and not quantized_kv)
+
+
+def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
+                            tokens: jax.Array, pos0: jax.Array, cache: Any,
+                            block_tables: jax.Array
+                            ) -> tuple[jax.Array, Any]:
+    """Fused prefill: the whole chunk runs as ONE forward over the
+    paged pool per layer (``attention_prefill_paged``) instead of a
+    T-step scan of :func:`lm_decode_step` — one kernel launch per
+    layer per chunk.  Pure-attention decoders only (see
+    :func:`prefill_fused_eligible`); FFN / MoE are position-wise, so
+    the chunk-at-once result matches the scan to fp32 allclose."""
+    kinds = _period_kinds(cfg)
+    t = tokens.shape[1]
+    x = L.apply_embedding(params["embed"], tokens)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + jax.vmap(
+            lambda o: _sinusoidal(t, cfg.d_model, offset=o))(pos0)
+    rope = cfg.pos_embed == "rope"
+
+    def period_body(x, scanned):
+        period_params, period_cache = scanned
+        new_caches = []
+        for j, kind in enumerate(kinds):
+            assert kind == "attn", kind
+            p = period_params[j]
+            h = _apply_norm(cfg, p["norm1"], x)
+            y, kv = attn_mod.attention_prefill_paged(
+                p["attn"], cfg, h, pos0, period_cache[j].kv,
+                block_tables, rope=rope)
+            x = x + y
+            new_caches.append(period_cache[j]._replace(kv=kv))
+            x, _ = _apply_ffn(p, cfg, j, x)
+        return x, new_caches
+
+    x, new_cache = jax.lax.scan(period_body, x,
+                                (params["layers"], cache),
+                                unroll=True if cfg.scan_unroll else 1)
+    x = _apply_norm(cfg, params["final_norm"], x[:, -1:])
+    head = params.get("lm_head") or Linear(params["embed"].w,
+                                           role="lm_head")
+    return L.apply_unembed(head, x), new_cache
+
+
 def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
                      pos0: jax.Array, cache: Any, *,
-                     block_tables: jax.Array | None = None
-                     ) -> tuple[jax.Array, Any]:
-    """Teacher-forced prefill of one chunk: tokens (B, C) are fed at
-    positions ``pos0 .. pos0+C-1`` via a ``lax.scan`` of
-    :func:`lm_decode_step`, so the written cache (and the returned
-    logits of the *last* position) are bit-identical to feeding the
-    chunk through single-token decode — that equivalence is what makes
-    chunked admission exact for recurrent states and quantized KV alike.
-    One compiled program per chunk length; pos0: (B,) int32.
+                     block_tables: jax.Array | None = None,
+                     fused: bool = True) -> tuple[jax.Array, Any]:
+    """Prefill of one chunk: tokens (B, C) at positions
+    ``pos0 .. pos0+C-1``; returns the logits of the *last* position and
+    the updated cache.  pos0: (B,) int32.
+
+    Two paths, one compiled program per chunk length either way:
+
+    * **fused** (default when eligible) — the chunk runs as one fused
+      attention program per layer against the paged pool
+      (:func:`_lm_prefill_chunk_fused`): causal within the chunk,
+      position-masked against history, KV written in-kernel.
+    * **decode-step scan** (the reference oracle) — a ``lax.scan`` of
+      :func:`lm_decode_step`, bit-identical to feeding the chunk
+      through single-token decode; recurrent (SSM / xLSTM) states,
+      encoder-decoder models, quantized KV, and batch > 1 always take
+      this path (the fused kernel is batch-1, one slot per admission),
+      and tests pin ``fused=False`` to it as the ground truth.
     """
+    if fused and block_tables is not None and tokens.shape[0] == 1:
+        quantized = any(
+            isinstance(c.kv, attn_mod.KVCache) and c.kv.k_scale is not None
+            for c in cache)
+        if prefill_fused_eligible(cfg, quantized_kv=quantized):
+            return _lm_prefill_chunk_fused(params, cfg, tokens, pos0,
+                                           cache, block_tables)
+
     def body(carry, tok_col):
         pos, cache = carry
         logits, cache = lm_decode_step(params, cfg, tok_col[:, None], pos,

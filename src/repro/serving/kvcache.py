@@ -49,6 +49,10 @@ class BlockAllocator:
             raise ValueError("need at least one allocatable block")
         self.num_blocks = num_blocks
         self._free: deque[int] = deque(range(1, num_blocks))
+        # Mirror of _free for O(1) membership: the free list and the
+        # refcounted live set must stay disjoint (is_free / the
+        # runtime's check_consistency assert on it).
+        self._free_set: set[int] = set(self._free)
         self._refs: dict[int, int] = {}
 
     @property
@@ -58,12 +62,19 @@ class BlockAllocator:
     def refcount(self, bid: int) -> int:
         return self._refs.get(bid, 0)
 
+    def is_free(self, bid: int) -> bool:
+        """True iff ``bid`` currently sits in the free list."""
+        return bid in self._free_set
+
     def alloc(self, n: int) -> list[int] | None:
         """Atomically allocate ``n`` blocks (refcount 1), or None."""
         if n > len(self._free):
             return None
         out = [self._free.popleft() for _ in range(n)]
         for bid in out:
+            assert bid not in self._refs, \
+                f"block {bid} was simultaneously free and refcounted"
+            self._free_set.discard(bid)
             self._refs[bid] = 1
         return out
 
@@ -73,6 +84,8 @@ class BlockAllocator:
             return
         if bid not in self._refs:
             raise ValueError(f"share of unallocated block {bid}")
+        assert not self.is_free(bid), \
+            f"share of block {bid} that is on the free list"
         self._refs[bid] += 1
 
     def release(self, bid: int) -> bool:
@@ -87,7 +100,9 @@ class BlockAllocator:
             self._refs[bid] = n - 1
             return False
         del self._refs[bid]
+        assert bid not in self._free_set, f"double-free of block {bid}"
         self._free.append(bid)
+        self._free_set.add(bid)
         return True
 
 
@@ -187,6 +202,24 @@ class PagedKVRuntime:
         self._owned = [0] * slots         # blocks in use (incl. shared)
         self.cow_copies = 0
 
+    # ------------------------------------------------------- invariants
+    def check_consistency(self) -> None:
+        """Assert the free list and the live block tables are disjoint:
+        a block must never be simultaneously free and reachable from a
+        slot's table (the refcount/free ordering bug class).  Checking
+        every live table entry against ``is_free`` proves the
+        disjointness in one direction, which is the whole property.
+        Called after every admit/CoW/release; cheap at serving scale
+        (O(slots * blocks_per_slot))."""
+        for slot in range(self.slots):
+            for bid in self.tables[slot][:self._owned[slot]]:
+                assert bid != NULL_BLOCK, \
+                    f"slot {slot} owns the null block"
+                assert not self.alloc.is_free(bid), \
+                    f"block {bid} is in slot {slot}'s table AND free"
+                assert self.alloc.refcount(bid) >= 1, \
+                    f"block {bid} is in slot {slot}'s table unrefcounted"
+
     # -------------------------------------------------------- admission
     def _alloc_with_eviction(self, n: int) -> list[int] | None:
         while self.alloc.num_free < n:
@@ -224,6 +257,7 @@ class PagedKVRuntime:
         self._owned[slot] = len(table)
         n_reused = len(shared) * self.block_size
         self.pos[slot] = n_reused
+        self.check_consistency()
         return n_reused
 
     # ------------------------------------------------------ write guard
@@ -246,6 +280,7 @@ class PagedKVRuntime:
         self.alloc.release(bid)
         self.tables[slot][bi] = fresh[0]
         self.cow_copies += 1
+        self.check_consistency()
         return fresh[0]
 
     # ------------------------------------------------------- retirement
@@ -263,6 +298,7 @@ class PagedKVRuntime:
         self.tables[slot] = [NULL_BLOCK] * self.blocks_per_slot
         self._owned[slot] = 0
         self.pos[slot] = 0
+        self.check_consistency()
 
     # ------------------------------------------------------------ stats
     @property

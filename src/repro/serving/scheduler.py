@@ -16,12 +16,20 @@ around two compiled programs, with all cache bookkeeping delegated to
   high-water mark, where second-wave requests attended to the previous
   occupant's stale KV, is gone).
 * **Chunked prefill** — admission feeds the prompt in fixed-size
-  chunks through a jitted ``lax.scan`` of the decode step at batch 1
-  (``models.transformer.lm_prefill_chunk``), writing straight into the
-  slot's blocks.  Prompt ingestion therefore costs *prefill quanta*,
-  not decode steps at the full slot batch; the final chunk's logits
-  emit the first generated token.  Scan-of-decode keeps recurrent
-  (SSM / xLSTM) states and quantized KV bit-identical to solo decode.
+  chunks at batch 1 (``models.transformer.lm_prefill_chunk``), writing
+  straight into the slot's blocks.  By default
+  (``fused_prefill=True``) each chunk is ONE fused paged
+  flash-prefill program per layer (``kernels/flash_prefill.py``:
+  causal within the chunk, position-masked against history, KV
+  written in-kernel) — admission costs one kernel launch per chunk
+  instead of one decode-step launch per token
+  (``prefill_launches``).  Recurrent/hybrid, enc-dec, and
+  quantized-KV models automatically fall back to the jitted
+  ``lax.scan`` of the decode step, which stays bit-identical to solo
+  decode and serves as the fused path's test oracle.  Either way,
+  prompt ingestion costs *prefill quanta*, not decode steps at the
+  full slot batch; the final chunk's logits emit the first generated
+  token.
 * **Decode quanta** — one jitted step at the fixed slot-batch shape
   (no recompilation); idle rows point their block-table entry at the
   null block and are never emitted.
@@ -52,7 +60,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
                                       cache_slot_view, init_cache,
-                                      lm_decode_step, lm_prefill_chunk)
+                                      lm_decode_step, lm_prefill_chunk,
+                                      prefill_fused_eligible)
 from repro.serving.kvcache import PagedKVRuntime, cdiv
 
 DEFAULT_BLOCK = 16
@@ -86,15 +95,19 @@ def make_paged_decode(cfg: ModelConfig):
     return jax.jit(step, donate_argnums=(4,))
 
 
-def make_prefill_chunk(cfg: ModelConfig):
+def make_prefill_chunk(cfg: ModelConfig, *, fused: bool = True):
     """Batch-1 chunked prefill for one slot: carve the slot's recurrent
-    rows out of the batched cache, scan the chunk through the decode
-    step (paged KV writes land via the slot's block-table row), and
-    fold the rows back.  Compiled once per distinct chunk length."""
+    rows out of the batched cache, run the chunk (paged KV writes land
+    via the slot's block-table row), and fold the rows back.  With
+    ``fused=True`` (and an eligible model) the chunk is ONE fused
+    paged flash-prefill program per layer; otherwise it is the
+    reference decode-step scan.  Compiled once per distinct chunk
+    length."""
     def prefill(params, tokens, pos0, slot, block_row, cache):
         local = cache_slot_view(cache, slot)
         logits, local = lm_prefill_chunk(params, cfg, tokens, pos0, local,
-                                         block_tables=block_row)
+                                         block_tables=block_row,
+                                         fused=fused)
         cache = cache_slot_merge(cache, local, slot)
         return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
     return jax.jit(prefill, donate_argnums=(5,))
@@ -128,7 +141,8 @@ class ContinuousBatcher:
                  block_size: int = DEFAULT_BLOCK,
                  prefill_chunk: int = 8,
                  prefix_share: bool = False,
-                 extra_blocks: int = 0):
+                 extra_blocks: int = 0,
+                 fused_prefill: bool = True):
         if prefix_share and (set(cfg.block_pattern) != {"attn"}
                              or cfg.is_enc_dec):
             raise ValueError(
@@ -149,7 +163,12 @@ class ContinuousBatcher:
                                 block_size=block_size,
                                 num_blocks=self.runtime.num_blocks)
         self.step_fn = decode_fn or make_paged_decode(cfg)
-        self._prefill_raw = make_prefill_chunk(cfg)
+        # Fused prefill quietly downgrades to the decode-step scan when
+        # the model cannot take it (recurrent/hybrid, enc-dec, Q8 KV).
+        self.fused_prefill = fused_prefill and prefill_fused_eligible(
+            cfg, quantized_kv=quantized_kv)
+        self._prefill_raw = make_prefill_chunk(cfg,
+                                               fused=self.fused_prefill)
         self._reset_fn = _make_slot_reset()
         self._copy_fn = _make_copy_block()
         self.slots: list[Request | None] = [None] * slots
@@ -161,6 +180,11 @@ class ContinuousBatcher:
         self._rr: deque[int] = deque()
         self.prefill_quanta = 0
         self.decode_quanta = 0
+        # Admission cost in per-token kernel launches: the decode-step
+        # scan runs one step program per prompt token, the fused path
+        # one program per chunk (the acceptance metric for fused
+        # admission is strictly fewer launches on the same workload).
+        self.prefill_launches = 0
         self.last_quantum: tuple[str, int] | None = None
 
     # ------------------------------------------------------------ sizing
@@ -263,6 +287,7 @@ class ContinuousBatcher:
         req._cursor += len(chunk)
         req.prefill_steps += 1
         self.prefill_quanta += 1
+        self.prefill_launches += 1 if self.fused_prefill else len(chunk)
         self.last_quantum = ("prefill", 1)
         if not self._pending[i]:        # prompt done: first token is out
             tok = int(jax.device_get(nxt)[0])

@@ -1,7 +1,30 @@
 import os
 import sys
 
+import pytest
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 for p in (os.path.join(ROOT, "src"), ROOT):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+# Tier-1 is split into two CI matrix jobs by suite mark.  Modules on
+# the serving hot path (paged KV runtime, fused prefill) declare
+# ``pytestmark = pytest.mark.serving``; everything else defaults to
+# ``unit`` here so new test files are always in exactly one job.
+SUITE_MARKS = ("unit", "serving")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "unit: model/kernel/engine unit tests "
+                   "(tier-1 `unit` matrix job)")
+    config.addinivalue_line(
+        "markers", "serving: paged-KV serving runtime and fused-prefill "
+                   "tests (tier-1 `serving` matrix job)")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if not any(item.get_closest_marker(m) for m in SUITE_MARKS):
+            item.add_marker(pytest.mark.unit)

@@ -15,6 +15,8 @@ from repro.models.transformer import init_lm
 from repro.serving import (BlockAllocator, ContinuousBatcher,
                            PagedKVRuntime, Request)
 
+pytestmark = pytest.mark.serving
+
 # head_dim 32 so quantized KV (Q8_0 blocks of 32) applies.
 CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
@@ -77,6 +79,18 @@ class TestAllocator:
         a = BlockAllocator(3)
         assert set(a.alloc(2)) == {1, 2}
 
+    def test_is_free_tracks_lifecycle(self):
+        a = BlockAllocator(4)
+        (bid,) = a.alloc(1)
+        assert not a.is_free(bid)
+        a.share(bid)
+        a.release(bid)                   # one reader left: still live
+        assert not a.is_free(bid)
+        a.release(bid)
+        assert a.is_free(bid)
+        with pytest.raises(ValueError):  # free block has no refs to add
+            a.share(bid)
+
 
 class TestRuntime:
     def test_admit_release_recycles_blocks(self):
@@ -106,6 +120,25 @@ class TestRuntime:
         assert rt.alloc.refcount(bid) == 1          # slot 0 keeps its copy
         assert rt.ensure_writable(0, 0) == bid      # no further copy
         assert rt.cow_copies == 1
+
+    def test_consistency_guard_catches_freed_live_block(self):
+        """The refcount/free-ordering invariant: a block must never sit
+        in the free list while a live table still points at it."""
+        rt = PagedKVRuntime(slots=2, max_len=32, block_size=8)
+        rt.admit(0, _prompt(0, 10), 6)
+        rt.check_consistency()           # normal flow: invariant holds
+        bid = rt.tables[0][0]
+        rt.alloc.release(bid)            # freed under the table's feet
+        with pytest.raises(AssertionError, match="AND free"):
+            rt.check_consistency()
+
+    def test_consistency_guard_runs_on_admit_and_release(self):
+        rt = PagedKVRuntime(slots=2, max_len=32, block_size=8)
+        rt.admit(0, _prompt(0, 10), 6)
+        bid = rt.tables[0][0]
+        rt.alloc.release(bid)
+        with pytest.raises(AssertionError):
+            rt.admit(1, _prompt(1, 4), 4)   # guard fires inside admit
 
 
 # ---------------------------------------------------------- paged kernel
@@ -219,6 +252,44 @@ class TestMultiWaveExactness:
         cb.submit(Request(rid=1, prompt=list(second.prompt), max_new=4))
         out = cb.run()[-1].out
         assert out == _solo(params, CFG, second)
+
+    def test_mid_wave_recycled_block_clean_in_fused_prefill(self, params):
+        """Regression for the fused-prefill path: a block freed when a
+        request retires MID-wave (another slot still decoding) and then
+        reallocated to a newly admitted, prefilling slot must not leak
+        the previous occupant's KV into the fused kernel's output.
+        Free blocks are NaN/127-poisoned at the recycle point; any
+        stale read would surface as NaN garbage or wrong tokens."""
+        short = Request(rid=0, prompt=_prompt(20, 4), max_new=2)
+        long = Request(rid=1, prompt=_prompt(21, 6), max_new=7)
+        late = Request(rid=2, prompt=_prompt(22, 9), max_new=4)
+        # Pool sized so `late` (3 blocks) can only be admitted by
+        # taking `short`'s recycled blocks (7 allocatable: short 2,
+        # long 3, 1 spare).
+        cb = ContinuousBatcher(params, CFG, slots=2, max_len=12,
+                               block_size=4)
+        assert cb.fused_prefill
+        for r in (short, long, late):
+            cb.submit(Request(rid=r.rid, prompt=list(r.prompt),
+                              max_new=r.max_new))
+        while not cb.finished:           # run until `short` retires
+            assert cb.step()
+        assert cb.finished[0].rid == 0
+        assert cb.slots[1] is not None   # `long` still mid-decode
+        free = cb.runtime.free_block_ids()
+        assert free                      # short's blocks came back
+        idx = jnp.asarray(free, jnp.int32)
+        cb.cache = [c._replace(kv=jax.tree.map(
+            lambda x: x.at[:, idx].set(
+                jnp.full_like(x[:, idx], jnp.nan)
+                if jnp.issubdtype(x.dtype, jnp.floating) else 127),
+            c.kv)) for c in cb.cache]
+        cb.step()                        # admits `late` mid-wave
+        owned = cb.runtime.tables[0][:3]
+        assert set(owned) & set(free)    # genuinely recycled blocks
+        done = {r.rid: r.out for r in cb.run()}
+        assert done[2] == _solo(params, CFG, late)   # fused over recycled
+        assert done[1] == _solo(params, CFG, long)
 
     def test_chunked_prefill_equals_one_shot(self, params):
         """Chunk boundaries must not change anything: prefill in chunks

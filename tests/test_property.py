@@ -74,6 +74,59 @@ def test_q8_dequantize_quantize_fixpoint(seed):
                                atol=2e-3, rtol=1e-3)
 
 
+# ------------------------------------------------------- paged kernels
+
+def _paged_case(seed, b, mb, bs, nb, h, g, d):
+    """Random pools + per-row block tables of distinct physical ids."""
+    rng = np.random.default_rng(seed)
+    tbl = np.stack([rng.permutation(np.arange(1, nb))[:mb]
+                    for _ in range(b)])
+    kp = rng.standard_normal((nb, h, bs, d)).astype(np.float32) * 0.5
+    vp = rng.standard_normal((nb, h, bs, d)).astype(np.float32)
+    return rng, jnp.asarray(tbl, jnp.int32), jnp.asarray(kp), jnp.asarray(vp)
+
+
+@given(st.integers(0, 10**6), st.lists(st.integers(0, 11), min_size=2,
+                                       max_size=2))
+@settings(max_examples=8, deadline=None)
+def test_paged_flash_decode_matches_oracle_random(seed, positions):
+    """flash_decode_paged ≡ oracle under random block tables and
+    per-row positions (the fixed-case check generalized)."""
+    from repro.kernels.flash_decode import (flash_decode_paged,
+                                            flash_decode_paged_ref)
+    b, mb, bs, nb, h, g, d = 2, 3, 4, 9, 2, 2, 8
+    rng, tbl, kp, vp = _paged_case(seed, b, mb, bs, nb, h, g, d)
+    q = jnp.asarray(rng.standard_normal((b, h, g, d)).astype(np.float32))
+    pos = jnp.asarray(positions, jnp.int32)
+    want = flash_decode_paged_ref(q, kp, vp, tbl, pos)
+    got = flash_decode_paged(q, kp, vp, tbl, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+@given(st.integers(0, 10**6), st.integers(1, 6), st.integers(0, 11))
+@settings(max_examples=8, deadline=None)
+def test_paged_flash_prefill_matches_oracle_random(seed, t, pos0):
+    """flash_prefill_paged ≡ oracle under random block tables, random
+    chunk starts, and ragged chunk tails (t not a block multiple)."""
+    from repro.kernels.flash_prefill import (flash_prefill_paged,
+                                             flash_prefill_paged_ref)
+    mb, bs, nb, h, g, d = 3, 4, 9, 2, 2, 8
+    pos0 = min(pos0, mb * bs - t)
+    rng, tbl, kp, vp = _paged_case(seed, 1, mb, bs, nb, h, g, d)
+    q = jnp.asarray(rng.standard_normal((t, h, g, d)).astype(np.float32))
+    kn = jnp.asarray(rng.standard_normal((t, h, d)).astype(np.float32))
+    vn = jnp.asarray(rng.standard_normal((t, h, d)).astype(np.float32))
+    got, kpo, vpo = flash_prefill_paged(q, kn, vn, kp, vp, tbl[0], pos0,
+                                        interpret=True)
+    want, kpr, vpr = flash_prefill_paged_ref(q, kn, vn, kp, vp, tbl[0],
+                                             pos0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(kpo), np.asarray(kpr))
+    np.testing.assert_array_equal(np.asarray(vpo), np.asarray(vpr))
+
+
 @given(st.integers(0, 50))
 @settings(**SETTINGS)
 def test_q3k_requantization_error_stable(seed):
