@@ -1,10 +1,20 @@
 """Engine throughput microbench: requests/sec on mixed workloads.
 
-Submits a mixed sampler/step workload (turbo-1, ddim-2, ddim-4,
-euler-2, plus a CFG-guided ddim-4 group) to a ``DiffusionEngine`` and
-reports cold (incl. compile) and steady-state requests/sec together
-with the jit trace count — the compile cache means the steady pass
-must add zero traces.
+Part 1 (``run``): submits a mixed sampler/step workload (turbo-1,
+ddim-2, ddim-4, euler-2, plus a CFG-guided ddim-4 group) to a
+``DiffusionEngine`` and reports cold (incl. compile) and steady-state
+requests/sec together with the jit trace count — the compile cache
+means the steady pass must add zero traces.
+
+Part 2 (``run_streaming``): drives a mixed diffusion + LM workload
+through an ``EngineRouter`` and reports, from the typed event
+timestamps on the stream,
+
+* **time-to-first-event** — TTFT (first ``TokenDelta``) for LM
+  requests, time-to-first-preview (first ``PreviewLatent``) for
+  diffusion requests,
+* **p50/p95 per-request latency** (submit -> ``Finished``),
+* requests/sec for the whole mixed stream.
 
 Run:  PYTHONPATH=src python benchmarks/engine_throughput.py \
           [--requests 12] [--max-batch 4]
@@ -17,12 +27,20 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.engine import (TINY_SD, DiffusionEngine, GenerateRequest,
+from repro.configs.base import ModelConfig
+from repro.engine import (TINY_SD, DiffusionEngine, EngineRouter, Finished,
+                          GenerateRequest, PreviewLatent, TokenDelta,
                           init_pipeline)
+from repro.models.transformer import init_lm
+from repro.serving import ContinuousBatcher, Request
 
 # (sampler, steps, guidance_scale) round-robin mix.
 MIX = [("turbo", 1, 1.0), ("ddim", 2, 1.0), ("ddim", 4, 1.0),
        ("euler", 2, 1.0), ("ddim", 4, 7.5)]
+
+LM_CFG = ModelConfig(name="bench-lm", family="dense", num_layers=2,
+                     d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                     vocab_size=96, head_dim=16)
 
 
 def _submit(engine: DiffusionEngine, toks, n: int, rid0: int) -> None:
@@ -31,6 +49,13 @@ def _submit(engine: DiffusionEngine, toks, n: int, rid0: int) -> None:
         engine.submit(GenerateRequest(
             rid=rid0 + i, tokens=toks, sampler=sampler, steps=steps,
             guidance_scale=g, seed=rid0 + i))
+
+
+def _pct(xs: list[float], q: float) -> float:
+    if not xs:              # e.g. --requests 1 leaves no LM requests
+        return float("nan")
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
 
 
 def run(verbose: bool = True, n_requests: int = 12,
@@ -58,6 +83,69 @@ def run(verbose: bool = True, n_requests: int = 12,
     assert len(engine.finished) == 2 * n_requests
     assert all(bool(jnp.isfinite(r.image.astype(jnp.float32)).all())
                for r in engine.finished)
+    rows += run_streaming(verbose=verbose, n_requests=n_requests,
+                          max_batch=max_batch)
+    return rows
+
+
+def run_streaming(verbose: bool = True, n_requests: int = 8,
+                  max_batch: int = 2) -> list[str]:
+    """Mixed diffusion + LM workload through the router; latency
+    metrics from the event timestamps on the merged stream."""
+    sd_params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (TINY_SD.text_len,),
+                              0, TINY_SD.clip_cfg().vocab_size)
+    lm_params = init_lm(jax.random.PRNGKey(2), LM_CFG)
+
+    n_sd = (n_requests + 1) // 2
+    n_lm = n_requests - n_sd
+    gen = 8
+    diff = DiffusionEngine(sd_params, TINY_SD, max_batch=max_batch)
+    lm = ContinuousBatcher(
+        lm_params, LM_CFG, slots=2,
+        max_len=ContinuousBatcher.required_len(n_lm, 2, 8, gen))
+    router = EngineRouter(diffusion=diff, lm=lm)
+
+    submit_ts: dict[int, float] = {}
+    is_lm: dict[int, bool] = {}
+    for i in range(n_sd):
+        submit_ts[i] = router.bus.clock()
+        is_lm[i] = False
+        router.submit(GenerateRequest(
+            rid=i, tokens=toks, sampler="ddim", steps=4, seed=i,
+            preview_every=1))
+    for i in range(n_sd, n_sd + n_lm):
+        submit_ts[i] = router.bus.clock()
+        is_lm[i] = True
+        router.submit(Request(rid=i, prompt=[(i * 7) % 90 + 1] * 8,
+                              max_new=gen))
+
+    t0 = time.time()
+    first_ev: dict[int, float] = {}
+    fin_ts: dict[int, float] = {}
+    for e in router.stream():
+        if isinstance(e, (TokenDelta, PreviewLatent)) \
+                and e.rid not in first_ev:
+            first_ev[e.rid] = e.ts
+        elif isinstance(e, Finished):
+            fin_ts[e.rid] = e.ts
+    dt = time.time() - t0
+
+    assert sorted(fin_ts) == sorted(submit_ts), "stream lost requests"
+    ttft = [first_ev[r] - submit_ts[r] for r in first_ev if is_lm[r]]
+    ttfp = [first_ev[r] - submit_ts[r] for r in first_ev if not is_lm[r]]
+    lat = [fin_ts[r] - submit_ts[r] for r in fin_ts]
+    rows = [
+        f"engine_throughput/stream,{len(fin_ts) / dt:.2f} req/s,"
+        f"{n_sd} diffusion + {n_lm} lm interleaved in {dt:.2f}s",
+        f"engine_throughput/first_event,ttft p50 {_pct(ttft, .5):.3f}s,"
+        f"first-preview p50 {_pct(ttfp, .5):.3f}s",
+        f"engine_throughput/latency,p50 {_pct(lat, .5):.3f}s,"
+        f"p95 {_pct(lat, .95):.3f}s per request",
+    ]
+    if verbose:
+        for r in rows:
+            print(r)
     return rows
 
 

@@ -5,12 +5,16 @@ Submits a batch of ``GenerateRequest``s to a ``DiffusionEngine`` —
 sampler picked by name from the registry, per-request seeds and
 classifier-free-guidance scales — under a chosen quantization policy,
 and reports latency, compile (trace) counts, and model bytes.
+With ``--preview-every N`` the engine streams an x0-space
+``PreviewLatent`` event every N denoise steps (the segmented program
+path) and this host loop reports each preview as it lands.
 Offline weights are synthetic, so image *content* is noise-like; the
 compute graph, quantized kernels, and byte traffic are the real ones.
 
 Run:  PYTHONPATH=src python examples/generate_image.py \
           [--policy q3_k] [--sampler ddim] [--steps 4] \
-          [--size tiny|sd15] [--batch 2] [--guidance 7.5]
+          [--size tiny|sd15] [--batch 2] [--guidance 7.5] \
+          [--preview-every 1]
 """
 import argparse
 import time
@@ -21,8 +25,8 @@ import jax.numpy as jnp
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes
 from repro.engine import (SD_TURBO, TINY_SD, DiffusionEngine,
-                          GenerateRequest, default_sampler, init_pipeline,
-                          list_samplers, quantize_pipeline)
+                          GenerateRequest, PreviewLatent, default_sampler,
+                          init_pipeline, list_samplers, quantize_pipeline)
 
 
 def main():
@@ -37,6 +41,8 @@ def main():
     ap.add_argument("--guidance", type=float, default=1.0)
     ap.add_argument("--negative-prompt", default=None)
     ap.add_argument("--prompt", default="a lovely cat")  # paper's prompt
+    ap.add_argument("--preview-every", type=int, default=0,
+                    help="stream an x0 preview every N denoise steps")
     args = ap.parse_args()
     if args.steps < 1:
         ap.error("--steps must be >= 1")
@@ -68,9 +74,18 @@ def main():
     for i in range(args.batch):
         engine.submit(GenerateRequest(
             rid=i, tokens=toks, neg_tokens=neg, sampler=sampler,
-            steps=args.steps, seed=7 + i, guidance_scale=args.guidance))
+            steps=args.steps, seed=7 + i, guidance_scale=args.guidance,
+            preview_every=args.preview_every))
     t3 = time.time()
-    results = engine.run()
+    if args.preview_every:
+        for e in engine.stream():       # previews land mid-denoise
+            if isinstance(e, PreviewLatent):
+                lat = e.latent.astype(jnp.float32)
+                print(f"  rid={e.rid} preview {e.step}/{e.total}: "
+                      f"x0 latent std {float(lat.std()):.4f}")
+        results = list(engine.finished)
+    else:
+        results = engine.run()
     jax.block_until_ready(results[-1].image)
     t4 = time.time()
     # Steady state: same (sampler, steps, shape) key -> no retrace.
@@ -78,7 +93,8 @@ def main():
         engine.submit(GenerateRequest(
             rid=args.batch + i, tokens=toks, neg_tokens=neg,
             sampler=sampler, steps=args.steps, seed=100 + i,
-            guidance_scale=args.guidance))
+            guidance_scale=args.guidance,
+            preview_every=args.preview_every))
     engine.run()
     jax.block_until_ready(engine.finished[-1].image)
     t5 = time.time()

@@ -3,12 +3,19 @@
 Demonstrates the quantized-offload serving path the paper targets:
 weights quantized per policy, then requests submitted to the
 ``ContinuousBatcher`` — the LM engine behind the same
-``submit()``/``step()``/``run()`` protocol as ``DiffusionEngine``.
+``submit()``/``stream()``/``run()`` protocol as ``DiffusionEngine``.
 Finished requests free their slot mid-flight (their cache blocks
 return to the paged pool) and queued ones are admitted with chunked
 prefill, so the jitted decode step always runs at the fixed batch
 shape (KV/SSM cache machinery: paged block tables, per-slot positions,
 recurrent states, cross-KV).
+
+The host loop here consumes the *event stream* instead of draining
+``run()``: every ``submit()`` returns a ``RequestHandle``, the engine
+emits ``Admitted``/``TokenDelta``/``Finished`` events, and tokens
+print as they are generated (the old ``done = engine.run()`` one-liner
+still works — see ``src/repro/engine/README.md`` for the migration
+map).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch xlstm-1.3b \
           [--policy q3_k] [--slots 4] [--requests 8] [--gen 32]
@@ -22,6 +29,7 @@ import numpy as np
 from repro.configs import get_config, reduced, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
+from repro.engine import Finished, TokenDelta
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 from repro.train.serve_step import make_prefill
@@ -59,7 +67,14 @@ def main():
                               max_new=args.gen))
 
     t0 = time.time()
-    done = engine.run()
+    done, shown = [], set()
+    for e in engine.stream():
+        if isinstance(e, TokenDelta) and e.rid not in shown:
+            shown.add(e.rid)            # stream: first token per request
+            print(f"  rid={e.rid} first token {e.token} "
+                  f"(pos {e.pos}, t+{time.time() - t0:.2f}s)")
+        elif isinstance(e, Finished):
+            done.append(e.result)
     dt = time.time() - t0
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
     print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "

@@ -1,10 +1,17 @@
-"""Unified request-based serving engine (diffusion + LM decode)."""
+"""Unified request-based serving engine (diffusion + LM decode):
+typed requests, streaming event lifecycle, SLO-aware multiplexing."""
 from repro.engine.api import (Engine, GenerateRequest, GenerateResult,
                               default_sampler, uses_cfg)
 from repro.engine.diffusion_engine import (SD_TURBO, TINY_SD, DiffusionEngine,
                                            SDConfig, build_denoise,
+                                           build_denoise_step, build_encode,
+                                           build_finalize_decode,
                                            init_pipeline, quantize_pipeline,
                                            steps_bucket)
+from repro.engine.events import (Admitted, Cancelled, Event, EventBus,
+                                 Finished, Preempted, PreviewLatent, Progress,
+                                 RequestHandle, TokenDelta)
+from repro.engine.router import EngineRouter
 from repro.engine.samplers import (get_sampler, list_samplers,
                                    register_sampler)
 
@@ -12,6 +19,11 @@ __all__ = [
     "Engine", "GenerateRequest", "GenerateResult", "default_sampler",
     "uses_cfg",
     "DiffusionEngine", "SDConfig", "SD_TURBO", "TINY_SD",
-    "build_denoise", "init_pipeline", "quantize_pipeline", "steps_bucket",
+    "build_denoise", "build_denoise_step", "build_encode",
+    "build_finalize_decode", "init_pipeline", "quantize_pipeline",
+    "steps_bucket",
+    "Event", "EventBus", "RequestHandle", "Admitted", "TokenDelta",
+    "PreviewLatent", "Progress", "Preempted", "Cancelled", "Finished",
+    "EngineRouter",
     "get_sampler", "list_samplers", "register_sampler",
 ]

@@ -6,12 +6,29 @@ study serves decode on the same platform.  Both workloads therefore
 share one engine surface:
 
 * a typed request (``GenerateRequest`` for text-to-image; the LM path
-  keeps its own ``serving.scheduler.Request``) is ``submit()``-ed;
+  keeps its own ``serving.scheduler.Request``) is ``submit()``-ed and
+  a :class:`repro.engine.events.RequestHandle` comes back — iterate
+  ``handle.events()`` to stream the request's typed lifecycle events
+  (``Admitted``/``TokenDelta``/``PreviewLatent``/…), or call
+  ``handle.result()`` to just wait for the payload;
 * ``step()`` advances the engine by one scheduling quantum — one
-  micro-batched denoise program for diffusion, one batched decode step
-  for the LM ``ContinuousBatcher`` — and returns how many requests it
-  touched;
-* ``run()`` drains the queue and returns the finished results.
+  micro-batched denoise program (or one denoise *segment* for
+  preview-streaming requests) for diffusion, one prefill chunk or
+  batched decode step for the LM ``ContinuousBatcher`` — and returns
+  how many requests it touched;
+* ``stream()`` is the push-style host loop: a generator that steps the
+  engine and yields every event in emission order;
+* ``cancel(rid)`` aborts a request at any lifecycle point and frees
+  its state (queue entry, slot, KV blocks);
+* ``run()`` is retained as a thin drain-the-stream compatibility
+  wrapper: it drives ``step()`` until idle and returns the finished
+  results, so pre-streaming callers keep working unchanged (and, with
+  no deadlines submitted, in bit-identical order).
+
+Requests carry optional SLO fields — ``deadline_ms`` (relative
+latency budget from submission) and ``priority`` — consumed by the
+engines' earliest-deadline-first admission and by
+:class:`repro.engine.router.EngineRouter`'s SLO-aware multiplexing.
 
 ``Engine`` is a structural :class:`typing.Protocol`:
 ``DiffusionEngine`` and ``ContinuousBatcher`` both satisfy it without
@@ -48,6 +65,15 @@ class GenerateRequest:
     disables the unconditional branch entirely.  ``seed`` alone
     determines the initial latent noise, so the same request is
     bit-identical whether it runs alone or co-batched.
+
+    ``latent_hw`` selects a per-request latent size (a shape bucket in
+    the engine's compile cache; mixed sizes never co-batch).
+    ``preview_every`` > 0 streams a
+    :class:`~repro.engine.events.PreviewLatent` event every N denoise
+    steps (the request then runs on the segmented per-step program
+    instead of the fused scan).  ``deadline_ms``/``priority`` feed EDF
+    admission: earlier deadline first, higher priority breaks ties,
+    arrival order last.
     """
     rid: int
     tokens: Sequence[int] | jax.Array
@@ -57,6 +83,9 @@ class GenerateRequest:
     steps: int = 1
     seed: int = 0
     latent_hw: int | None = None    # None -> engine config default
+    preview_every: int = 0          # 0 -> no previews (fused scan path)
+    deadline_ms: float | None = None  # SLO budget from submission
+    priority: int = 0               # higher wins EDF ties
 
 
 @dataclasses.dataclass
@@ -83,14 +112,30 @@ class GenerateResult:
 class Engine(Protocol):
     """Structural protocol every serving engine implements."""
 
-    def submit(self, request: Any) -> None:
-        """Enqueue a request (admission happens inside ``step``)."""
+    def submit(self, request: Any) -> Any:
+        """Enqueue a request (admission happens inside ``step``);
+        returns a :class:`repro.engine.events.RequestHandle`."""
         ...
 
     def step(self) -> int:
         """Advance one scheduling quantum; return #requests progressed."""
         ...
 
+    def stream(self, max_steps: int = 100_000) -> Any:
+        """Generator: step the engine, yielding typed lifecycle events
+        in emission order, until it idles."""
+        ...
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request (queued or running) and free its state;
+        True if the rid was live."""
+        ...
+
+    def has_work(self) -> bool:
+        """Whether any request is queued or in flight."""
+        ...
+
     def run(self, max_steps: int = 10_000) -> list:
-        """Drive ``step`` until the queue drains; return finished items."""
+        """Drive ``step`` until the queue drains; return finished items
+        (drain-the-stream compatibility wrapper)."""
         ...

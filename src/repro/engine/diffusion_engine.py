@@ -21,6 +21,23 @@ surface.  Design points:
   non-unit ``guidance_scale`` run the UNet on cond + uncond contexts;
   plain requests compile a single-branch program (the two variants are
   separate compile-cache entries).
+* **Streaming lifecycle** — ``submit()`` returns a
+  :class:`repro.engine.events.RequestHandle`; the engine emits typed
+  events (``Admitted``/``Progress``/``PreviewLatent``/``Finished``/
+  ``Cancelled``) on its :class:`~repro.engine.events.EventBus`.
+  Requests with ``preview_every > 0`` run on a *segmented* program set
+  (one jitted CLIP encode + one jitted single-solver-step program
+  applied ``steps`` times + one jitted finalize/VAE-decode) so the
+  host sees an x0-space ``PreviewLatent`` every N steps and can
+  ``cancel()`` between steps; plain requests keep the original fused
+  single-``lax.scan`` program, so existing ``run()`` callers stay
+  bit-identical.  Both program sets live in the same explicit compile
+  cache (segment programs need no steps bucket: a 1-step program
+  serves every step count).
+* **SLO-aware admission** — queued requests are popped
+  earliest-deadline-first (``deadline_ms``, ties broken by
+  ``priority`` then arrival); with no deadlines this reduces exactly
+  to the old FIFO order.
 
 Model-file quantization (``quantize_pipeline``) and the role-tagged
 offload accounting are unchanged from the paper's study — the engine
@@ -29,6 +46,7 @@ only reorganizes the host-side request plumbing and the jit boundary.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable
 
@@ -38,6 +56,7 @@ import jax.numpy as jnp
 from repro.core.policy import OffloadPolicy
 from repro.core.qlinear import quantize_params
 from repro.diffusion import schedule as sched_mod
+from repro.engine import events as ev
 from repro.engine import samplers as samplers_mod
 from repro.engine.api import GenerateRequest, GenerateResult, uses_cfg
 from repro.models import clip as clip_mod
@@ -141,23 +160,83 @@ def build_denoise(cfg: SDConfig, sampler_name: str, use_cfg: bool, *,
     return fn
 
 
+def build_encode(cfg: SDConfig, use_cfg: bool) -> Callable:
+    """Prompt-encoding half of the segmented (preview-streaming) path:
+    ``fn(params, tokens, neg_tokens) -> (ctx, ctx_uncond|None)``."""
+    clip_cfg = cfg.clip_cfg()
+
+    def fn(params, tokens, neg_tokens):
+        ctx = clip_mod.clip_encode(params["clip"], clip_cfg, tokens)
+        ctx_u = (clip_mod.clip_encode(params["clip"], clip_cfg, neg_tokens)
+                 if use_cfg else None)
+        return ctx, ctx_u
+    return fn
+
+
+def build_denoise_step(cfg: SDConfig, sampler_name: str,
+                       use_cfg: bool) -> Callable:
+    """One solver step of the segmented path — the same math as the
+    ``lax.scan`` body in :func:`build_denoise`, exposed as its own
+    program so the host can observe/cancel between steps:
+    ``fn(params, ctx, ctx_u, gscale, x, step) -> x`` where ``step`` is
+    one per-step slice of the sampler plan (scalars)."""
+    sampler = samplers_mod.get_sampler(sampler_name)
+    sched = sched_mod.NoiseSchedule()
+
+    def fn(params, ctx, ctx_u, gscale, x, step):
+        b = x.shape[0]
+        g = gscale[:, None, None, None]
+        xm, t = sampler.model_input(x, step)
+        tb = jnp.broadcast_to(t, (b,)).astype(jnp.int32)
+        eps = unet_mod.apply_unet(params["unet"], cfg.unet,
+                                  xm.astype(jnp.bfloat16), tb,
+                                  ctx).astype(jnp.float32)
+        if use_cfg:
+            eps_u = unet_mod.apply_unet(params["unet"], cfg.unet,
+                                        xm.astype(jnp.bfloat16), tb,
+                                        ctx_u).astype(jnp.float32)
+            eps = eps_u + g * (eps - eps_u)
+        x_new = sampler.update(sched, x, eps, step)
+        return jnp.where(step["valid"], x_new, x)
+    return fn
+
+
+def build_finalize_decode(cfg: SDConfig, sampler_name: str) -> Callable:
+    """Tail of the segmented path: ``fn(params, x) -> images`` applies
+    the sampler's finalize then the VAE decoder."""
+    sampler = samplers_mod.get_sampler(sampler_name)
+
+    def fn(params, x):
+        x0 = sampler.finalize(x)
+        return vae_mod.apply_vae_decoder(params["vae"], cfg.vae,
+                                         x0.astype(jnp.bfloat16))
+    return fn
+
+
 def request_noise(req: GenerateRequest, hw: int) -> jax.Array:
     """Initial unit-normal latent for one request, from its seed only."""
     return jax.random.normal(jax.random.PRNGKey(req.seed), (hw, hw, 4),
                              jnp.float32)
 
 
-class DiffusionEngine:
+class DiffusionEngine(ev.EventStreamMixin):
     """Micro-batching diffusion engine (implements the Engine protocol).
 
     ``step()`` pops up to ``max_batch`` queued requests that share a
-    compile group — same (sampler, steps, latent size, guidance mode) —
-    pads them to the batch bucket, runs the jitted scan program from
-    the compile cache, and retires the batch.  ``run()`` drains the
-    queue.  ``engine.traces`` counts actual jit traces.
+    compile group — same (sampler, steps, latent size, guidance mode,
+    preview cadence) — seeded earliest-deadline-first, pads them to
+    the batch bucket, and either runs the jitted scan program from the
+    compile cache and retires the batch (no previews: the original
+    fused path, bit-identical results) or advances the segmented
+    per-step program by one denoise step, emitting
+    ``Progress``/``PreviewLatent`` events and honoring ``cancel()``
+    between steps.  ``run()`` drains the queue.  ``engine.traces``
+    counts actual jit traces across all program kinds.
     """
 
-    def __init__(self, params: dict, cfg: SDConfig, *, max_batch: int = 1):
+    def __init__(self, params: dict, cfg: SDConfig, *, max_batch: int = 1,
+                 bus: ev.EventBus | None = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -165,34 +244,99 @@ class DiffusionEngine:
         self.finished: list[GenerateResult] = []
         self.traces = 0
         self._fns: dict[tuple, Callable] = {}   # explicit compile cache
+        self.bus = bus if bus is not None else ev.EventBus(clock)
+        self._inflight: dict | None = None      # segmented batch state
+        self._meta: dict[int, tuple] = {}       # rid -> (seq, deadline, prio)
+        self._subseq = 0
 
     # ------------------------------------------------------------ API
-    def submit(self, request: GenerateRequest) -> None:
+    def submit(self, request: GenerateRequest) -> ev.RequestHandle:
         samplers_mod.get_sampler(request.sampler)   # fail fast on typos
         if request.steps < 1:
             raise ValueError(f"steps must be >= 1, got {request.steps}")
+        if request.preview_every < 0:
+            raise ValueError(
+                f"preview_every must be >= 0, got {request.preview_every}")
+        hw = (self.cfg.latent_hw if request.latent_hw is None
+              else request.latent_hw)    # 0 is invalid, not "default"
+        down = 2 ** (len(self.cfg.unet.channel_mult) - 1)
+        if hw < down or hw % down:
+            raise ValueError(
+                f"latent_hw={hw} must be a positive multiple of the "
+                f"UNet downsample factor {down}")
+        if request.rid in self._meta:
+            raise ValueError(f"duplicate rid {request.rid}")
+        deadline = (float("inf") if request.deadline_ms is None
+                    else self.bus.clock() + request.deadline_ms / 1e3)
+        self._meta[request.rid] = (self._subseq, deadline, request.priority)
+        self._subseq += 1
         self.queue.append(request)
+        return self.handle(request.rid)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self._inflight is not None
+
+    def next_deadline(self) -> float:
+        """Earliest SLO deadline over queued + in-flight requests
+        (+inf if none declare one) — the router's multiplex key."""
+        cands = [self._meta[r.rid][1] for r in self.queue]
+        if self._inflight is not None:
+            cands += [self._meta[r.rid][1] for r in self._inflight["reqs"]
+                      if r.rid not in self._inflight["cancelled"]]
+        return min(cands, default=float("inf"))
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request: queued requests leave the queue; requests
+        inside a segmented batch stop emitting and are dropped at the
+        batch's end (their rows keep computing — co-batched rows cannot
+        shrink a compiled shape).  Requests already in a *fused-scan*
+        batch retire atomically and cannot be cancelled mid-program.
+        """
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue.remove(r)
+                self.bus.emit(ev.Cancelled, rid)
+                return True
+        st = self._inflight
+        if st is not None:
+            for r in st["reqs"]:
+                if r.rid == rid and rid not in st["cancelled"]:
+                    st["cancelled"].add(rid)
+                    self.bus.emit(ev.Cancelled, rid)
+                    return True
+        return False
 
     def step(self) -> int:
-        """Run one micro-batch; returns #requests retired (0 if idle)."""
+        """One scheduling quantum: advance the in-flight segmented
+        batch by one denoise step, or pop + run a new micro-batch;
+        returns #requests progressed (0 if idle)."""
+        if self._inflight is not None:
+            return self._segment_quantum()
         if not self.queue:
             return 0
-        gkey = self._group_key(self.queue[0])
-        batch: list[GenerateRequest] = []
+        seed = min(self.queue, key=self._edf_key)
+        gkey = self._group_key(seed)
+        batch: list[GenerateRequest] = [seed]
         rest: deque[GenerateRequest] = deque()
-        while self.queue:
-            r = self.queue.popleft()
+        for r in self.queue:
+            if r is seed:
+                continue
             if len(batch) < self.max_batch and self._group_key(r) == gkey:
                 batch.append(r)
             else:
                 rest.append(r)
         self.queue = rest
+        for i, r in enumerate(batch):
+            self.bus.emit(ev.Admitted, r.rid, slot=i)
+        if gkey[-1]:                     # preview_every > 0: segmented
+            self._start_segmented(batch, gkey)
+            return self._segment_quantum()
         self._run_batch(batch, gkey)
         return len(batch)
 
     def run(self, max_steps: int = 10_000) -> list[GenerateResult]:
         for _ in range(max_steps):
-            if not self.queue:
+            if not self.has_work():
                 break
             self.step()
         return list(self.finished)    # snapshot: later runs keep appending
@@ -201,28 +345,42 @@ class DiffusionEngine:
     def _use_cfg(self, req: GenerateRequest) -> bool:
         return uses_cfg(req.neg_tokens, req.guidance_scale)
 
+    def _edf_key(self, req: GenerateRequest) -> tuple:
+        """Same policy as the LM scheduler: expired deadlines sort
+        behind every still-feasible request, then EDF, then priority,
+        then arrival (no deadlines -> exact FIFO)."""
+        seq, deadline, prio = self._meta[req.rid]
+        expired = deadline < self.bus.clock()
+        return (expired, deadline, -prio, seq)
+
     def _group_key(self, req: GenerateRequest) -> tuple:
         fixed = samplers_mod.get_sampler(req.sampler).fixed_steps
         return (req.sampler, fixed or req.steps,
-                req.latent_hw or self.cfg.latent_hw, self._use_cfg(req))
+                req.latent_hw or self.cfg.latent_hw, self._use_cfg(req),
+                req.preview_every)
 
-    def _compiled(self, sampler: str, sbucket: int, hw: int,
-                  use_cfg: bool) -> Callable:
-        key = (sampler, sbucket, hw, use_cfg, self.max_batch)
+    def _counted_jit(self, key: tuple, inner: Callable) -> Callable:
+        """Compile-cache lookup; wraps ``inner`` so ``self.traces``
+        counts actual jit traces."""
         fn = self._fns.get(key)
         if fn is None:
-            inner = build_denoise(self.cfg, sampler, use_cfg)
-
-            def counted(params, tokens, neg, g, noise, plan, _inner=inner):
+            def counted(*args, _inner=inner):
                 self.traces += 1        # runs at trace time only
-                return _inner(params, tokens, neg, g, noise, plan)
+                return _inner(*args)
 
             fn = jax.jit(counted)
             self._fns[key] = fn
         return fn
 
-    def _run_batch(self, reqs: list[GenerateRequest], gkey: tuple) -> None:
-        sampler_name, steps, hw, use_cfg = gkey
+    def _compiled(self, sampler: str, sbucket: int, hw: int,
+                  use_cfg: bool) -> Callable:
+        return self._counted_jit(
+            (sampler, sbucket, hw, use_cfg, self.max_batch),
+            build_denoise(self.cfg, sampler, use_cfg))
+
+    def _pack(self, reqs: list[GenerateRequest], hw: int) -> tuple:
+        """Batch request rows, padding to the bucket with row 0
+        (padded rows are replicas and are discarded at retire)."""
         tl = self.cfg.text_len
 
         def tok_arr(t):
@@ -238,14 +396,77 @@ class DiffusionEngine:
             negs.append(negs[0])
             noises.append(noises[0])
             scales.append(scales[0])
+        return (jnp.stack(toks), jnp.stack(negs),
+                jnp.asarray(scales, jnp.float32), jnp.stack(noises))
 
+    # ------------------------------------------------- fused scan path
+    def _run_batch(self, reqs: list[GenerateRequest], gkey: tuple) -> None:
+        sampler_name, steps, hw, use_cfg, _ = gkey
+        toks, negs, scales, noises = self._pack(reqs, hw)
         sbucket = steps_bucket(steps)
         sampler = samplers_mod.get_sampler(sampler_name)
         plan = sampler.plan(sched_mod.NoiseSchedule(), steps, sbucket)
         fn = self._compiled(sampler_name, sbucket, hw, use_cfg)
-        imgs = fn(self.params, jnp.stack(toks), jnp.stack(negs),
-                  jnp.asarray(scales, jnp.float32), jnp.stack(noises), plan)
+        imgs = fn(self.params, toks, negs, scales, noises, plan)
         for i, r in enumerate(reqs):
-            self.finished.append(GenerateResult(
+            res = GenerateResult(
                 rid=r.rid, image=imgs[i], sampler=sampler_name,
-                steps=steps, seed=r.seed, decode_steps=steps))
+                steps=steps, seed=r.seed, decode_steps=steps)
+            self.finished.append(res)
+            self.bus.emit(ev.Finished, r.rid, result=res)
+
+    # ------------------------------------------------- segmented path
+    def _start_segmented(self, reqs: list[GenerateRequest],
+                         gkey: tuple) -> None:
+        sampler_name, steps, hw, use_cfg, _ = gkey
+        toks, negs, scales, noises = self._pack(reqs, hw)
+        enc = self._counted_jit(("enc", use_cfg, self.max_batch),
+                                build_encode(self.cfg, use_cfg))
+        ctx, ctx_u = enc(self.params, toks, negs)
+        sampler = samplers_mod.get_sampler(sampler_name)
+        # Unpadded plan: the 1-step segment program serves any step
+        # count, so segmented requests never pay pow2 padding steps.
+        plan = sampler.plan(sched_mod.NoiseSchedule(), steps, steps)
+        self._inflight = dict(
+            reqs=reqs, key=(sampler_name, steps, hw, use_cfg),
+            x=sampler.init_latent(noises, plan), ctx=ctx, ctx_u=ctx_u,
+            g=scales, plan=plan, i=0, cancelled=set())
+
+    def _segment_quantum(self) -> int:
+        st = self._inflight
+        sampler_name, steps, hw, use_cfg = st["key"]
+        live = [(row, r) for row, r in enumerate(st["reqs"])
+                if r.rid not in st["cancelled"]]
+        if not live:                     # everyone cancelled mid-flight
+            self._inflight = None
+            return 0
+        i = st["i"]
+        step_slice = {k: v[i] for k, v in st["plan"].items()}
+        fn = self._counted_jit(
+            ("seg", sampler_name, hw, use_cfg, self.max_batch),
+            build_denoise_step(self.cfg, sampler_name, use_cfg))
+        st["x"] = fn(self.params, st["ctx"], st["ctx_u"], st["g"],
+                     st["x"], step_slice)
+        st["i"] = i + 1
+        sampler = samplers_mod.get_sampler(sampler_name)
+        for row, r in live:
+            self.bus.emit(ev.Progress, r.rid, step=st["i"], total=steps,
+                          phase="denoise")
+            if st["i"] % r.preview_every == 0 or st["i"] == steps:
+                self.bus.emit(ev.PreviewLatent, r.rid, step=st["i"],
+                              total=steps,
+                              latent=sampler.finalize(st["x"][row]))
+        if st["i"] >= steps:
+            dec = self._counted_jit(("dec", sampler_name, hw,
+                                     self.max_batch),
+                                    build_finalize_decode(self.cfg,
+                                                          sampler_name))
+            imgs = dec(self.params, st["x"])
+            for row, r in live:
+                res = GenerateResult(
+                    rid=r.rid, image=imgs[row], sampler=sampler_name,
+                    steps=steps, seed=r.seed, decode_steps=steps)
+                self.finished.append(res)
+                self.bus.emit(ev.Finished, r.rid, result=res)
+            self._inflight = None
+        return len(live)

@@ -1,0 +1,114 @@
+"""SLO-aware multiplexer: one streaming surface over both engines.
+
+The paper serves Stable Diffusion and LM decode on the same
+general-purpose platform; :class:`EngineRouter` is the host-side
+counterpart — a single ``submit()/step()/stream()/cancel()`` surface
+multiplexing a :class:`repro.engine.DiffusionEngine` and an LM
+``serving.ContinuousBatcher`` (any object with the structural
+``Engine`` protocol plus ``has_work()``/``next_deadline()``/``bus``)
+in one host loop:
+
+* **Dispatch** — :class:`repro.engine.api.GenerateRequest` goes to the
+  diffusion engine, everything else (``serving.Request``) to the LM
+  engine; rids must be globally unique across the router.
+* **One event bus** — at construction the router rebinds both engines
+  onto a single :class:`~repro.engine.events.EventBus` (they must not
+  have emitted yet), so ``stream()`` yields a totally-ordered merge of
+  diffusion and LM events with no cross-bus reconciliation, and the
+  handles it returns pump the *router* (all multiplexed work keeps
+  moving while a consumer waits on one request).
+* **SLO-aware scheduling** — each ``step()`` advances the engine whose
+  pending work has the earliest deadline (``next_deadline()``);
+  deadline ties fall back to round-robin so a deadline-free diffusion
+  backlog cannot starve LM decode or vice versa.  Within each engine,
+  admission is EDF-within-fairness-groups and the LM engine can
+  preempt over-budget decodes (see ``serving.scheduler``).
+* **``run()`` compatibility** — drains the stream and returns every
+  ``Finished`` payload in completion order, mirroring the engines' own
+  drain-the-queue ``run()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+from repro.engine import events as ev
+from repro.engine.api import GenerateRequest
+
+
+class EngineRouter(ev.EventStreamMixin):
+    """Multiplexes a diffusion engine and an LM engine behind one
+    streaming Engine surface (either may be ``None``)."""
+
+    def __init__(self, diffusion: Any = None, lm: Any = None):
+        if diffusion is None and lm is None:
+            raise ValueError("router needs at least one engine")
+        self.diffusion = diffusion
+        self.lm = lm
+        self.engines = [e for e in (diffusion, lm) if e is not None]
+        # Rebind every engine onto one shared bus (single clock, one
+        # total event order).  Refuse once events exist: merging
+        # populated buses would reorder history.
+        self.bus = self.engines[0].bus
+        for e in self.engines:
+            if e.bus.log:
+                raise ValueError(
+                    "engines must join the router before emitting "
+                    "events (their buses are rebound to a shared one)")
+        for e in self.engines:
+            e.bus = self.bus
+        self._owner: dict[int, Any] = {}      # rid -> engine
+        self._rr = 0                          # deadline-tie rotation
+
+    # --------------------------------------------------------------- API
+    def submit(self, request: Any) -> ev.RequestHandle:
+        engine = (self.diffusion if isinstance(request, GenerateRequest)
+                  else self.lm)
+        if engine is None:
+            raise ValueError(
+                f"no engine for {type(request).__name__} "
+                f"(router has diffusion={self.diffusion is not None}, "
+                f"lm={self.lm is not None})")
+        if request.rid in self._owner:
+            raise ValueError(f"duplicate rid {request.rid} across router")
+        engine.submit(request)
+        self._owner[request.rid] = engine
+        # The handle pumps the router, not the owning engine, so a
+        # consumer blocked on one request keeps all work moving.
+        return ev.RequestHandle(request.rid, self.bus, self.step,
+                                self.cancel, self.has_work)
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self.engines)
+
+    def next_deadline(self) -> float:
+        return min((e.next_deadline() for e in self.engines),
+                   default=float("inf"))
+
+    def cancel(self, rid: int) -> bool:
+        engine = self._owner.get(rid)
+        return engine.cancel(rid) if engine is not None else False
+
+    def step(self) -> int:
+        """Advance the engine with the earliest-deadline pending work
+        by one quantum (deadline ties rotate round-robin); returns
+        #requests progressed."""
+        busy = [e for e in self.engines if e.has_work()]
+        if not busy:
+            return 0
+        best = min(e.next_deadline() for e in busy)
+        tied = [e for e in busy if e.next_deadline() == best]
+        engine = tied[self._rr % len(tied)]
+        self._rr += 1
+        return engine.step()
+
+    def run(self, max_steps: int = 100_000) -> list:
+        """Drain-the-stream compatibility wrapper: returns every
+        ``Finished`` payload in completion order (mixed types:
+        ``GenerateResult`` and LM ``Request`` objects)."""
+        return [e.result for e in self.stream(max_steps)
+                if isinstance(e, ev.Finished)]
+
+    def stream(self, max_steps: int = 100_000) -> Iterator[ev.Event]:
+        """Merged event stream over both engines (see
+        :class:`~repro.engine.events.EventStreamMixin`)."""
+        return super().stream(max_steps)

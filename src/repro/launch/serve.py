@@ -1,15 +1,20 @@
 """Serving launcher: quantized-offload LM serving via the engine API.
 
   python -m repro.launch.serve --arch deepseek-moe-16b [--policy q8_0] \
-      [--slots 4] [--requests 8] [--gen 16]
+      [--slots 4] [--requests 8] [--gen 16] [--deadline-ms 500]
 
 Requests flow through the ``ContinuousBatcher`` engine (the same
-``submit()``/``step()``/``run()`` protocol as the diffusion engine):
+``submit()``/``stream()``/``run()`` protocol as the diffusion engine):
 a fixed slot pool over the paged KV block pool, chunked-prefill
 admission mid-flight, EOS/max-length retirement freeing blocks back to
-the pool.  Runs reduced configs on CPU; on TPU the
-same path serves full configs with TP-only weight sharding (no FSDP —
-see DESIGN.md) and the Pallas fused-dequant kernels.
+the pool.  The host loop consumes the typed event stream —
+``Admitted``/``TokenDelta``/``Finished`` — so it reports
+time-to-first-token per request instead of waiting for a
+batch-and-drain ``run()``; ``--deadline-ms`` attaches an SLO budget to
+every request and the scheduler admits earliest-deadline-first.  Runs
+reduced configs on CPU; on TPU the same path serves full configs with
+TP-only weight sharding (no FSDP — see DESIGN.md) and the Pallas
+fused-dequant kernels.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import numpy as np
 from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
+from repro.engine import Finished, TokenDelta
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 
@@ -35,6 +41,8 @@ def main() -> None:
                     help="default: one per slot")
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO budget (EDF admission)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -53,17 +61,27 @@ def main() -> None:
     engine = ContinuousBatcher(qp, cfg, slots=args.slots, max_len=max_len,
                                enc_embeds=inp.get("enc_embeds"))
     prompts = np.asarray(inp["tokens"])
+    submit_ts = {}
     for r in range(n_requests):
+        submit_ts[r] = engine.bus.clock()
         engine.submit(Request(rid=r,
                               prompt=prompts[r % args.slots].tolist(),
-                              max_new=args.gen))
+                              max_new=args.gen,
+                              deadline_ms=args.deadline_ms))
     t0 = time.time()
-    done = engine.run()
+    done, ttft = [], {}
+    for e in engine.stream():
+        if isinstance(e, TokenDelta) and e.rid not in ttft:
+            ttft[e.rid] = e.ts - submit_ts[e.rid]
+        elif isinstance(e, Finished):
+            done.append(e.result)
     dt = time.time() - t0
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
     print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
           f"({engine.prefill_quanta} prefill + {engine.decode_quanta} "
           f"decode quanta)")
+    print(f"ttft: first {min(ttft.values()):.2f}s / "
+          f"worst {max(ttft.values()):.2f}s (incl. compile)")
     print("first request:", done[0].prompt + done[0].out)
 
 

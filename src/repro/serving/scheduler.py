@@ -37,9 +37,34 @@ around two compiled programs, with all cache bookkeeping delegated to
   attention decoders only), retiring requests donate their full prompt
   blocks to a hash-chained prefix cache; a later request with the same
   prefix adopts the blocks read-only and skips their prefill chunks.
-* **Fairness** — the wait queue admits round-robin across request
-  ``group`` ids instead of strict FIFO, so one chatty tenant cannot
-  head-of-line-block the rest.
+* **Fairness + SLO-aware admission** — the wait queue admits
+  round-robin across request ``group`` ids instead of strict FIFO, so
+  one chatty tenant cannot head-of-line-block the rest; *within* a
+  group the pop is earliest-deadline-first (``deadline_ms``, ties by
+  ``priority`` then arrival — with no deadlines this is exactly the
+  old FIFO).  Requests whose deadline has already expired sort behind
+  every still-feasible request: the scheduler serves whom it can
+  still help.
+* **Streaming lifecycle** — ``submit()`` returns a
+  :class:`repro.engine.events.RequestHandle`; the scheduler emits
+  ``Admitted`` at slot assignment, ``Progress(phase="prefill")`` per
+  prompt chunk, ``TokenDelta`` per generated token (``pos`` strictly
+  increasing), and ``Finished`` at retirement on its
+  :class:`~repro.engine.events.EventBus`.
+* **Cancellation** — ``cancel(rid)`` removes a queued request or
+  evicts a running one mid-prefill/mid-decode, releasing every KV
+  block back to the pool (``check_consistency()`` guards the
+  free-list/table disjointness) and emitting a terminal
+  ``Cancelled``.
+* **Preemption** — ``preempt(rid)`` (or, with
+  ``preempt_over_budget=True``, automatic eviction of decodes that
+  outlived their deadline while feasible requests wait) releases the
+  slot's blocks and requeues the request; on re-admission its prompt
+  *plus generated tokens* are re-ingested through chunked prefill —
+  bit-exact on the decode-step-scan path (``fused_prefill=False``),
+  agreement-gated on the fused path — and emission resumes where it
+  left off (``Progress(phase="resume")``, never a second
+  ``Admitted``).
 
 ``step()`` runs exactly one scheduling quantum — prefill-prioritized:
 pending prompt chunks first, otherwise one batched decode step — and
@@ -50,6 +75,7 @@ records it in ``last_quantum`` / the ``prefill_quanta`` /
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict, deque
 from typing import Any, Callable
 
@@ -58,6 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engine import events as ev
 from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
                                       cache_slot_view, init_cache,
                                       lm_decode_step, lm_prefill_chunk,
@@ -74,6 +101,8 @@ class Request:
     max_new: int = 16
     eos: int | None = None
     group: int = 0                # fairness class (tenant / priority bin)
+    deadline_ms: float | None = None  # SLO budget from submission (EDF)
+    priority: int = 0             # higher wins EDF ties within a group
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     prefill_steps: int = 0        # prefill quanta this request consumed
@@ -83,6 +112,15 @@ class Request:
     # the feed.  A declared field (not injected at admission) so
     # copied/replayed requests have it.
     _cursor: int = dataclasses.field(default=0, repr=False)
+    # Scheduler-internal SLO/resume state (declared fields so replayed
+    # or preempted copies survive dataclasses.replace):
+    _seq: int = dataclasses.field(default=0, repr=False)    # arrival
+    _deadline: float = dataclasses.field(default=float("inf"),
+                                         repr=False)        # abs clock
+    # Tokens to (re-)ingest at admission: the prompt for a fresh
+    # request, prompt + generated-so-far after a preemption.
+    _feed: list[int] = dataclasses.field(default_factory=list,
+                                         repr=False)
 
 
 def make_paged_decode(cfg: ModelConfig):
@@ -126,13 +164,21 @@ def _make_copy_block():
     return jax.jit(copy, donate_argnums=(0,))
 
 
-class ContinuousBatcher:
+class ContinuousBatcher(ev.EventStreamMixin):
     """``max_len`` is the *per-request* logical capacity (size it with
     :meth:`required_len`); ``decode_fn`` overrides the compiled decode
     quantum and must follow :func:`make_paged_decode`'s signature —
     ``(params, tokens (S,1), positions (S,), block_tables (S,MB),
     cache) -> (next_tokens (S,), cache)`` (the paged runtime changed
-    this from the old ``(params, tokens, pos, cache)`` contract)."""
+    this from the old ``(params, tokens, pos, cache)`` contract).
+
+    ``edf=False`` disables the within-group earliest-deadline-first
+    pop (pure arrival order — the FIFO baseline the serving benchmark
+    compares deadline hit-rates against).  ``preempt_over_budget=True``
+    lets admission evict a decoding request that has outlived its
+    deadline when feasible requests are waiting.  ``clock`` is the
+    SLO/event timebase (injectable for deterministic tests and
+    virtual-time benchmarks)."""
 
     def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
                  max_len: int, enc_embeds=None,
@@ -142,7 +188,11 @@ class ContinuousBatcher:
                  prefill_chunk: int = 8,
                  prefix_share: bool = False,
                  extra_blocks: int = 0,
-                 fused_prefill: bool = True):
+                 fused_prefill: bool = True,
+                 bus: ev.EventBus | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 edf: bool = True,
+                 preempt_over_budget: bool = False):
         if prefix_share and (set(cfg.block_pattern) != {"attn"}
                              or cfg.is_enc_dec):
             raise ValueError(
@@ -175,9 +225,15 @@ class ContinuousBatcher:
         self._pending: list[list[int]] = [[] for _ in range(slots)]
         self._next_tok = np.zeros(slots, np.int32)
         self.finished: list[Request] = []
-        # Wait queue: one FIFO per fairness group, admitted round-robin.
-        self._groups: "OrderedDict[int, deque[Request]]" = OrderedDict()
+        # Wait queue: one list per fairness group, admitted round-robin
+        # across groups, EDF-popped within a group.
+        self._groups: "OrderedDict[int, list[Request]]" = OrderedDict()
         self._rr: deque[int] = deque()
+        self.bus = bus if bus is not None else ev.EventBus(clock)
+        self.edf = edf
+        self.preempt_over_budget = preempt_over_budget
+        self.preemptions = 0
+        self._subseq = 0
         self.prefill_quanta = 0
         self.decode_quanta = 0
         # Admission cost in per-token kernel launches: the decode-step
@@ -204,7 +260,7 @@ class ContinuousBatcher:
         return prompt_len + max_new - 1
 
     # --------------------------------------------------------------- API
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> ev.RequestHandle:
         need = len(req.prompt) + req.max_new - 1
         if need > self.max_len:
             # Reject instead of silently truncating: sizing is exact
@@ -213,14 +269,56 @@ class ContinuousBatcher:
             raise ValueError(
                 f"prompt {len(req.prompt)} + max_new {req.max_new} needs "
                 f"capacity {need} > per-request max_len={self.max_len}")
+        # Fail fast on rid reuse (same check as DiffusionEngine / the
+        # router): a duplicate would otherwise crash later inside
+        # step() against the bus lifecycle invariants, after the slot
+        # and blocks were already taken.
+        if (self.bus.terminal(req.rid) is not None
+                or self.bus.admitted(req.rid)
+                or any(r.rid == req.rid
+                       for q in self._groups.values() for r in q)):
+            raise ValueError(f"duplicate rid {req.rid}")
+        req._seq = self._subseq
+        self._subseq += 1
+        req._deadline = (float("inf") if req.deadline_ms is None
+                         else self.bus.clock() + req.deadline_ms / 1e3)
+        if not req._feed:
+            req._feed = list(req.prompt)
+        self._enqueue(req)
+        return self.handle(req.rid)
+
+    def _enqueue(self, req: Request) -> None:
         if req.group not in self._groups:
-            self._groups[req.group] = deque()
+            self._groups[req.group] = []
             self._rr.append(req.group)
         self._groups[req.group].append(req)
 
     @property
     def queue_len(self) -> int:
         return sum(len(q) for q in self._groups.values())
+
+    def has_work(self) -> bool:
+        return bool(self.queue_len) or any(s is not None
+                                           for s in self.slots)
+
+    def next_deadline(self) -> float:
+        """Earliest SLO deadline over queued + running requests (+inf
+        if none declare one) — the router's multiplex key."""
+        cands = [r._deadline for q in self._groups.values() for r in q]
+        cands += [r._deadline for r in self.slots if r is not None]
+        return min(cands, default=float("inf"))
+
+    def _edf_key(self, req: Request) -> tuple:
+        """EDF pop order within a fairness group.  Requests whose
+        deadline already expired sort *behind* every still-feasible
+        request (serve whom you can still help — and keep a preempted
+        over-budget request from instantly reclaiming its slot);
+        within a feasibility class: deadline, then priority (higher
+        first), then arrival."""
+        if not self.edf:
+            return (req._seq,)
+        expired = req._deadline < self.bus.clock()
+        return (expired, req._deadline, -req.priority, req._seq)
 
     def _pop_round_robin(self) -> Request | None:
         while self._rr:
@@ -230,11 +328,13 @@ class ContinuousBatcher:
                 del self._groups[gid]   # stays O(live groups), not
                 continue                # O(groups ever seen)
             self._rr.rotate(-1)
-            return self._groups[gid].popleft()
+            q = self._groups[gid]
+            best = min(range(len(q)), key=lambda i: self._edf_key(q[i]))
+            return q.pop(best)
         return None
 
     def _requeue_front(self, req: Request) -> None:
-        self._groups[req.group].appendleft(req)
+        self._groups[req.group].insert(0, req)
         # Undo the rotation so the group keeps its turn.
         self._rr.rotate(1)
 
@@ -249,19 +349,98 @@ class ContinuousBatcher:
             req = self._pop_round_robin()
             if req is None:
                 break
-            reused = self.runtime.admit(i, req.prompt, req.max_new)
+            remaining = req.max_new - len(req.out)
+            reused = self.runtime.admit(i, req._feed, remaining)
             if reused is None:          # pool pressure: try again later
                 self._requeue_front(req)
                 break
             self.slots[i] = req
-            req._cursor = reused        # prompt tokens already cached
-            self._pending[i] = list(req.prompt[reused:])
+            req._cursor = reused        # feed tokens already cached
+            self._pending[i] = list(req._feed[reused:])
             self.cache = self._reset_fn(self.cache, jnp.int32(i))
+            if self.bus.admitted(req.rid):   # back from preemption
+                self.bus.emit(ev.Progress, req.rid, phase="resume",
+                              step=len(req.out), total=req.max_new)
+            else:
+                self.bus.emit(ev.Admitted, req.rid, slot=i)
+
+    def _maybe_preempt(self) -> None:
+        """With ``preempt_over_budget``: if feasible requests wait and
+        no slot is free, evict the most-over-budget *decoding* request
+        (its deadline expired; the waiter's has not) back to the
+        queue.  At most one eviction per quantum bounds churn.
+        Requires EDF admission: under the pure-FIFO pop the evicted
+        victim (earliest arrival) would win the very next pop and
+        reclaim its slot, starving the feasible waiter while
+        re-prefilling its whole feed each cycle."""
+        if not self.preempt_over_budget or not self.edf \
+                or not self.queue_len:
+            return
+        if any(s is None for s in self.slots):
+            return
+        now = self.bus.clock()
+        feasible_waiter = any(r._deadline >= now
+                              for q in self._groups.values() for r in q)
+        if not feasible_waiter:
+            return
+        victims = [(now - r._deadline, i)
+                   for i, r in enumerate(self.slots)
+                   if r is not None and not self._pending[i]
+                   and r._deadline < now]
+        if victims:
+            _, i = max(victims)
+            self._preempt_slot(i, "deadline-overrun")
+
+    def _preempt_slot(self, i: int, reason: str) -> None:
+        req = self.slots[i]
+        cached = req._feed[:self.runtime.pos[i]]
+        self.runtime.release(
+            i, cached if self.runtime.prefix is not None else None)
+        self.slots[i] = None
+        self._pending[i] = []
+        # Resume by re-ingesting prompt + everything generated so far:
+        # the chunked-prefill path is bit-identical to decode, so the
+        # continuation matches an uninterrupted run.
+        req._feed = list(req.prompt) + list(req.out)
+        self.preemptions += 1
+        self.bus.emit(ev.Preempted, req.rid, reason=reason)
+        self._enqueue(req)
+
+    def preempt(self, rid: int, reason: str = "explicit") -> bool:
+        """Evict a running request back to the wait queue (blocks
+        released, resume via prefill); True if ``rid`` held a slot."""
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                self._preempt_slot(i, reason)
+                return True
+        return False
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request wherever it is — wait queue, mid-prefill,
+        or mid-decode.  A running request's slot and every KV block it
+        holds return to the pool immediately (the next quantum's
+        admission can reuse them); emits terminal ``Cancelled``."""
+        for gid, q in self._groups.items():
+            for r in q:
+                if r.rid == rid:
+                    q.remove(r)
+                    self.bus.emit(ev.Cancelled, rid)
+                    return True
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                self.runtime.release(i)   # no prefix donation: blocks
+                self.slots[i] = None      # may be half-written
+                self._pending[i] = []
+                self.runtime.check_consistency()
+                self.bus.emit(ev.Cancelled, rid)
+                return True
+        return False
 
     # ------------------------------------------------------- scheduling
     def step(self) -> int:
         """One scheduling quantum (prefill-prioritized); returns the
         number of requests progressed."""
+        self._maybe_preempt()
         self._admit()
         for i, req in enumerate(self.slots):
             if req is not None and self._pending[i]:
@@ -289,9 +468,13 @@ class ContinuousBatcher:
         self.prefill_quanta += 1
         self.prefill_launches += 1 if self.fused_prefill else len(chunk)
         self.last_quantum = ("prefill", 1)
-        if not self._pending[i]:        # prompt done: first token is out
+        self.bus.emit(ev.Progress, req.rid, phase="prefill",
+                      step=req._cursor, total=len(req._feed))
+        if not self._pending[i]:        # feed done: next token is out
             tok = int(jax.device_get(nxt)[0])
             req.out.append(tok)
+            self.bus.emit(ev.TokenDelta, req.rid, token=tok,
+                          pos=len(req.out) - 1)
             self._next_tok[i] = tok
             self._maybe_retire(i)
         return 1
@@ -317,6 +500,8 @@ class ContinuousBatcher:
             tok = int(nxt_host[i])
             req.out.append(tok)
             req.decode_steps += 1
+            self.bus.emit(ev.TokenDelta, req.rid, token=tok,
+                          pos=len(req.out) - 1)
             self._next_tok[i] = tok
             self._maybe_retire(i)
         return len(active)
@@ -330,13 +515,17 @@ class ContinuousBatcher:
         if over or hit_eos or trunc:
             req.done = True
             self.finished.append(req)
+            # Donating req.prompt stays valid after a resume: the feed
+            # starts with the prompt, so the table's leading full
+            # blocks hold exactly the prompt's KV either way.
             self.runtime.release(i, req.prompt)
             self.slots[i] = None        # slot freed -> next admit fills
             self._pending[i] = []
+            self.bus.emit(ev.Finished, req.rid, result=req)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         for _ in range(max_steps):
-            if not self.queue_len and all(s is None for s in self.slots):
+            if not self.has_work():
                 break
             self.step()
         return list(self.finished)    # snapshot: later runs keep appending

@@ -1,5 +1,6 @@
 """Engine API tests: protocol conformance, sampler registry, CFG,
-co-batch determinism, compile-cache / trace-count behavior."""
+co-batch determinism, compile-cache / trace-count behavior, streaming
+previews, per-request latent sizes."""
 import dataclasses
 
 import jax
@@ -9,9 +10,10 @@ import pytest
 
 from repro.configs.base import ModelConfig
 from repro.diffusion import schedule as S
-from repro.engine import (TINY_SD, DiffusionEngine, Engine, GenerateRequest,
-                          build_denoise, get_sampler, init_pipeline,
-                          list_samplers, steps_bucket)
+from repro.engine import (TINY_SD, Admitted, Cancelled, DiffusionEngine,
+                          Engine, Finished, GenerateRequest, PreviewLatent,
+                          Progress, build_denoise, get_sampler,
+                          init_pipeline, list_samplers, steps_bucket)
 from repro.models.transformer import init_lm
 from repro.serving.scheduler import ContinuousBatcher
 from repro.serving.scheduler import Request as LMRequest
@@ -171,6 +173,175 @@ def test_per_request_guidance_scale_applies(sd_params, toks):
     imgs = {r.rid: f32(r.image) for r in res}
     assert np.isfinite(imgs[0]).all() and np.isfinite(imgs[1]).all()
     assert np.abs(imgs[0] - imgs[1]).max() > 1e-4
+
+
+def test_preview_stream_matches_fused_scan(sd_params, toks):
+    """The segmented (preview-streaming) program path must reproduce
+    the fused single-scan result, and stream Progress + PreviewLatent
+    events at the requested cadence."""
+    for sampler, steps in (("ddim", 3), ("euler", 2)):
+        e1 = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+        e1.submit(GenerateRequest(rid=0, tokens=toks[0], sampler=sampler,
+                                  steps=steps, seed=5))
+        ref = np.asarray(e1.run()[0].image, np.float32)
+        e2 = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+        h = e2.submit(GenerateRequest(rid=0, tokens=toks[0],
+                                      sampler=sampler, steps=steps,
+                                      seed=5, preview_every=1))
+        evs = list(h.events())
+        np.testing.assert_allclose(
+            np.asarray(h.result().image, np.float32), ref,
+            atol=1e-5, rtol=1e-5)
+        previews = [e for e in evs if isinstance(e, PreviewLatent)]
+        assert [p.step for p in previews] == list(range(1, steps + 1))
+        assert all(p.latent.shape == (8, 8, 4) for p in previews)
+        prog = [e for e in evs if isinstance(e, Progress)]
+        assert [p.step for p in prog] == list(range(1, steps + 1))
+
+
+def test_preview_cadence_and_final_step_always_previewed(sd_params, toks):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    h = eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="ddim",
+                                   steps=5, seed=1, preview_every=2))
+    steps = [e.step for e in h.events() if isinstance(e, PreviewLatent)]
+    assert steps == [2, 4, 5]       # every 2nd + the final step
+
+
+def test_preview_requests_never_cobatch_with_plain(sd_params, toks):
+    """preview_every is part of the group key: a plain request and a
+    preview request with otherwise identical settings run as separate
+    batches, and the plain one keeps its fused-scan program."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="ddim",
+                               steps=2, seed=1))
+    eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="ddim",
+                               steps=2, seed=2, preview_every=1))
+    n1 = eng.step()                 # plain batch runs alone
+    assert n1 == 1
+    assert not any(isinstance(e, PreviewLatent) for e in eng.bus.log)
+    res = eng.run()
+    assert sorted(r.rid for r in res) == [0, 1]
+    assert any(isinstance(e, PreviewLatent) for e in eng.bus.log)
+
+
+def test_diffusion_cancel_queued_and_mid_denoise(sd_params, toks):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="ddim",
+                               steps=3, seed=1, preview_every=1))
+    h1 = eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="ddim",
+                                    steps=3, seed=2))
+    assert h1.cancel()              # still queued: leaves the queue
+    assert h1.state == "CANCELLED"
+    eng.step()                      # admit rid 0, first segment
+    assert eng.cancel(0)            # mid-denoise: segmented path
+    res = eng.run()
+    assert res == []                # nobody finished
+    assert not eng.has_work()
+    for rid in (0, 1):
+        evs = [e for e in eng.bus.log if e.rid == rid]
+        assert isinstance(evs[-1], Cancelled)
+    assert not eng.cancel(7)        # unknown rid
+
+
+def test_handle_survives_zero_progress_quantum(sd_params, toks):
+    """A quantum that progresses 0 requests and emits nothing (here:
+    clearing a fully-cancelled segmented batch) must not trip the
+    handle's idle guard while queued work remains."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="ddim",
+                               steps=3, seed=1, preview_every=1))
+    eng.step()                      # segmented batch in flight
+    assert eng.cancel(0)
+    h = eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="turbo",
+                                   steps=1, seed=2))
+    assert h.result() is not None   # pumps through the dead batch
+    assert h.state == "FINISHED"
+
+
+def test_bus_compaction_drops_terminal_history(sd_params, toks):
+    """compact() frees finished requests' event payloads (previews)
+    without skewing later stream consumers."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="ddim",
+                               steps=3, seed=1, preview_every=1))
+    eng.run()
+    n = len(eng.bus.log)
+    assert eng.bus.compact() == n and not eng.bus.log
+    assert isinstance(eng.bus.terminal(0), Finished)    # verdict kept
+    h = eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="ddim",
+                                   steps=2, seed=2, preview_every=1))
+    evs = list(h.events())          # cursors are seq-based: no skew
+    assert isinstance(evs[0], Admitted)
+    assert isinstance(evs[-1], Finished)
+    assert all(e.rid == 1 for e in evs)
+    # A handle whose terminal was consumed elsewhere (run) and then
+    # compacted must terminate cleanly: no events, result intact.
+    eng.bus.compact()
+    assert list(h.events()) == []
+    assert h.result() is not None and h.state == "FINISHED"
+
+
+def test_duplicate_rid_rejected(sd_params, toks):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], steps=1, seed=1))
+    with pytest.raises(ValueError, match="duplicate rid"):
+        eng.submit(GenerateRequest(rid=0, tokens=toks[1], steps=1,
+                                   seed=2))
+
+
+# --------------------------------------------------- per-request sizes
+def test_latent_hw_mixed_sizes_never_cobatch(sd_params, toks):
+    """Per-request latent sizes ride the group/compile key as shape
+    buckets: a 4- and a 16-latent request run as separate programs
+    with correctly sized outputs."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    eng.submit(GenerateRequest(rid=0, tokens=toks[0], sampler="turbo",
+                               steps=1, seed=1, latent_hw=4))
+    eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="turbo",
+                               steps=1, seed=2, latent_hw=16))
+    assert eng.step() == 1          # sizes must not share a batch
+    res = {r.rid: r for r in eng.run()}
+    assert res[0].image.shape == (8, 8, 3)      # 2x VAE upsample
+    assert res[1].image.shape == (32, 32, 3)
+    assert eng.traces == 2          # one program per shape bucket
+    admits = {e.rid: e for e in eng.bus.log if isinstance(e, Admitted)}
+    assert admits[0].slot == 0 and admits[1].slot == 0
+
+
+def test_latent_hw_solo_vs_cobatched_bit_identical(sd_params, toks):
+    req = GenerateRequest(rid=0, tokens=toks[0], sampler="ddim", steps=2,
+                          seed=77, latent_hw=16)
+    e1 = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    e1.submit(req)
+    solo = e1.run()[0].image
+    e2 = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    e2.submit(dataclasses.replace(req, rid=5))
+    e2.submit(GenerateRequest(rid=6, tokens=toks[1], sampler="ddim",
+                              steps=2, seed=99, latent_hw=16))
+    cob = next(r.image for r in e2.run() if r.rid == 5)
+    np.testing.assert_array_equal(f32(solo), f32(cob))
+
+
+def test_latent_hw_validated_at_submit(sd_params, toks):
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+    for hw in (5, -4, 0):           # 0 is invalid, not "use default"
+        with pytest.raises(ValueError, match="latent_hw"):
+            eng.submit(GenerateRequest(rid=hw, tokens=toks[0],
+                                       latent_hw=hw))
+
+
+def test_run_emits_finished_events_for_plain_requests(sd_params, toks):
+    """run() compatibility: the drain wrapper still produces the full
+    event lifecycle (Admitted then Finished, nothing after)."""
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+    for i in range(3):
+        eng.submit(GenerateRequest(rid=i, tokens=toks[i % 2],
+                                   sampler="turbo", steps=1, seed=i))
+    res = eng.run()
+    assert len(res) == 3
+    for i in range(3):
+        kinds = [type(e).__name__ for e in eng.bus.log if e.rid == i]
+        assert kinds == ["Admitted", "Finished"]
 
 
 def test_guided_and_unguided_programs_agree_at_scale_one(sd_params, toks):

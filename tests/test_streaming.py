@@ -1,0 +1,427 @@
+"""Streaming engine API: event lifecycle, handles, cancellation,
+preemption + bit-exact resume, EDF/SLO admission, and the router.
+
+The LM side runs a tiny dense config through the real paged runtime,
+so block accounting (``check_consistency``, pool byte baselines) is
+exercised for every cancel/preempt path.  Preempt-resume bit-equality
+runs on the decode-step-scan prefill path (``fused_prefill=False``),
+which is bit-identical to decode by the PR 2/3 oracle tests.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.engine import (TINY_SD, Admitted, Cancelled, DiffusionEngine,
+                          EngineRouter, EventBus, Finished, GenerateRequest,
+                          Preempted, PreviewLatent, Progress, TokenDelta,
+                          init_pipeline)
+from repro.models.transformer import init_lm
+from repro.serving import ContinuousBatcher, Request
+
+pytestmark = pytest.mark.serving
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                  head_dim=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def sd_params():
+    return init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+
+
+def _prompt(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(1, 90, n)]
+
+
+def _mk(params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    return ContinuousBatcher(params, CFG, **kw)
+
+
+def _events_for(cb, rid):
+    return [e for e in cb.bus.log if e.rid == rid]
+
+
+# ------------------------------------------------------------ lifecycle
+class TestEventLifecycle:
+    def test_handle_events_drive_engine_to_terminal(self, params):
+        cb = _mk(params)
+        h = cb.submit(Request(rid=0, prompt=_prompt(0, 5), max_new=4))
+        assert h.state == "QUEUED"
+        evs = list(h.events())
+        assert isinstance(evs[0], Admitted)
+        assert isinstance(evs[-1], Finished)
+        assert h.state == "FINISHED" and h.done
+        toks = [e for e in evs if isinstance(e, TokenDelta)]
+        assert [t.pos for t in toks] == list(range(4))
+        assert [t.token for t in toks] == evs[-1].result.out
+
+    def test_result_matches_run(self, params):
+        cb = _mk(params)
+        h = cb.submit(Request(rid=0, prompt=_prompt(1, 5), max_new=4))
+        via_handle = h.result().out
+        cb2 = _mk(params)
+        cb2.submit(Request(rid=0, prompt=_prompt(1, 5), max_new=4))
+        assert via_handle == cb2.run()[0].out
+
+    def test_bus_refuses_events_after_terminal(self):
+        bus = EventBus()
+        bus.emit(Finished, 0, result=None)
+        with pytest.raises(RuntimeError, match="after terminal"):
+            bus.emit(TokenDelta, 0, token=1, pos=0)
+
+    def test_bus_refuses_duplicate_admission(self):
+        bus = EventBus()
+        bus.emit(Admitted, 0, slot=0)
+        with pytest.raises(RuntimeError, match="duplicate Admitted"):
+            bus.emit(Admitted, 0, slot=1)
+
+    def test_stream_yields_every_event_once_in_order(self, params):
+        cb = _mk(params)
+        for rid in range(3):
+            cb.submit(Request(rid=rid, prompt=_prompt(rid, 4), max_new=3))
+        seen = list(cb.stream())
+        assert [e.seq for e in seen] == sorted(e.seq for e in seen)
+        assert len(seen) == len(cb.bus.log)
+        assert sum(isinstance(e, Finished) for e in seen) == 3
+
+
+# --------------------------------------------------------- cancellation
+class TestCancel:
+    def test_cancel_while_queued(self, params):
+        cb = _mk(params, slots=1)
+        cb.submit(Request(rid=0, prompt=_prompt(0, 4), max_new=3))
+        h = cb.submit(Request(rid=1, prompt=_prompt(1, 4), max_new=3))
+        assert h.cancel()
+        done = cb.run()
+        assert [r.rid for r in done] == [0]
+        assert h.state == "CANCELLED"
+        assert not any(isinstance(e, Admitted)
+                       for e in _events_for(cb, 1))
+        assert cb.runtime.allocated_blocks == 0
+
+    def test_cancel_mid_prefill_frees_blocks(self, params):
+        cb = _mk(params, slots=1, prefill_chunk=2, fused_prefill=False)
+        h = cb.submit(Request(rid=0, prompt=_prompt(2, 9), max_new=4))
+        cb.step()                       # one prefill chunk only
+        assert cb.slots[0] is not None and cb._pending[0]
+        assert cb.runtime.allocated_blocks > 0
+        assert h.cancel()
+        cb.runtime.check_consistency()
+        assert cb.runtime.allocated_blocks == 0
+        assert cb.slots[0] is None and not cb.has_work()
+        assert isinstance(_events_for(cb, 0)[-1], Cancelled)
+
+    def test_cancel_mid_decode_frees_blocks_and_pool_bytes(self, params):
+        cb = _mk(params, slots=2)
+        cb.submit(Request(rid=0, prompt=_prompt(3, 5), max_new=10))
+        cb.submit(Request(rid=1, prompt=_prompt(4, 5), max_new=10))
+        while not any(r is not None and len(r.out) >= 2
+                      for r in cb.slots):
+            cb.step()
+        before = cb.runtime.allocated_blocks
+        assert cb.cancel(0)
+        cb.runtime.check_consistency()
+        assert cb.runtime.allocated_blocks < before
+        done = cb.run()
+        assert [r.rid for r in done] == [1]
+        assert cb.runtime.allocated_blocks == 0   # pool back to baseline
+        # no events for rid 0 after its Cancelled
+        evs = _events_for(cb, 0)
+        assert isinstance(evs[-1], Cancelled)
+
+    def test_cancel_unknown_rid_is_false(self, params):
+        cb = _mk(params)
+        assert not cb.cancel(99)
+
+    def test_duplicate_rid_rejected_at_submit(self, params):
+        """Reused rids fail fast at submit (queued, running, or
+        finished), not later inside step() against bus invariants."""
+        cb = _mk(params)
+        cb.submit(Request(rid=0, prompt=[1, 2], max_new=2))
+        with pytest.raises(ValueError, match="duplicate rid"):
+            cb.submit(Request(rid=0, prompt=[3, 4], max_new=2))  # queued
+        cb.run()
+        with pytest.raises(ValueError, match="duplicate rid"):
+            cb.submit(Request(rid=0, prompt=[5, 6], max_new=2))  # done
+
+    def test_cancelled_slot_is_reusable(self, params):
+        """A freed slot admits the next queued request in the same
+        wave and every wave stays bit-exact."""
+        cb = _mk(params, slots=1)
+        solo = _mk(params, slots=1)
+        solo.submit(Request(rid=7, prompt=_prompt(5, 6), max_new=5))
+        expect = solo.run()[0].out
+        cb.submit(Request(rid=0, prompt=_prompt(6, 6), max_new=8))
+        cb.submit(Request(rid=1, prompt=_prompt(5, 6), max_new=5))
+        while cb.slots[0] is None or len(cb.slots[0].out) < 1:
+            cb.step()
+        cb.cancel(0)
+        done = cb.run()
+        assert [r.rid for r in done] == [1]
+        assert done[0].out == expect
+
+
+# ----------------------------------------------------------- preemption
+class TestPreemption:
+    def test_preempt_resume_bit_identical(self, params):
+        ref = _mk(params, slots=1, fused_prefill=False)
+        ref.submit(Request(rid=0, prompt=_prompt(8, 6), max_new=10))
+        expect = ref.run()[0].out
+
+        cb = _mk(params, slots=1, fused_prefill=False)
+        h = cb.submit(Request(rid=0, prompt=_prompt(8, 6), max_new=10))
+        while len(cb.slots[0].out if cb.slots[0] else []) < 4:
+            cb.step()
+        assert cb.preempt(0)
+        assert cb.runtime.allocated_blocks == 0   # blocks released
+        assert h.state == "PREEMPTED"
+        out = cb.run()[0].out
+        assert out == expect                      # bit-identical resume
+        # lifecycle: one Admitted, one Preempted, one resume Progress,
+        # strictly increasing token positions across the interruption
+        evs = _events_for(cb, 0)
+        assert sum(isinstance(e, Admitted) for e in evs) == 1
+        assert sum(isinstance(e, Preempted) for e in evs) == 1
+        assert any(isinstance(e, Progress) and e.phase == "resume"
+                   for e in evs)
+        poss = [e.pos for e in evs if isinstance(e, TokenDelta)]
+        assert poss == list(range(10))
+
+    def test_preempt_counts_prefill_requeue_cost(self, params):
+        """Resume re-ingests prompt + generated tokens through chunked
+        prefill (no decode quanta replay)."""
+        cb = _mk(params, slots=1, prefill_chunk=4, fused_prefill=False)
+        cb.submit(Request(rid=0, prompt=_prompt(9, 6), max_new=8))
+        while len(cb.slots[0].out if cb.slots[0] else []) < 3:
+            cb.step()
+        q0 = cb.prefill_quanta
+        cb.preempt(0)
+        (req,) = cb.run()
+        assert req.out and len(req.out) == 8
+        assert cb.prefill_quanta > q0      # resume paid prefill quanta
+
+    def test_auto_preempt_over_budget(self, params):
+        """A decode that outlived its deadline is evicted when a
+        feasible request waits; both finish."""
+        box = {}
+
+        def vclock():
+            cb = box.get("cb")
+            return 0.0 if cb is None else \
+                (cb.prefill_quanta + cb.decode_quanta) * 0.01
+
+        cb = _mk(params, slots=1, clock=vclock, fused_prefill=False,
+                 preempt_over_budget=True)
+        box["cb"] = cb
+        cb.submit(Request(rid=0, prompt=_prompt(10, 4), max_new=12,
+                          deadline_ms=20.0))    # expires after 2 quanta
+        h = cb.submit(Request(rid=1, prompt=_prompt(11, 4), max_new=2,
+                              deadline_ms=10_000.0))
+        done = {r.rid: r for r in cb.run()}
+        assert set(done) == {0, 1}
+        assert cb.preemptions >= 1
+        assert any(isinstance(e, Preempted) for e in _events_for(cb, 0))
+        # the feasible waiter got the slot and met its SLO
+        fin1 = next(e for e in _events_for(cb, 1)
+                    if isinstance(e, Finished))
+        assert fin1.ts <= 10.0
+        assert h.state == "FINISHED"
+
+    def test_no_preemption_under_fifo_admission(self, params):
+        """preempt_over_budget requires EDF: under the pure-FIFO pop
+        the victim would instantly reclaim its slot (churn), so the
+        scheduler must not preempt at all with edf=False."""
+        box = {}
+
+        def vclock():
+            cb = box.get("cb")
+            return 0.0 if cb is None else \
+                (cb.prefill_quanta + cb.decode_quanta) * 0.01
+
+        cb = _mk(params, slots=1, clock=vclock, fused_prefill=False,
+                 edf=False, preempt_over_budget=True)
+        box["cb"] = cb
+        cb.submit(Request(rid=0, prompt=_prompt(10, 4), max_new=12,
+                          deadline_ms=20.0))
+        cb.submit(Request(rid=1, prompt=_prompt(11, 4), max_new=2,
+                          deadline_ms=10_000.0))
+        done = {r.rid for r in cb.run()}
+        assert done == {0, 1}
+        assert cb.preemptions == 0
+
+
+# ----------------------------------------------------- EDF / SLO policy
+class TestEDF:
+    def _hit_rate(self, params, edf):
+        box = {}
+
+        def vclock():
+            cb = box.get("cb")
+            return 0.0 if cb is None else \
+                (cb.prefill_quanta + cb.decode_quanta) * 0.01
+
+        cb = _mk(params, slots=1, max_len=16, edf=edf, clock=vclock,
+                 fused_prefill=False)
+        box["cb"] = cb
+        deadlines = [2000.0, 1000.0, 300.0, 150.0]
+        for rid, dl in enumerate(deadlines):
+            cb.submit(Request(rid=rid, prompt=[1, 2, 3], max_new=4,
+                              deadline_ms=dl))
+        fins = {e.rid: e.ts for e in cb.stream()
+                if isinstance(e, Finished)}
+        return sum(fins[r] <= deadlines[r] / 1e3
+                   for r in fins) / len(fins)
+
+    def test_edf_strictly_beats_fifo(self, params):
+        assert self._hit_rate(params, True) > self._hit_rate(params,
+                                                             False)
+
+    def test_no_deadlines_is_exact_fifo(self, params):
+        """EDF with no deadlines must reproduce FIFO admission order
+        bit-exactly (the run()-compatibility guarantee)."""
+        outs = []
+        for edf in (True, False):
+            cb = _mk(params, slots=1, edf=edf)
+            for rid in range(4):
+                cb.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                  max_new=3))
+            outs.append([(r.rid, tuple(r.out)) for r in cb.run()])
+        assert outs[0] == outs[1]
+
+    def test_expired_requests_sort_behind_feasible(self, params):
+        box = {}
+
+        def vclock():
+            cb = box.get("cb")
+            return 0.0 if cb is None else \
+                (cb.prefill_quanta + cb.decode_quanta) * 0.05
+
+        cb = _mk(params, slots=1, clock=vclock, fused_prefill=False)
+        box["cb"] = cb
+        # rid 0 occupies the slot and burns past rid 1's deadline
+        # while rid 1 waits; rid 2 (feasible) must then be admitted
+        # before rid 1 (expired).
+        cb.submit(Request(rid=0, prompt=[1, 2], max_new=10))
+        cb.run(max_steps=2)             # rid 0 holds the slot
+        cb.submit(Request(rid=1, prompt=[3, 4], max_new=2,
+                          deadline_ms=1.0))
+        cb.run(max_steps=2)             # rid 1's deadline now expired
+        cb.submit(Request(rid=2, prompt=[5, 6], max_new=2,
+                          deadline_ms=10_000.0))
+        order = [e.rid for e in cb.stream() if isinstance(e, Admitted)]
+        assert order.index(2) < order.index(1)
+
+    def test_priority_breaks_deadline_ties(self, params):
+        cb = _mk(params, slots=1)
+        cb.submit(Request(rid=0, prompt=[1, 2], max_new=2))  # occupies
+        cb.submit(Request(rid=1, prompt=[3, 4], max_new=2, priority=0))
+        cb.submit(Request(rid=2, prompt=[5, 6], max_new=2, priority=5))
+        order = [e.rid for e in cb.stream() if isinstance(e, Admitted)]
+        assert order.index(2) < order.index(1)
+
+    def test_group_fairness_survives_edf(self, params):
+        """Round-robin across fairness groups still outranks EDF: a
+        tight deadline in group 0 cannot starve group 1's turn."""
+        cb = _mk(params, slots=1)
+        cb.submit(Request(rid=0, prompt=[1, 2], max_new=2, group=0))
+        cb.submit(Request(rid=1, prompt=[3, 4], max_new=2, group=0,
+                          deadline_ms=1e6))
+        cb.submit(Request(rid=2, prompt=[5, 6], max_new=2, group=1))
+        order = [e.rid for e in cb.stream() if isinstance(e, Admitted)]
+        # within g0 EDF picks rid 1 (has a deadline) over rid 0, but
+        # the group rotation g0 -> g1 -> g0 is untouched: rid 2 goes
+        # second even though g0 still holds an earlier deadline.
+        assert order == [1, 2, 0]
+
+
+# --------------------------------------------------------------- router
+class TestRouter:
+    def test_interleaves_diffusion_and_lm_events(self, params,
+                                                 sd_params):
+        toks = [1] * TINY_SD.text_len
+        diff = DiffusionEngine(sd_params, TINY_SD, max_batch=1)
+        lm = _mk(params)
+        router = EngineRouter(diffusion=diff, lm=lm)
+        router.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                      steps=4, seed=0, preview_every=1))
+        router.submit(Request(rid=1, prompt=_prompt(0, 4), max_new=5))
+        log = list(router.stream())
+        rids = [e.rid for e in log]
+        first0 = rids.index(0)
+        last0 = len(rids) - 1 - rids[::-1].index(0)
+        assert any(r == 1 for r in rids[first0:last0]), \
+            "no LM event between diffusion events"
+        assert sum(isinstance(e, Finished) for e in log) == 2
+        assert any(isinstance(e, PreviewLatent) for e in log)
+        # one total order on one shared bus
+        assert [e.seq for e in log] == sorted(e.seq for e in log)
+        assert diff.bus is lm.bus is router.bus
+
+    def test_handle_pumps_router_across_engines(self, params,
+                                                sd_params):
+        """Waiting on the diffusion handle must still finish the LM
+        request (the handle pumps the router, not one engine)."""
+        toks = [1] * TINY_SD.text_len
+        router = EngineRouter(
+            diffusion=DiffusionEngine(sd_params, TINY_SD, max_batch=1),
+            lm=_mk(params))
+        hd = router.submit(GenerateRequest(rid=0, tokens=toks,
+                                           sampler="ddim", steps=4,
+                                           seed=0, preview_every=1))
+        router.submit(Request(rid=1, prompt=_prompt(1, 3), max_new=12))
+        assert hd.result() is not None
+        # LM made progress while we waited on diffusion: the deadline
+        # tie round-robins the router between the two engines.
+        assert router.lm.prefill_quanta + router.lm.decode_quanta > 0
+
+    def test_cancel_routes_to_owner(self, params, sd_params):
+        toks = [1] * TINY_SD.text_len
+        router = EngineRouter(
+            diffusion=DiffusionEngine(sd_params, TINY_SD, max_batch=1),
+            lm=_mk(params))
+        router.submit(GenerateRequest(rid=0, tokens=toks, steps=1,
+                                      seed=0))
+        h = router.submit(Request(rid=1, prompt=_prompt(2, 4),
+                                  max_new=4))
+        assert h.cancel()
+        assert router.lm.runtime.allocated_blocks == 0
+        results = router.run()
+        assert [r.rid for r in results] == [0]
+        assert not router.cancel(42)
+
+    def test_duplicate_rid_across_engines_rejected(self, params,
+                                                   sd_params):
+        toks = [1] * TINY_SD.text_len
+        router = EngineRouter(
+            diffusion=DiffusionEngine(sd_params, TINY_SD, max_batch=1),
+            lm=_mk(params))
+        router.submit(GenerateRequest(rid=0, tokens=toks, steps=1,
+                                      seed=0))
+        with pytest.raises(ValueError, match="duplicate rid"):
+            router.submit(Request(rid=0, prompt=[1, 2], max_new=2))
+
+    def test_edf_across_engines_prefers_tight_deadline(self, params,
+                                                       sd_params):
+        """The router steps the engine whose pending work has the
+        earlier deadline first."""
+        toks = [1] * TINY_SD.text_len
+        router = EngineRouter(
+            diffusion=DiffusionEngine(sd_params, TINY_SD, max_batch=1),
+            lm=_mk(params))
+        router.submit(GenerateRequest(rid=0, tokens=toks, steps=1,
+                                      seed=0))           # no deadline
+        router.submit(Request(rid=1, prompt=_prompt(3, 3), max_new=2,
+                              deadline_ms=50.0))         # tight
+        log = list(router.stream())
+        admits = [e.rid for e in log if isinstance(e, Admitted)]
+        assert admits[0] == 1           # LM's deadline won the first step
