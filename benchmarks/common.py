@@ -1,7 +1,13 @@
-"""Shared benchmark plumbing: SD graph enumeration + paper constants."""
+"""Shared benchmark plumbing: SD graph enumeration, paper constants,
+and the machine-readable result schema the CI perf-trajectory harness
+persists (``BENCH_<suite>.json`` artifacts)."""
 from __future__ import annotations
 
 import functools
+import json
+import os
+import platform
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -63,3 +69,95 @@ def unet_sites(batch: int = 1) -> tuple[MatmulOp, ...]:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.3f},{derived}"
+
+
+# Perf-trajectory result schema -----------------------------------------
+#
+# Every benchmark can persist its printed ``name,value,detail`` rows as
+# one JSON record via ``--json PATH``; CI uploads the per-suite files as
+# ``BENCH_<suite>.json`` artifacts so run-over-run perf is diffable.
+# The schema is deliberately tiny and versioned; ``validate_record`` is
+# the single source of truth (unit-tested, used by consumers).
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def parse_row(row: str, bench: str = "") -> dict:
+    """Split one printed benchmark row — ``name,value[,detail]`` —
+    into a schema entry.  ``detail`` may itself contain commas."""
+    parts = row.split(",", 2)
+    if len(parts) < 2 or not parts[0]:
+        raise ValueError(f"malformed benchmark row: {row!r}")
+    return {"bench": bench, "name": parts[0], "value": parts[1],
+            "detail": parts[2] if len(parts) > 2 else ""}
+
+
+def bench_record(suite: str, entries: list[dict]) -> dict:
+    """Assemble the versioned perf-trajectory record for one suite."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "suite": suite,
+        "env": {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": sys.platform,
+        },
+        "entries": entries,
+    }
+
+
+def validate_record(obj: dict) -> None:
+    """Raise ``ValueError`` unless ``obj`` is a well-formed perf
+    record (the contract CI artifacts and trajectory consumers rely
+    on)."""
+    if not isinstance(obj, dict):
+        raise ValueError("record must be a dict")
+    if obj.get("schema_version") != BENCH_SCHEMA_VERSION:
+        raise ValueError(
+            f"schema_version {obj.get('schema_version')!r} != "
+            f"{BENCH_SCHEMA_VERSION}")
+    if not isinstance(obj.get("suite"), str) or not obj["suite"]:
+        raise ValueError("suite must be a non-empty string")
+    if not isinstance(obj.get("env"), dict):
+        raise ValueError("env must be a dict")
+    entries = obj.get("entries")
+    if not isinstance(entries, list):
+        raise ValueError("entries must be a list")
+    for e in entries:
+        if not isinstance(e, dict):
+            raise ValueError(f"entry must be a dict: {e!r}")
+        for field in ("bench", "name", "value", "detail"):
+            if not isinstance(e.get(field), str):
+                raise ValueError(f"entry field {field!r} must be a "
+                                 f"string: {e!r}")
+        if not e["name"]:
+            raise ValueError(f"entry name must be non-empty: {e!r}")
+
+
+def write_bench_json(path: str, suite: str, rows: list[str],
+                     bench: str) -> None:
+    """Append one benchmark's rows to the suite's JSON record at
+    ``path`` (created if absent, merged if present — several
+    benchmarks of one CI job share a file).  Entries from an earlier
+    run of the *same* benchmark are replaced, not accumulated, so
+    re-running against a stale file (persisted workspace, local dev
+    loop) cannot mix two runs' numbers in one record.  The merged
+    record is validated before writing so a malformed file fails the
+    job, not the artifact consumer."""
+    entries = [parse_row(r, bench=bench) for r in rows]
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        validate_record(rec)
+        if rec["suite"] != suite:
+            raise ValueError(f"suite mismatch: file has "
+                             f"{rec['suite']!r}, got {suite!r}")
+        rec["entries"] = [e for e in rec["entries"]
+                          if e["bench"] != bench] + entries
+    else:
+        rec = bench_record(suite, entries)
+    validate_record(rec)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")

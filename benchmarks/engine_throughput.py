@@ -153,5 +153,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append machine-readable rows to the suite's "
+                         "perf-trajectory record (benchmarks/common.py "
+                         "schema)")
     a = ap.parse_args()
-    run(n_requests=a.requests, max_batch=a.max_batch)
+    rows = run(n_requests=a.requests, max_batch=a.max_batch)
+    if a.json:
+        try:                      # package import (python -m ...)
+            from benchmarks.common import write_bench_json
+        except ImportError:       # script run: sys.path[0] is benchmarks/
+            from common import write_bench_json
+        write_bench_json(a.json, "unit", rows, bench="engine_throughput")

@@ -159,6 +159,10 @@ if __name__ == "__main__":
     ap.add_argument("--block-size", type=int, default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI defaults (explicit flags still win)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append machine-readable rows to the suite's "
+                         "perf-trajectory record (benchmarks/common.py "
+                         "schema)")
     a = ap.parse_args()
     base = (dict(slots=2, requests=8, prompt_len=12, gen=4, prefix_len=8,
                  block_size=4) if a.smoke else
@@ -167,4 +171,11 @@ if __name__ == "__main__":
     for k in base:
         if getattr(a, k) is not None:
             base[k] = getattr(a, k)
-    run(**base)
+    out_rows = run(**base)
+    if a.json:
+        try:                      # package import (python -m ...)
+            from benchmarks.common import write_bench_json
+        except ImportError:       # script run: sys.path[0] is benchmarks/
+            from common import write_bench_json
+        write_bench_json(a.json, "serving", out_rows,
+                         bench="serving_cache")

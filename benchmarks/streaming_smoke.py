@@ -6,8 +6,8 @@ host loop — including a mid-stream cancellation — and asserts the
 event-stream invariants the streaming API contracts on:
 
 * exactly one ``Admitted`` and exactly one terminal event
-  (``Finished`` | ``Cancelled``) per rid, and the ``Admitted``
-  precedes everything else;
+  (``Finished`` | ``Cancelled`` | ``Rejected``) per rid, and the
+  ``Admitted`` precedes everything else;
 * ``TokenDelta.pos`` strictly increasing per rid;
 * no events of any kind after a rid's terminal event;
 * the stream interleaves diffusion and LM events (not two serial
@@ -19,16 +19,29 @@ Then replays a deadline-laden LM workload under a deterministic
 virtual clock (1 quantum = 10 ms) twice — EDF vs FIFO admission — and
 **gates** on the EDF deadline-hit-rate being strictly better.
 
-Run:  PYTHONPATH=src python benchmarks/streaming_smoke.py
+Finally the **admission-feasibility** check (gating): the same virtual
+clock drives a mixed-deadline workload three ways — FIFO, EDF, and
+EDF + a calibrated phase-aware ``CostModel`` — and asserts
+
+* hit-rate(cost-model) >= hit-rate(EDF) > hit-rate(FIFO),
+* the infeasible request is ``Rejected`` at submit, never ``Admitted``
+  (zero infeasible requests ever reach a slot),
+* the diffusion engine rejects by the same feasibility rule from its
+  seeded Fig.-11 phase composition (clip + steps x unet + vae).
+
+Run:  PYTHONPATH=src python benchmarks/streaming_smoke.py [--json PATH]
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.engine import (TINY_SD, Admitted, Cancelled, DiffusionEngine,
-                          EngineRouter, Finished, GenerateRequest,
-                          PreviewLatent, TokenDelta, init_pipeline)
+from repro.engine import (TINY_SD, Admitted, Cancelled, CostModel,
+                          DiffusionEngine, EngineRouter, Finished,
+                          GenerateRequest, Preempted, PreviewLatent,
+                          Rejected, TokenDelta, calibrate, init_pipeline)
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 
@@ -37,19 +50,26 @@ LM_CFG = ModelConfig(name="smoke-lm", family="dense", num_layers=2,
                      vocab_size=96, head_dim=16)
 
 
-def check_event_invariants(log, expect_cancelled=(), expect_finished=()):
+def check_event_invariants(log, expect_cancelled=(), expect_finished=(),
+                           expect_rejected=()):
     """The per-rid lifecycle invariants, asserted from a raw log."""
     by_rid: dict[int, list] = {}
     for e in log:
         by_rid.setdefault(e.rid, []).append(e)
     for rid, evs in by_rid.items():
         admits = [e for e in evs if isinstance(e, Admitted)]
-        terms = [e for e in evs if isinstance(e, (Finished, Cancelled))]
+        terms = [e for e in evs
+                 if isinstance(e, (Finished, Cancelled, Rejected))]
         assert len(admits) <= 1, f"rid {rid}: {len(admits)} Admitted"
         assert len(terms) == 1, f"rid {rid}: {len(terms)} terminal events"
         assert evs[-1] is terms[0], f"rid {rid}: events after terminal"
         if admits:
             assert evs[0] is admits[0], f"rid {rid}: pre-admission events"
+        if admits and isinstance(terms[0], Rejected):
+            # The one admitted-then-rejected path: a preempted
+            # over-budget decode past feasibility at its next pop.
+            assert any(isinstance(e, Preempted) for e in evs), \
+                f"rid {rid}: Rejected after admission without Preempted"
         poss = [e.pos for e in evs if isinstance(e, TokenDelta)]
         assert poss == sorted(set(poss)), \
             f"rid {rid}: TokenDelta positions not strictly increasing"
@@ -57,10 +77,12 @@ def check_event_invariants(log, expect_cancelled=(), expect_finished=()):
         assert isinstance(by_rid[rid][-1], Cancelled), f"rid {rid}"
     for rid in expect_finished:
         assert isinstance(by_rid[rid][-1], Finished), f"rid {rid}"
+    for rid in expect_rejected:
+        assert isinstance(by_rid[rid][-1], Rejected), f"rid {rid}"
     return by_rid
 
 
-def smoke_mixed_stream() -> None:
+def smoke_mixed_stream() -> list[str]:
     sd_params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)
     toks = jax.random.randint(jax.random.PRNGKey(1), (TINY_SD.text_len,),
                               0, TINY_SD.clip_cfg().vocab_size)
@@ -99,11 +121,13 @@ def smoke_mixed_stream() -> None:
     lm.runtime.check_consistency()
     assert lm.runtime.allocated_blocks == baseline_blocks, \
         f"leak: {lm.runtime.allocated_blocks} blocks still allocated"
-    print(f"streaming_smoke/stream,{len(log)} events over 3 rids,"
-          f"invariants hold, cancel released all blocks")
+    rows = [f"streaming_smoke/stream,{len(log)} events over 3 rids,"
+            f"invariants hold, cancel released all blocks"]
+    print(rows[0])
+    return rows
 
 
-def smoke_edf_beats_fifo() -> None:
+def smoke_edf_beats_fifo() -> list[str]:
     lm_params = init_lm(jax.random.PRNGKey(2), LM_CFG)
     # Deadlines tighten in submission order, so FIFO head-of-line
     # blocks the tight ones; slots=1 makes the reorder decisive.
@@ -131,13 +155,122 @@ def smoke_edf_beats_fifo() -> None:
                    for r in fins) / len(fins)
 
     edf, fifo = hit_rate(True), hit_rate(False)
-    print(f"streaming_smoke/slo,edf hit-rate {edf:.0%},"
-          f"fifo hit-rate {fifo:.0%}")
+    rows = [f"streaming_smoke/slo,edf hit-rate {edf:.0%},"
+            f"fifo hit-rate {fifo:.0%}"]
+    print(rows[0])
     assert edf > fifo, (
         f"EDF admission must strictly beat FIFO on deadline hit-rate "
         f"(edf={edf:.0%}, fifo={fifo:.0%})")
+    return rows
+
+
+def smoke_admission_feasibility() -> list[str]:
+    """Gating: cost-model admission beats plain EDF beats FIFO on a
+    mixed-deadline virtual-clock workload, and no infeasible request
+    is ever admitted to a slot."""
+    lm_params = init_lm(jax.random.PRNGKey(2), LM_CFG)
+    # Each request costs 4 quanta = 40 virtual ms (1 prefill chunk +
+    # 3 decode quanta on slots=1).  rid 1 is infeasible from birth
+    # (30 ms budget < 40 ms service); the rest are feasible but only
+    # if nobody wastes quanta on rid 1.
+    deadlines = [2000.0, 30.0, 110.0, 70.0, 500.0, 160.0]
+    infeasible = {1}
+
+    def hit_rate(edf: bool, with_model: bool):
+        box: dict = {}
+
+        def vclock() -> float:   # 1 scheduling quantum == 10 virtual ms
+            cb = box.get("cb")
+            return 0.0 if cb is None else \
+                (cb.prefill_quanta + cb.decode_quanta) * 0.01
+
+        cm = CostModel() if with_model else None
+        cb = ContinuousBatcher(lm_params, LM_CFG, slots=1, max_len=16,
+                               edf=edf, clock=vclock,
+                               fused_prefill=False, cost_model=cm)
+        box["cb"] = cb
+        if with_model:
+            # Calibration micro-run: two deadline-free samples seed the
+            # per-phase EWMA (first-of-shape quanta skipped as compile).
+            calibrate(cb, [Request(rid=100 + i, prompt=[1, 2, 3],
+                                   max_new=4) for i in range(2)])
+        t0 = {rid: cb.bus.clock() for rid in range(len(deadlines))}
+        for rid, dl in enumerate(deadlines):
+            cb.submit(Request(rid=rid, prompt=[1, 2, 3], max_new=4,
+                              deadline_ms=dl))
+        log = [e for e in cb.stream()]
+        fins = {e.rid: e.ts for e in log if isinstance(e, Finished)}
+        admitted = {e.rid for e in log if isinstance(e, Admitted)}
+        rejected = {e.rid: e for e in log if isinstance(e, Rejected)}
+        hits = sum(rid in fins
+                   and fins[rid] - t0[rid] <= deadlines[rid] / 1e3
+                   for rid in range(len(deadlines))) / len(deadlines)
+        return hits, admitted, rejected, log
+
+    fifo, _, _, _ = hit_rate(edf=False, with_model=False)
+    edf, _, _, _ = hit_rate(edf=True, with_model=False)
+    cost, admitted, rejected, log = hit_rate(edf=True, with_model=True)
+    rows = [f"streaming_smoke/admission,cost-model hit-rate {cost:.0%},"
+            f"edf {edf:.0%} fifo {fifo:.0%} "
+            f"({len(rejected)} infeasible rejected)"]
+    print(rows[0])
+    assert cost >= edf > fifo, (
+        f"admission-feasibility gate: expected cost-model >= EDF > "
+        f"FIFO, got {cost:.0%} / {edf:.0%} / {fifo:.0%}")
+    # Zero infeasible requests ever reach a slot.
+    assert infeasible <= set(rejected), \
+        f"infeasible {infeasible} not rejected (got {set(rejected)})"
+    assert not (set(rejected) & admitted), \
+        f"rejected rids admitted to a slot: {set(rejected) & admitted}"
+    for rid in infeasible & set(rejected):
+        ev = rejected[rid]
+        assert ev.estimated_s > ev.budget_s > 0, \
+            f"rid {rid}: bad Rejected detail {ev}"
+    check_event_invariants(
+        [e for e in log if e.rid < 100],
+        expect_rejected=tuple(sorted(set(rejected))))
+
+    # Diffusion engine: same feasibility rule from the seeded Fig.-11
+    # phase composition (clip + steps x unet_step + vae).
+    sd_params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+    toks = [1] * TINY_SD.text_len
+    dcm = CostModel()
+    dcm.seed(("diff", TINY_SD.name, "clip", False, 1), 0.010)
+    dcm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1),
+             0.020)
+    dcm.seed(("diff", TINY_SD.name, "vae", 8, 1), 0.010)
+    eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                          cost_model=dcm)
+    # 4 ddim steps pad to a pow2 scan of 4: 10 + 4x20 + 10 = 100 ms.
+    tight = eng.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                       steps=4, seed=0, deadline_ms=50.0))
+    loose = eng.submit(GenerateRequest(rid=1, tokens=toks, sampler="ddim",
+                                       steps=4, seed=1,
+                                       deadline_ms=5000.0))
+    eng.run()
+    assert tight.state == "REJECTED" and tight.result() is None
+    assert loose.state == "FINISHED" and loose.result() is not None
+    assert not eng.bus.admitted(0), "rejected diffusion request admitted"
+    rows.append("streaming_smoke/admission_diffusion,"
+                "est 100ms vs 50ms budget rejected,"
+                "5000ms budget admitted+finished")
+    print(rows[1])
+    return rows
 
 
 if __name__ == "__main__":
-    smoke_mixed_stream()
-    smoke_edf_beats_fifo()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append machine-readable rows to the suite's "
+                         "perf-trajectory record (benchmarks/common.py "
+                         "schema)")
+    a = ap.parse_args()
+    all_rows = (smoke_mixed_stream() + smoke_edf_beats_fifo()
+                + smoke_admission_feasibility())
+    if a.json:
+        try:                      # package import (python -m ...)
+            from benchmarks.common import write_bench_json
+        except ImportError:       # script run: sys.path[0] is benchmarks/
+            from common import write_bench_json
+        write_bench_json(a.json, "serving", all_rows,
+                         bench="streaming_smoke")

@@ -8,9 +8,10 @@ from repro.engine.diffusion_engine import (SD_TURBO, TINY_SD, DiffusionEngine,
                                            build_finalize_decode,
                                            init_pipeline, quantize_pipeline,
                                            steps_bucket)
+from repro.engine.costmodel import CostModel, calibrate
 from repro.engine.events import (Admitted, Cancelled, Event, EventBus,
                                  Finished, Preempted, PreviewLatent, Progress,
-                                 RequestHandle, TokenDelta)
+                                 Rejected, RequestHandle, TokenDelta)
 from repro.engine.router import EngineRouter
 from repro.engine.samplers import (get_sampler, list_samplers,
                                    register_sampler)
@@ -22,8 +23,10 @@ __all__ = [
     "build_denoise", "build_denoise_step", "build_encode",
     "build_finalize_decode", "init_pipeline", "quantize_pipeline",
     "steps_bucket",
+    "CostModel", "calibrate",
     "Event", "EventBus", "RequestHandle", "Admitted", "TokenDelta",
-    "PreviewLatent", "Progress", "Preempted", "Cancelled", "Finished",
+    "PreviewLatent", "Progress", "Preempted", "Cancelled", "Rejected",
+    "Finished",
     "EngineRouter",
     "get_sampler", "list_samplers", "register_sampler",
 ]

@@ -29,6 +29,12 @@ Requests carry optional SLO fields — ``deadline_ms`` (relative
 latency budget from submission) and ``priority`` — consumed by the
 engines' earliest-deadline-first admission and by
 :class:`repro.engine.router.EngineRouter`'s SLO-aware multiplexing.
+With a :class:`repro.engine.costmodel.CostModel` attached, the budget
+also feeds feasibility admission control: ``submit()`` emits a
+terminal :class:`~repro.engine.events.Rejected` (estimated service
+time vs budget) instead of enqueueing a request that provably cannot
+meet its deadline, and the router multiplexes on estimated *slack*
+rather than the raw deadline.
 
 ``Engine`` is a structural :class:`typing.Protocol`:
 ``DiffusionEngine`` and ``ContinuousBatcher`` both satisfy it without

@@ -1,0 +1,224 @@
+"""Phase-aware service-time cost model + feasibility admission control.
+
+The paper's evaluation decomposes Stable Diffusion into per-phase
+costs — CLIP text encode, per-step UNet denoise, VAE decode (the
+Fig. 11 phase breakdown) — and its companion LLM-serving study budgets
+prefill and decode separately.  :class:`CostModel` carries that
+decomposition into the serving stack: a table of per-phase costs, one
+entry per *compiled-program shape*, that every engine can consult to
+answer "how long will this request take?" *before* running it.
+
+Phase keys
+----------
+
+Diffusion (per jitted program; ``b`` is the engine's batch bucket)::
+
+    ("diff", model, "clip",      use_cfg, b)            one prompt encode
+    ("diff", model, "unet_step", sampler, hw, use_cfg, b)  one denoise step
+    ("diff", model, "vae",       hw, b)                 finalize + decode
+    ("diff", model, "fused", sampler, sbucket, hw, use_cfg, b)
+                                whole fused-scan program (clip + sbucket
+                                padded steps + vae in one launch)
+
+LM (per scheduling quantum)::
+
+    ("lm", model, "prefill", fused, quantized_kv)       one prompt chunk
+    ("lm", model, "decode",  quantized_kv)              one batched token
+
+Seeding and refinement
+----------------------
+
+Costs are seeded by **calibration micro-runs** (:func:`calibrate`
+submits deadline-free sample requests and drains the engine; the
+engine's per-quantum observations land in the table) or explicitly via
+:meth:`CostModel.seed`.  They are then refined **online** by an EWMA
+over the same observations the engines keep making in production: each
+quantum's duration is measured on the engine's injectable clock — the
+clock that timestamps the ``EventBus`` events, so virtual-time
+benchmarks calibrate in virtual time — and folded in with
+``cost = (1 - alpha) * cost + alpha * observed``.  Engines skip the
+first observation of each compiled shape (it pays jit tracing, which
+would poison the steady-state estimate).
+
+Consumers
+---------
+
+* ``submit()`` on both engines rejects a request whose estimated
+  service time exceeds its ``deadline_ms`` budget (terminal
+  :class:`~repro.engine.events.Rejected` event, no queue/slot/KV state
+  ever allocated).
+* Both engines sweep queued requests whose deadline expired or became
+  infeasible to ``Rejected`` on each ``step()`` (bounded queues).
+* :class:`~repro.engine.router.EngineRouter` steps the engine with the
+  least *slack* (deadline − now − estimated remaining service) instead
+  of the raw earliest deadline.
+* ``ContinuousBatcher(preempt_over_budget=True)`` evicts decodes
+  *predicted* to overrun (now + remaining tokens × decode cost past
+  the deadline) instead of waiting for the overrun to happen.
+
+Estimates are intentionally simple: they price a request as if it ran
+alone (no queueing delay, no co-batching discount) and return ``None``
+— "admit optimistically" — whenever a needed phase has never been
+observed.  Everything here is pure host Python; no jax imports.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+from repro.engine.api import GenerateRequest, uses_cfg
+from repro.engine.diffusion_engine import steps_bucket
+from repro.engine.samplers import get_sampler
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class CostModel:
+    """Per-phase EWMA cost table shared by the serving engines.
+
+    One instance may be shared across engines (the keys carry the
+    engine kind and model name), or each engine can own its own.
+    ``alpha`` is the EWMA weight of a fresh observation.
+    """
+
+    def __init__(self, alpha: float = 0.3):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._costs: dict[tuple, float] = {}
+        self._counts: dict[tuple, int] = {}
+
+    # --------------------------------------------------------- table
+    def seed(self, key: tuple, cost_s: float) -> None:
+        """Set a phase cost directly (calibration table / persisted
+        snapshot restore); later ``observe()`` calls refine it."""
+        self._costs[key] = float(cost_s)
+        self._counts.setdefault(key, 0)
+
+    def observe(self, key: tuple, cost_s: float) -> None:
+        """Fold one measured phase duration into the EWMA."""
+        cur = self._costs.get(key)
+        self._costs[key] = (float(cost_s) if cur is None else
+                            (1 - self.alpha) * cur + self.alpha * cost_s)
+        self._counts[key] = self._counts.get(key, 0) + 1
+
+    def cost(self, key: tuple) -> float | None:
+        """Current estimate for one phase key (None if never seen)."""
+        return self._costs.get(key)
+
+    def snapshot(self) -> dict[tuple, tuple[float, int]]:
+        """``key -> (cost_s, observation count)`` — introspection and
+        (future) cross-engine calibration persistence."""
+        return {k: (v, self._counts.get(k, 0))
+                for k, v in self._costs.items()}
+
+    # ----------------------------------------------- diffusion phases
+    def _diff_keys(self, eng: Any, req: GenerateRequest) -> dict:
+        cfg = eng.cfg
+        hw = req.latent_hw or cfg.latent_hw
+        ucfg = uses_cfg(req.neg_tokens, req.guidance_scale)
+        steps = get_sampler(req.sampler).fixed_steps or req.steps
+        b = eng.max_batch
+        m = cfg.name
+        return dict(
+            steps=steps,
+            fused=("diff", m, "fused", req.sampler, steps_bucket(steps),
+                   hw, ucfg, b),
+            clip=("diff", m, "clip", ucfg, b),
+            unet=("diff", m, "unet_step", req.sampler, hw, ucfg, b),
+            vae=("diff", m, "vae", hw, b),
+        )
+
+    def estimate_diffusion(self, eng: Any,
+                           req: GenerateRequest) -> float | None:
+        """Whole-request service time for a ``DiffusionEngine``
+        request: the fused program's own cost when that exact shape has
+        been observed, else the Fig.-11 phase composition
+        ``clip + steps x unet_step + vae`` (padded pow2 steps on the
+        fused path, exact steps on the segmented preview path).
+        ``None`` if a needed phase was never observed."""
+        k = self._diff_keys(eng, req)
+        if not req.preview_every:
+            c = self.cost(k["fused"])
+            if c is not None:
+                return c
+            eff = steps_bucket(k["steps"])   # fused scan pays padding
+        else:
+            eff = k["steps"]                 # segmented path is exact
+        cc, cu, cv = (self.cost(k["clip"]), self.cost(k["unet"]),
+                      self.cost(k["vae"]))
+        if cc is None or cu is None or cv is None:
+            return None
+        return cc + eff * cu + cv
+
+    def remaining_diffusion(self, eng: Any, req: GenerateRequest,
+                            steps_done: int) -> float | None:
+        """Remaining service time for a request ``steps_done`` deep in
+        a segmented (preview) batch: the steps left plus the VAE tail
+        (CLIP already paid)."""
+        k = self._diff_keys(eng, req)
+        cu, cv = self.cost(k["unet"]), self.cost(k["vae"])
+        if cu is None or cv is None:
+            return None
+        return max(0, k["steps"] - steps_done) * cu + cv
+
+    # ------------------------------------------------------ LM phases
+    def lm_keys(self, cb: Any) -> tuple[tuple, tuple]:
+        """(prefill key, decode key) for a ``ContinuousBatcher``."""
+        m = cb.cfg.name
+        return (("lm", m, "prefill", cb.fused_prefill, cb.quantized_kv),
+                ("lm", m, "decode", cb.quantized_kv))
+
+    def estimate_lm(self, cb: Any, req: Any) -> float | None:
+        """Whole-request (or, after a preemption, remaining) service
+        time for an LM ``serving.Request``: chunked-prefill quanta for
+        the feed plus one batched decode quantum per token still to
+        generate (the final prefill chunk emits the first token).
+        ``None`` if prefill or decode has never been observed."""
+        kp, kd = self.lm_keys(cb)
+        cp, cd = self.cost(kp), self.cost(kd)
+        if cp is None or cd is None:
+            return None
+        feed = req._feed if req._feed else list(req.prompt)
+        chunks = _cdiv(max(1, len(feed)), cb.prefill_chunk)
+        ndec = max(0, req.max_new - len(req.out) - 1)
+        return chunks * cp + ndec * cd
+
+    def remaining_lm(self, cb: Any, slot: int) -> float | None:
+        """Remaining service time for the request running in ``slot``:
+        its pending prefill chunks plus its remaining decode tokens."""
+        req = cb.slots[slot]
+        if req is None:
+            return None
+        kp, kd = self.lm_keys(cb)
+        cp, cd = self.cost(kp), self.cost(kd)
+        if cp is None or cd is None:
+            return None
+        pending = len(cb._pending[slot])
+        chunks = _cdiv(pending, cb.prefill_chunk) if pending else 0
+        ndec = max(0, req.max_new - len(req.out) - (1 if pending else 0))
+        return chunks * cp + ndec * cd
+
+    # ------------------------------------------------------- generic
+    def estimate(self, engine: Any, request: Any) -> float | None:
+        """Dispatch on request type: ``GenerateRequest`` -> diffusion,
+        anything else -> LM."""
+        if isinstance(request, GenerateRequest):
+            return self.estimate_diffusion(engine, request)
+        return self.estimate_lm(engine, request)
+
+
+def calibrate(engine: Any, requests: Iterable[Any],
+              max_steps: int = 10_000) -> CostModel:
+    """Seed an engine's attached cost model with a calibration
+    micro-run: submit the (deadline-free) sample requests and drain
+    the engine; its per-quantum observations populate the table.
+    Returns the engine's cost model for chaining."""
+    cm = engine.cost_model
+    if cm is None:
+        raise ValueError("engine has no cost model attached")
+    for req in requests:
+        engine.submit(req)
+    engine.run(max_steps)
+    return cm

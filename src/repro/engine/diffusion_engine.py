@@ -38,6 +38,18 @@ surface.  Design points:
   earliest-deadline-first (``deadline_ms``, ties broken by
   ``priority`` then arrival); with no deadlines this reduces exactly
   to the old FIFO order.
+* **Feasibility admission control (opt-in)** — with a
+  :class:`repro.engine.costmodel.CostModel` attached
+  (``cost_model=...``), ``submit()`` rejects a request whose
+  estimated phase-composed service time (CLIP + steps x UNet + VAE,
+  or the observed fused-program cost) exceeds its ``deadline_ms``
+  budget — terminal :class:`~repro.engine.events.Rejected`, nothing
+  enqueued — and each ``step()`` sweeps queued requests whose
+  deadline expired or became infeasible while they waited.  The
+  engine feeds the model online: every quantum's duration (measured
+  on the event clock, first-trace observations skipped) refines the
+  per-phase EWMA.  With ``cost_model=None`` (the default) every code
+  path is bit-identical to the model-free engine.
 
 Model-file quantization (``quantize_pipeline``) and the role-tagged
 offload accounting are unchanged from the paper's study — the engine
@@ -236,7 +248,8 @@ class DiffusionEngine(ev.EventStreamMixin):
 
     def __init__(self, params: dict, cfg: SDConfig, *, max_batch: int = 1,
                  bus: ev.EventBus | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 cost_model=None):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -248,6 +261,8 @@ class DiffusionEngine(ev.EventStreamMixin):
         self._inflight: dict | None = None      # segmented batch state
         self._meta: dict[int, tuple] = {}       # rid -> (seq, deadline, prio)
         self._subseq = 0
+        self.cost_model = cost_model            # None -> no admission ctrl
+        self.rejections = 0
 
     # ------------------------------------------------------------ API
     def submit(self, request: GenerateRequest) -> ev.RequestHandle:
@@ -264,8 +279,17 @@ class DiffusionEngine(ev.EventStreamMixin):
             raise ValueError(
                 f"latent_hw={hw} must be a positive multiple of the "
                 f"UNet downsample factor {down}")
-        if request.rid in self._meta:
+        if request.rid in self._meta \
+                or self.bus.terminal(request.rid) is not None:
             raise ValueError(f"duplicate rid {request.rid}")
+        if self.cost_model is not None and request.deadline_ms is not None:
+            est = self.cost_model.estimate_diffusion(self, request)
+            budget = request.deadline_ms / 1e3
+            if est is not None and est > budget:
+                self.rejections += 1
+                self.bus.emit(ev.Rejected, request.rid, estimated_s=est,
+                              budget_s=budget, reason="infeasible")
+                return self.handle(request.rid)
         deadline = (float("inf") if request.deadline_ms is None
                     else self.bus.clock() + request.deadline_ms / 1e3)
         self._meta[request.rid] = (self._subseq, deadline, request.priority)
@@ -284,6 +308,35 @@ class DiffusionEngine(ev.EventStreamMixin):
             cands += [self._meta[r.rid][1] for r in self._inflight["reqs"]
                       if r.rid not in self._inflight["cancelled"]]
         return min(cands, default=float("inf"))
+
+    def next_slack(self) -> float:
+        """Minimum estimated *slack* — deadline minus now minus the
+        estimated (remaining) service time — over queued + in-flight
+        requests; +inf when none declares a deadline.  The router's
+        multiplex key when cost models are attached; requests the
+        model cannot price yet fall back to raw deadline ordering
+        (estimate 0)."""
+        cm = self.cost_model
+        now = self.bus.clock()
+        best = float("inf")
+        for r in self.queue:
+            dl = self._meta[r.rid][1]
+            if dl == float("inf"):
+                continue
+            est = cm.estimate_diffusion(self, r) if cm else None
+            best = min(best, dl - now - (est or 0.0))
+        st = self._inflight
+        if st is not None:
+            for r in st["reqs"]:
+                if r.rid in st["cancelled"]:
+                    continue
+                dl = self._meta[r.rid][1]
+                if dl == float("inf"):
+                    continue
+                est = (cm.remaining_diffusion(self, r, st["i"])
+                       if cm else None)
+                best = min(best, dl - now - (est or 0.0))
+        return best
 
     def cancel(self, rid: int) -> bool:
         """Abort a request: queued requests leave the queue; requests
@@ -310,6 +363,8 @@ class DiffusionEngine(ev.EventStreamMixin):
         """One scheduling quantum: advance the in-flight segmented
         batch by one denoise step, or pop + run a new micro-batch;
         returns #requests progressed (0 if idle)."""
+        if self.cost_model is not None and self.queue:
+            self._sweep_infeasible()
         if self._inflight is not None:
             return self._segment_quantum()
         if not self.queue:
@@ -352,6 +407,42 @@ class DiffusionEngine(ev.EventStreamMixin):
         seq, deadline, prio = self._meta[req.rid]
         expired = deadline < self.bus.clock()
         return (expired, deadline, -prio, seq)
+
+    def _sweep_infeasible(self) -> None:
+        """Cost-model housekeeping, once per ``step()``: queued
+        requests whose deadline already expired — or can provably no
+        longer be met (now + estimated service > deadline) — go
+        straight to terminal ``Rejected`` instead of sorting behind
+        feasible work forever (the queue stays bounded by live,
+        winnable requests)."""
+        now = self.bus.clock()
+        keep: deque[GenerateRequest] = deque()
+        for r in self.queue:
+            dl = self._meta[r.rid][1]
+            if dl == float("inf"):
+                keep.append(r)
+                continue
+            expired = dl < now
+            est = self.cost_model.estimate_diffusion(self, r)
+            if expired or (est is not None and now + est > dl):
+                self.rejections += 1
+                self.bus.emit(ev.Rejected, r.rid, estimated_s=est or 0.0,
+                              budget_s=dl - now,
+                              reason="expired" if expired
+                              else "infeasible")
+            else:
+                keep.append(r)
+        self.queue = keep
+
+    def _observe(self, key: tuple, t0: float, traces0: int, out) -> None:
+        """Feed one measured program duration into the cost model.
+        Skips quanta that paid a jit trace (compile time would poison
+        the steady-state EWMA) and blocks on the output so async
+        dispatch cannot under-report device time."""
+        if self.cost_model is None or self.traces != traces0:
+            return
+        jax.block_until_ready(out)
+        self.cost_model.observe(key, self.bus.clock() - t0)
 
     def _group_key(self, req: GenerateRequest) -> tuple:
         fixed = samplers_mod.get_sampler(req.sampler).fixed_steps
@@ -407,7 +498,11 @@ class DiffusionEngine(ev.EventStreamMixin):
         sampler = samplers_mod.get_sampler(sampler_name)
         plan = sampler.plan(sched_mod.NoiseSchedule(), steps, sbucket)
         fn = self._compiled(sampler_name, sbucket, hw, use_cfg)
+        t0, tr0 = self.bus.clock(), self.traces
         imgs = fn(self.params, toks, negs, scales, noises, plan)
+        self._observe(("diff", self.cfg.name, "fused", sampler_name,
+                       sbucket, hw, use_cfg, self.max_batch), t0, tr0,
+                      imgs)
         for i, r in enumerate(reqs):
             res = GenerateResult(
                 rid=r.rid, image=imgs[i], sampler=sampler_name,
@@ -422,7 +517,10 @@ class DiffusionEngine(ev.EventStreamMixin):
         toks, negs, scales, noises = self._pack(reqs, hw)
         enc = self._counted_jit(("enc", use_cfg, self.max_batch),
                                 build_encode(self.cfg, use_cfg))
+        t0, tr0 = self.bus.clock(), self.traces
         ctx, ctx_u = enc(self.params, toks, negs)
+        self._observe(("diff", self.cfg.name, "clip", use_cfg,
+                       self.max_batch), t0, tr0, ctx)
         sampler = samplers_mod.get_sampler(sampler_name)
         # Unpadded plan: the 1-step segment program serves any step
         # count, so segmented requests never pay pow2 padding steps.
@@ -445,8 +543,11 @@ class DiffusionEngine(ev.EventStreamMixin):
         fn = self._counted_jit(
             ("seg", sampler_name, hw, use_cfg, self.max_batch),
             build_denoise_step(self.cfg, sampler_name, use_cfg))
+        t0, tr0 = self.bus.clock(), self.traces
         st["x"] = fn(self.params, st["ctx"], st["ctx_u"], st["g"],
                      st["x"], step_slice)
+        self._observe(("diff", self.cfg.name, "unet_step", sampler_name,
+                       hw, use_cfg, self.max_batch), t0, tr0, st["x"])
         st["i"] = i + 1
         sampler = samplers_mod.get_sampler(sampler_name)
         for row, r in live:
@@ -461,7 +562,10 @@ class DiffusionEngine(ev.EventStreamMixin):
                                      self.max_batch),
                                     build_finalize_decode(self.cfg,
                                                           sampler_name))
+            t0, tr0 = self.bus.clock(), self.traces
             imgs = dec(self.params, st["x"])
+            self._observe(("diff", self.cfg.name, "vae", hw,
+                           self.max_batch), t0, tr0, imgs)
             for row, r in live:
                 res = GenerateResult(
                     rid=r.rid, image=imgs[row], sampler=sampler_name,

@@ -21,6 +21,10 @@ lifecycle vocabulary that makes the request observable:
   ``Preempted``             evicted back to the wait queue (KV blocks
                             released; resume is bit-exact on the
                             scan-prefill path)
+  ``Rejected``              terminal: infeasible under the engine's
+                            cost model (estimated service time exceeds
+                            the remaining deadline budget) — never
+                            admitted to a slot/batch
   ``Cancelled``             terminal: request abandoned, state freed
   ``Finished``              terminal: carries the engine's result
   ========================  ==========================================
@@ -37,7 +41,8 @@ lifecycle vocabulary that makes the request observable:
   (``None`` if cancelled); ``handle.cancel()`` routes back to the
   engine.  ``handle.state`` exposes the lifecycle state machine
   (``QUEUED -> ADMITTED/RUNNING -> PREEMPTED -> ... -> FINISHED |
-  CANCELLED``).
+  CANCELLED``, or straight to ``REJECTED`` when the engine's cost
+  model deems the request infeasible at submission).
 
 * **:class:`EventStreamMixin`** — gives an engine ``stream()`` (a
   drain-and-step generator over the whole bus) and ``handle()``;
@@ -110,13 +115,29 @@ class Cancelled(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class Rejected(Event):
+    """Terminal: admission control refused the request — its estimated
+    service time (``estimated_s``, from the engine's phase-aware cost
+    model) exceeds the remaining deadline budget (``budget_s``), or its
+    deadline expired while it waited (``reason``: ``"infeasible"`` |
+    ``"expired"``).  A request rejected at submission never occupies a
+    slot, batch row, or KV block; the one admitted-then-rejected path
+    is a preempted over-budget decode that can no longer meet its
+    deadline (``Preempted`` precedes ``Rejected`` in that log).
+    ``handle.result()`` returns ``None``."""
+    estimated_s: float = 0.0
+    budget_s: float = 0.0
+    reason: str = "infeasible"
+
+
+@dataclasses.dataclass(frozen=True)
 class Finished(Event):
     """Terminal: ``result`` is the engine's finished object
     (``GenerateResult`` for diffusion, ``serving.Request`` for LM)."""
     result: Any = None
 
 
-TERMINAL_EVENTS = (Cancelled, Finished)
+TERMINAL_EVENTS = (Cancelled, Rejected, Finished)
 
 # Lifecycle states derived from the event log (handle.state).
 QUEUED = "QUEUED"
@@ -124,6 +145,7 @@ RUNNING = "RUNNING"
 PREEMPTED = "PREEMPTED"
 FINISHED = "FINISHED"
 CANCELLED = "CANCELLED"
+REJECTED = "REJECTED"
 
 
 class EventBus:
@@ -219,7 +241,9 @@ class RequestHandle:
     def state(self) -> str:
         term = self.bus.terminal(self.rid)
         if term is not None:
-            return FINISHED if isinstance(term, Finished) else CANCELLED
+            if isinstance(term, Finished):
+                return FINISHED
+            return REJECTED if isinstance(term, Rejected) else CANCELLED
         last = None
         for e in self.bus.log:
             if e.rid == self.rid and isinstance(

@@ -23,6 +23,14 @@ in one host loop:
   backlog cannot starve LM decode or vice versa.  Within each engine,
   admission is EDF-within-fairness-groups and the LM engine can
   preempt over-budget decodes (see ``serving.scheduler``).
+* **Cost-model-informed urgency** — when *every* busy engine carries a
+  :class:`repro.engine.costmodel.CostModel`, the multiplex key becomes
+  estimated **slack** (``next_slack()``: deadline − now − estimated
+  remaining service time) instead of the raw deadline, so a request
+  with a later deadline but a long predicted tail (a multi-step
+  denoise) is stepped ahead of an earlier-deadline request that needs
+  only a few cheap decode tokens.  Engines without a model (the
+  default) keep the PR 4 earliest-deadline behavior bit-identically.
 * **``run()`` compatibility** — drains the stream and returns every
   ``Finished`` payload in completion order, mirroring the engines' own
   drain-the-queue ``run()``.
@@ -89,14 +97,21 @@ class EngineRouter(ev.EventStreamMixin):
         return engine.cancel(rid) if engine is not None else False
 
     def step(self) -> int:
-        """Advance the engine with the earliest-deadline pending work
-        by one quantum (deadline ties rotate round-robin); returns
-        #requests progressed."""
+        """Advance the engine with the most urgent pending work by one
+        quantum (ties rotate round-robin); returns #requests
+        progressed.  Urgency is estimated slack (``next_slack()``)
+        when every busy engine has a cost model attached, else the raw
+        earliest deadline (``next_deadline()`` — exactly the
+        pre-cost-model behavior)."""
         busy = [e for e in self.engines if e.has_work()]
         if not busy:
             return 0
-        best = min(e.next_deadline() for e in busy)
-        tied = [e for e in busy if e.next_deadline() == best]
+        if all(getattr(e, "cost_model", None) is not None for e in busy):
+            keys = [e.next_slack() for e in busy]
+        else:
+            keys = [e.next_deadline() for e in busy]
+        best = min(keys)
+        tied = [e for e, k in zip(busy, keys) if k == best]
         engine = tied[self._rr % len(tied)]
         self._rr += 1
         return engine.step()

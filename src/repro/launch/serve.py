@@ -1,20 +1,26 @@
 """Serving launcher: quantized-offload LM serving via the engine API.
 
   python -m repro.launch.serve --arch deepseek-moe-16b [--policy q8_0] \
-      [--slots 4] [--requests 8] [--gen 16] [--deadline-ms 500]
+      [--slots 4] [--requests 8] [--gen 16] [--deadline-ms 500] \
+      [--admission]
 
 Requests flow through the ``ContinuousBatcher`` engine (the same
 ``submit()``/``stream()``/``run()`` protocol as the diffusion engine):
 a fixed slot pool over the paged KV block pool, chunked-prefill
 admission mid-flight, EOS/max-length retirement freeing blocks back to
 the pool.  The host loop consumes the typed event stream —
-``Admitted``/``TokenDelta``/``Finished`` — so it reports
+``Admitted``/``TokenDelta``/``Finished``/``Rejected`` — so it reports
 time-to-first-token per request instead of waiting for a
 batch-and-drain ``run()``; ``--deadline-ms`` attaches an SLO budget to
-every request and the scheduler admits earliest-deadline-first.  Runs
-reduced configs on CPU; on TPU the same path serves full configs with
-TP-only weight sharding (no FSDP — see DESIGN.md) and the Pallas
-fused-dequant kernels.
+every request and the scheduler admits earliest-deadline-first.
+``--admission`` additionally attaches a phase-aware ``CostModel``
+(seeded by a deadline-free calibration request, refined online by the
+EWMA over observed quanta): requests whose estimated service time
+exceeds their budget are **rejected up front** instead of expiring in
+the queue, and the launcher reports the estimated-vs-budget detail per
+rejection.  Runs reduced configs on CPU; on TPU the same path serves
+full configs with TP-only weight sharding (no FSDP — see DESIGN.md)
+and the Pallas fused-dequant kernels.
 """
 from __future__ import annotations
 
@@ -27,7 +33,7 @@ import numpy as np
 from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
-from repro.engine import Finished, TokenDelta
+from repro.engine import CostModel, Finished, Rejected, TokenDelta, calibrate
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 
@@ -43,6 +49,10 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request SLO budget (EDF admission)")
+    ap.add_argument("--admission", action="store_true",
+                    help="attach a phase-aware cost model: reject "
+                         "requests whose estimated service time "
+                         "exceeds their deadline budget up front")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -59,8 +69,26 @@ def main() -> None:
     max_len = ContinuousBatcher.required_len(n_requests, args.slots,
                                              args.prompt_len, args.gen)
     engine = ContinuousBatcher(qp, cfg, slots=args.slots, max_len=max_len,
-                               enc_embeds=inp.get("enc_embeds"))
+                               enc_embeds=inp.get("enc_embeds"),
+                               cost_model=CostModel() if args.admission
+                               else None)
     prompts = np.asarray(inp["tokens"])
+    if args.admission:
+        # Calibration micro-run: one deadline-free request per compiled
+        # shape seeds the per-phase cost table (and pre-compiles, so
+        # workload estimates don't include trace time).
+        calibrate(engine, [Request(rid=-1 - w,
+                                   prompt=prompts[0].tolist(),
+                                   max_new=args.gen)
+                           for w in range(2)])
+        kp, kd = engine.cost_model.lm_keys(engine)
+        print(f"calibrated: prefill chunk "
+              f"{(engine.cost_model.cost(kp) or 0) * 1e3:.1f} ms, "
+              f"decode token "
+              f"{(engine.cost_model.cost(kd) or 0) * 1e3:.1f} ms")
+    # Counter baselines so the summary reports workload quanta only
+    # (the calibration micro-run above consumed some already).
+    q0p, q0d = engine.prefill_quanta, engine.decode_quanta
     submit_ts = {}
     for r in range(n_requests):
         submit_ts[r] = engine.bus.clock()
@@ -69,20 +97,29 @@ def main() -> None:
                               max_new=args.gen,
                               deadline_ms=args.deadline_ms))
     t0 = time.time()
-    done, ttft = [], {}
+    done, ttft, rejected = [], {}, []
     for e in engine.stream():
-        if isinstance(e, TokenDelta) and e.rid not in ttft:
+        if isinstance(e, TokenDelta) and e.rid in submit_ts \
+                and e.rid not in ttft:
             ttft[e.rid] = e.ts - submit_ts[e.rid]
-        elif isinstance(e, Finished):
+        elif isinstance(e, Finished) and e.rid >= 0:
             done.append(e.result)
+        elif isinstance(e, Rejected):
+            rejected.append(e)
     dt = time.time() - t0
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
     print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
-          f"({engine.prefill_quanta} prefill + {engine.decode_quanta} "
-          f"decode quanta)")
-    print(f"ttft: first {min(ttft.values()):.2f}s / "
-          f"worst {max(ttft.values()):.2f}s (incl. compile)")
-    print("first request:", done[0].prompt + done[0].out)
+          f"({engine.prefill_quanta - q0p} prefill + "
+          f"{engine.decode_quanta - q0d} decode quanta)")
+    for e in rejected:
+        print(f"rejected rid {e.rid} ({e.reason}): estimated "
+              f"{e.estimated_s * 1e3:.1f} ms > budget "
+              f"{e.budget_s * 1e3:.1f} ms")
+    if ttft:
+        print(f"ttft: first {min(ttft.values()):.2f}s / "
+              f"worst {max(ttft.values()):.2f}s (incl. compile)")
+    if done:
+        print("first request:", done[0].prompt + done[0].out)
 
 
 if __name__ == "__main__":

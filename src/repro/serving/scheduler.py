@@ -37,6 +37,22 @@ around two compiled programs, with all cache bookkeeping delegated to
   attention decoders only), retiring requests donate their full prompt
   blocks to a hash-chained prefix cache; a later request with the same
   prefix adopts the blocks read-only and skips their prefill chunks.
+* **Feasibility admission control (opt-in)** — with a
+  :class:`repro.engine.costmodel.CostModel` attached
+  (``cost_model=...``), ``submit()`` rejects a request whose estimated
+  service time (prefill chunks + decode tokens, per-phase EWMA costs
+  keyed on model dims / fused-vs-scan prefill / quantized KV) exceeds
+  its ``deadline_ms`` budget — terminal
+  :class:`~repro.engine.events.Rejected`, no slot or KV block ever
+  allocated — and each ``step()`` sweeps queued requests whose
+  deadline expired or became infeasible while they waited.  The
+  scheduler feeds the model online: every prefill/decode quantum's
+  duration (measured on the event clock; the first quantum of each
+  compiled shape is skipped — it pays jit tracing) refines the EWMA.
+  ``preempt_over_budget`` then evicts decodes *predicted* to overrun
+  (now + remaining tokens x decode cost past the deadline) instead of
+  waiting for the overrun.  With ``cost_model=None`` (the default)
+  every path is bit-identical to the model-free scheduler.
 * **Fairness + SLO-aware admission** — the wait queue admits
   round-robin across request ``group`` ids instead of strict FIFO, so
   one chatty tenant cannot head-of-line-block the rest; *within* a
@@ -192,7 +208,8 @@ class ContinuousBatcher(ev.EventStreamMixin):
                  bus: ev.EventBus | None = None,
                  clock: Callable[[], float] = time.monotonic,
                  edf: bool = True,
-                 preempt_over_budget: bool = False):
+                 preempt_over_budget: bool = False,
+                 cost_model=None):
         if prefix_share and (set(cfg.block_pattern) != {"attn"}
                              or cfg.is_enc_dec):
             raise ValueError(
@@ -232,6 +249,12 @@ class ContinuousBatcher(ev.EventStreamMixin):
         self.bus = bus if bus is not None else ev.EventBus(clock)
         self.edf = edf
         self.preempt_over_budget = preempt_over_budget
+        self.quantized_kv = quantized_kv
+        self.cost_model = cost_model    # None -> no admission control
+        self.rejections = 0
+        # Compiled shapes whose first (trace-paying) quantum already
+        # ran — cost-model observations skip that first quantum.
+        self._cm_warm: set = set()
         self.preemptions = 0
         self._subseq = 0
         self.prefill_quanta = 0
@@ -284,6 +307,14 @@ class ContinuousBatcher(ev.EventStreamMixin):
                          else self.bus.clock() + req.deadline_ms / 1e3)
         if not req._feed:
             req._feed = list(req.prompt)
+        if self.cost_model is not None and req.deadline_ms is not None:
+            est = self.cost_model.estimate_lm(self, req)
+            budget = req.deadline_ms / 1e3
+            if est is not None and est > budget:
+                self.rejections += 1
+                self.bus.emit(ev.Rejected, req.rid, estimated_s=est,
+                              budget_s=budget, reason="infeasible")
+                return self.handle(req.rid)
         self._enqueue(req)
         return self.handle(req.rid)
 
@@ -307,6 +338,64 @@ class ContinuousBatcher(ev.EventStreamMixin):
         cands = [r._deadline for q in self._groups.values() for r in q]
         cands += [r._deadline for r in self.slots if r is not None]
         return min(cands, default=float("inf"))
+
+    def next_slack(self) -> float:
+        """Minimum estimated *slack* — deadline minus now minus the
+        estimated (remaining) service time — over queued + running
+        requests; +inf when none declares a deadline.  The router's
+        multiplex key when cost models are attached; requests the
+        model cannot price yet fall back to raw deadline ordering
+        (estimate 0)."""
+        cm = self.cost_model
+        now = self.bus.clock()
+        best = float("inf")
+        for q in self._groups.values():
+            for r in q:
+                if r._deadline == float("inf"):
+                    continue
+                est = cm.estimate_lm(self, r) if cm else None
+                best = min(best, r._deadline - now - (est or 0.0))
+        for i, r in enumerate(self.slots):
+            if r is None or r._deadline == float("inf"):
+                continue
+            est = cm.remaining_lm(self, i) if cm else None
+            best = min(best, r._deadline - now - (est or 0.0))
+        return best
+
+    # ------------------------------------------- feasibility admission
+    def _infeasible(self, req: Request, now: float) -> tuple[bool, Any]:
+        """(hopeless, estimate): the deadline already expired, or the
+        cost model predicts the request cannot finish in time even if
+        served immediately.  Only called with a cost model attached."""
+        if req._deadline == float("inf"):
+            return False, None
+        est = self.cost_model.estimate_lm(self, req)
+        if req._deadline < now:
+            return True, est
+        return (est is not None and now + est > req._deadline), est
+
+    def _reject(self, req: Request, est, now: float) -> None:
+        self.rejections += 1
+        self.bus.emit(ev.Rejected, req.rid, estimated_s=est or 0.0,
+                      budget_s=req._deadline - now,
+                      reason="expired" if req._deadline < now
+                      else "infeasible")
+
+    def _sweep_infeasible(self) -> None:
+        """Cost-model housekeeping, once per ``step()``: queued
+        requests whose deadline expired — or can provably no longer be
+        met — go straight to terminal ``Rejected`` instead of sorting
+        behind feasible work while occupying queue memory forever."""
+        now = self.bus.clock()
+        for q in self._groups.values():
+            keep = []
+            for r in q:
+                hopeless, est = self._infeasible(r, now)
+                if hopeless:
+                    self._reject(r, est, now)
+                else:
+                    keep.append(r)
+            q[:] = keep
 
     def _edf_key(self, req: Request) -> tuple:
         """EDF pop order within a fairness group.  Requests whose
@@ -346,7 +435,19 @@ class ContinuousBatcher(ev.EventStreamMixin):
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.queue_len:
                 continue
-            req = self._pop_round_robin()
+            while True:
+                req = self._pop_round_robin()
+                if req is None or self.cost_model is None:
+                    break
+                # Pop-time feasibility guard: a request that became
+                # hopeless after the step's sweep (e.g. a preempted
+                # over-budget decode requeued this quantum) must not
+                # reclaim a slot it can no longer use.
+                now = self.bus.clock()
+                hopeless, est = self._infeasible(req, now)
+                if not hopeless:
+                    break
+                self._reject(req, est, now)
             if req is None:
                 break
             remaining = req.max_new - len(req.out)
@@ -367,26 +468,45 @@ class ContinuousBatcher(ev.EventStreamMixin):
     def _maybe_preempt(self) -> None:
         """With ``preempt_over_budget``: if feasible requests wait and
         no slot is free, evict the most-over-budget *decoding* request
-        (its deadline expired; the waiter's has not) back to the
-        queue.  At most one eviction per quantum bounds churn.
-        Requires EDF admission: under the pure-FIFO pop the evicted
-        victim (earliest arrival) would win the very next pop and
-        reclaim its slot, starving the feasible waiter while
-        re-prefilling its whole feed each cycle."""
+        back to the queue.  Without a cost model the victim test is
+        after-the-fact (its deadline already expired); with one it is
+        *predictive* — now + remaining tokens x decode cost lands past
+        the deadline — so the slot is reclaimed before the doomed
+        decode burns the rest of its budget (the victim is then
+        rejected at its next pop rather than thrashing the slot).
+        At most one eviction per quantum bounds churn.  Requires EDF
+        admission: under the pure-FIFO pop the evicted victim
+        (earliest arrival) would win the very next pop and reclaim its
+        slot, starving the feasible waiter while re-prefilling its
+        whole feed each cycle."""
         if not self.preempt_over_budget or not self.edf \
                 or not self.queue_len:
             return
         if any(s is None for s in self.slots):
             return
         now = self.bus.clock()
-        feasible_waiter = any(r._deadline >= now
-                              for q in self._groups.values() for r in q)
+        if self.cost_model is None:
+            feasible_waiter = any(r._deadline >= now
+                                  for q in self._groups.values()
+                                  for r in q)
+        else:
+            feasible_waiter = any(not self._infeasible(r, now)[0]
+                                  for q in self._groups.values()
+                                  for r in q)
         if not feasible_waiter:
             return
-        victims = [(now - r._deadline, i)
-                   for i, r in enumerate(self.slots)
-                   if r is not None and not self._pending[i]
-                   and r._deadline < now]
+        victims = []
+        for i, r in enumerate(self.slots):
+            if r is None or self._pending[i] \
+                    or r._deadline == float("inf"):
+                continue
+            est = (self.cost_model.remaining_lm(self, i)
+                   if self.cost_model is not None else None)
+            # Predicted miss margin; falls back to the after-the-fact
+            # overrun when the model cannot price the decode yet.
+            miss = now + (est or 0.0) - r._deadline
+            if miss > 0:
+                victims.append((miss, i))
         if victims:
             _, i = max(victims)
             self._preempt_slot(i, "deadline-overrun")
@@ -440,6 +560,8 @@ class ContinuousBatcher(ev.EventStreamMixin):
     def step(self) -> int:
         """One scheduling quantum (prefill-prioritized); returns the
         number of requests progressed."""
+        if self.cost_model is not None and self.queue_len:
+            self._sweep_infeasible()
         self._maybe_preempt()
         self._admit()
         for i, req in enumerate(self.slots):
@@ -447,7 +569,22 @@ class ContinuousBatcher(ev.EventStreamMixin):
                 return self._prefill_quantum(i)
         return self._decode_quantum()
 
+    def _observe_quantum(self, key: tuple, shape: tuple,
+                         t0: float, out) -> None:
+        """Feed one measured quantum duration into the cost model.
+        The first quantum of each compiled ``shape`` is skipped (it
+        pays jit tracing, which would poison the steady-state EWMA);
+        ``out`` is blocked on so async dispatch cannot under-report."""
+        if self.cost_model is None:
+            return
+        if shape not in self._cm_warm:
+            self._cm_warm.add(shape)
+            return
+        jax.block_until_ready(out)
+        self.cost_model.observe(key, self.bus.clock() - t0)
+
     def _prefill_quantum(self, i: int) -> int:
+        t0 = self.bus.clock()
         req = self.slots[i]
         chunk = self._pending[i][:self.prefill_chunk]
         del self._pending[i][:len(chunk)]
@@ -468,6 +605,9 @@ class ContinuousBatcher(ev.EventStreamMixin):
         self.prefill_quanta += 1
         self.prefill_launches += 1 if self.fused_prefill else len(chunk)
         self.last_quantum = ("prefill", 1)
+        if self.cost_model is not None:
+            self._observe_quantum(self.cost_model.lm_keys(self)[0],
+                                  ("prefill", len(chunk)), t0, nxt)
         self.bus.emit(ev.Progress, req.rid, phase="prefill",
                       step=req._cursor, total=len(req._feed))
         if not self._pending[i]:        # feed done: next token is out
@@ -480,6 +620,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
         return 1
 
     def _decode_quantum(self) -> int:
+        t0 = self.bus.clock()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             self.last_quantum = None
@@ -494,6 +635,9 @@ class ContinuousBatcher(ev.EventStreamMixin):
         self.decode_quanta += 1
         self.last_quantum = ("decode", len(active))
         nxt_host = jax.device_get(nxt)
+        if self.cost_model is not None:
+            self._observe_quantum(self.cost_model.lm_keys(self)[1],
+                                  ("decode",), t0, nxt)
         for i in active:
             req = self.slots[i]
             self.runtime.pos[i] += 1    # the fed token is now cached

@@ -12,10 +12,10 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.engine import (TINY_SD, Admitted, Cancelled, DiffusionEngine,
-                          EngineRouter, EventBus, Finished, GenerateRequest,
-                          Preempted, PreviewLatent, Progress, TokenDelta,
-                          init_pipeline)
+from repro.engine import (TINY_SD, Admitted, Cancelled, CostModel,
+                          DiffusionEngine, EngineRouter, EventBus, Finished,
+                          GenerateRequest, Preempted, PreviewLatent, Progress,
+                          Rejected, TokenDelta, calibrate, init_pipeline)
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 
@@ -344,6 +344,235 @@ class TestEDF:
         assert order == [1, 2, 0]
 
 
+# ----------------------------------------- cost model / admission ctrl
+def _vclock_cb(params, box, **kw):
+    """Batcher on a virtual clock: 1 scheduling quantum == 10 ms."""
+    def vclock():
+        cb = box.get("cb")
+        return 0.0 if cb is None else \
+            (cb.prefill_quanta + cb.decode_quanta) * 0.01
+
+    kw.setdefault("slots", 1)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("fused_prefill", False)
+    cb = ContinuousBatcher(params, CFG, clock=vclock, **kw)
+    box["cb"] = cb
+    return cb
+
+
+def _calibrated_cb(params, box, **kw):
+    cb = _vclock_cb(params, box, cost_model=CostModel(), **kw)
+    calibrate(cb, [Request(rid=900 + i, prompt=[1, 2, 3], max_new=4)
+                   for i in range(2)])
+    return cb
+
+
+class TestCostModel:
+    def test_ewma_observe_and_seed(self):
+        cm = CostModel(alpha=0.5)
+        assert cm.cost(("k",)) is None
+        cm.seed(("k",), 1.0)
+        assert cm.cost(("k",)) == 1.0
+        cm.observe(("k",), 2.0)        # 0.5*1.0 + 0.5*2.0
+        assert cm.cost(("k",)) == pytest.approx(1.5)
+        cm2 = CostModel()
+        cm2.observe(("k",), 3.0)       # first observation sets outright
+        assert cm2.cost(("k",)) == pytest.approx(3.0)
+
+    def test_calibration_seeds_lm_phases(self, params):
+        box = {}
+        cb = _calibrated_cb(params, box)
+        kp, kd = cb.cost_model.lm_keys(cb)
+        # virtual clock: every quantum is exactly 10 ms
+        assert cb.cost_model.cost(kp) == pytest.approx(0.01)
+        assert cb.cost_model.cost(kd) == pytest.approx(0.01)
+        # prompt 3 (1 chunk) + 3 decode quanta = 40 ms
+        est = cb.cost_model.estimate_lm(
+            cb, Request(rid=99, prompt=[1, 2, 3], max_new=4))
+        assert est == pytest.approx(0.04)
+
+    def test_estimate_none_when_unseeded(self, params):
+        box = {}
+        cb = _vclock_cb(params, box, cost_model=CostModel())
+        est = cb.cost_model.estimate_lm(
+            cb, Request(rid=0, prompt=[1, 2, 3], max_new=4))
+        assert est is None
+        # unseeded model admits optimistically: nothing rejected
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
+                          deadline_ms=1.0))
+        assert cb.queue_len == 1 and cb.rejections == 0
+
+
+class TestRejectedLifecycle:
+    def test_reject_at_submit_single_terminal_no_admitted(self, params):
+        box = {}
+        cb = _calibrated_cb(params, box)
+        base_blocks = cb.runtime.allocated_blocks
+        h = cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
+                              deadline_ms=30.0))   # est 40 ms > 30 ms
+        evs = _events_for(cb, 0)
+        assert len(evs) == 1 and isinstance(evs[0], Rejected)
+        assert evs[0].estimated_s == pytest.approx(0.04)
+        assert evs[0].budget_s == pytest.approx(0.03)
+        assert evs[0].reason == "infeasible"
+        assert not cb.bus.admitted(0)
+        assert h.state == "REJECTED" and h.done
+        # queue/slot/KV accounting untouched by the rejection
+        assert cb.queue_len == 0
+        assert all(s is None for s in cb.slots)
+        assert cb.runtime.allocated_blocks == base_blocks
+        cb.runtime.check_consistency()
+        assert cb.rejections == 1
+
+    def test_result_and_run_for_rejected(self, params):
+        """Contract choice (documented in engine/README.md):
+        ``handle.result()`` returns None for a rejected request — the
+        same signal as a cancellation — and ``run()`` simply never
+        yields it; neither raises."""
+        box = {}
+        cb = _calibrated_cb(params, box)
+        h = cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
+                              deadline_ms=30.0))
+        cb.submit(Request(rid=1, prompt=[1, 2, 3], max_new=4))
+        assert h.result() is None
+        done = cb.run()
+        assert [r.rid for r in done if r.rid < 900] == [1]
+        # events() replays the single terminal and stops cleanly
+        assert [type(e) for e in h.events()] == [Rejected]
+
+    def test_rejected_rid_cannot_be_reused(self, params):
+        box = {}
+        cb = _calibrated_cb(params, box)
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
+                          deadline_ms=30.0))
+        with pytest.raises(ValueError, match="duplicate rid"):
+            cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+
+    def test_no_deadline_never_rejected(self, params):
+        box = {}
+        cb = _calibrated_cb(params, box)
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+        assert cb.rejections == 0 and cb.queue_len == 1
+        assert cb.run()[-1].rid == 0
+
+    def test_diffusion_reject_at_submit(self, sd_params):
+        cm = CostModel()
+        cm.seed(("diff", TINY_SD.name, "clip", False, 1), 0.01)
+        cm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1),
+                0.02)
+        cm.seed(("diff", TINY_SD.name, "vae", 8, 1), 0.01)
+        eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                              cost_model=cm)
+        toks = [1] * TINY_SD.text_len
+        # ddim-4 pads to a pow2 scan of 4: 10+4*20+10 = 100 ms est
+        h = eng.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                       steps=4, seed=0, deadline_ms=60.0))
+        assert h.state == "REJECTED" and h.result() is None
+        assert not eng.queue and eng.traces == 0   # nothing ran
+        evs = [e for e in eng.bus.log if e.rid == 0]
+        assert len(evs) == 1 and isinstance(evs[0], Rejected)
+        with pytest.raises(ValueError, match="duplicate rid"):
+            eng.submit(GenerateRequest(rid=0, tokens=toks, steps=1))
+
+    def test_stale_queued_requests_swept_to_rejected(self, params):
+        """The queue-bloat bugfix: a request that was feasible at
+        submit but went stale waiting behind a long-running slot is
+        swept to Rejected on step() instead of sorting behind feasible
+        work while occupying queue memory forever."""
+        box = {}
+        cb = _calibrated_cb(params, box)
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=12))
+        cb.run(max_steps=3)             # rid 0 occupies the slot
+        cb.submit(Request(rid=1, prompt=[1, 2, 3], max_new=4,
+                          deadline_ms=50.0))  # est 40 <= 50: enqueued
+        assert cb.queue_len == 1
+        for _ in range(4):              # slot still busy; rid 1 rots
+            cb.step()
+        assert cb.queue_len == 0        # swept once provably hopeless
+        evs = _events_for(cb, 1)
+        assert len(evs) == 1 and isinstance(evs[0], Rejected)
+        assert not cb.bus.admitted(1)
+        done = cb.run()
+        assert [r.rid for r in done if r.rid < 900] == [0]
+
+    def test_queue_stays_bounded_under_stale_flood(self, params):
+        box = {}
+        cb = _calibrated_cb(params, box)
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=30,
+                          deadline_ms=None))
+        cb.run(max_steps=3)             # slot busy for 30 quanta
+        for rid in range(1, 9):
+            cb.submit(Request(rid=rid, prompt=[1, 2, 3], max_new=4,
+                              deadline_ms=41.0))  # feasible at submit
+            cb.step()                   # ...stale one quantum later
+            cb.step()
+        assert cb.queue_len == 0 and cb.rejections == 8
+        assert all(not cb.bus.admitted(rid) for rid in range(1, 9))
+
+    def test_default_cost_model_none_is_bit_identical(self, params):
+        """cost_model=None (every existing caller) must keep the PR 4
+        behavior bit-exactly, deadlines included."""
+        outs = []
+        for attach in (False, True):
+            box = {}
+            cb = _vclock_cb(params, box,
+                            cost_model=CostModel() if attach else None)
+            # No calibration: the attached model stays empty, so both
+            # runs admit everything; outputs must match bit-exactly.
+            for rid in range(3):
+                cb.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                  max_new=3, deadline_ms=1000.0))
+            outs.append([(r.rid, tuple(r.out)) for r in cb.run()])
+        assert outs[0] == outs[1]
+
+
+class TestPredictivePreemption:
+    def test_preempts_before_deadline_passes(self, params):
+        """With a cost model, a decode *predicted* to overrun is
+        evicted while its deadline is still in the future (the old
+        check waited for the overrun to happen).  The stale-optimistic
+        seed (10x too cheap, so the doomed request is admitted) is
+        corrected by the online EWMA from observed quanta — exactly
+        the calibration-drift case predictive eviction exists for."""
+        box = {}
+        cm = CostModel(alpha=0.5)
+        cb = _vclock_cb(params, box, cost_model=cm,
+                        preempt_over_budget=True)
+        kp, kd = cm.lm_keys(cb)
+        cm.seed(kp, 0.01)
+        cm.seed(kd, 0.001)              # optimistic: real cost is 0.01
+        # True cost: 1 prefill + 11 decode quanta = 120 ms > 60 ms
+        # budget, but the stale seed prices it at ~21 ms -> admitted.
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=12,
+                          deadline_ms=60.0))
+        for _ in range(4):              # EWMA learns the real decode cost
+            cb.step()
+        assert cb.bus.clock() < 0.06    # deadline still in the future
+        cb.submit(Request(rid=1, prompt=[1, 2, 3], max_new=2,
+                          deadline_ms=10_000.0))
+        done = cb.run()
+        assert cb.preemptions >= 1
+        assert any(isinstance(e, Preempted) for e in _events_for(cb, 0))
+        # the doomed victim is rejected at its next pop, the feasible
+        # waiter finishes
+        assert [r.rid for r in done] == [1]
+        assert isinstance(_events_for(cb, 0)[-1], Rejected)
+
+    def test_feasible_decode_not_preempted(self, params):
+        """Predictive preemption must leave a decode alone when the
+        model says it will still make its deadline."""
+        box = {}
+        cb = _calibrated_cb(params, box, preempt_over_budget=True)
+        cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
+                          deadline_ms=2000.0))    # comfortably feasible
+        cb.run(max_steps=2)
+        cb.submit(Request(rid=1, prompt=[1, 2, 3], max_new=2,
+                          deadline_ms=10_000.0))
+        done = cb.run()
+        assert cb.preemptions == 0
+        assert {r.rid for r in done if r.rid < 900} == {0, 1}
+
+
 # --------------------------------------------------------------- router
 class TestRouter:
     def test_interleaves_diffusion_and_lm_events(self, params,
@@ -425,3 +654,39 @@ class TestRouter:
         log = list(router.stream())
         admits = [e.rid for e in log if isinstance(e, Admitted)]
         assert admits[0] == 1           # LM's deadline won the first step
+
+    def test_slack_outranks_raw_deadline_with_cost_models(self, params,
+                                                          sd_params):
+        """With cost models on both engines the router steps by
+        estimated slack: a diffusion request with a *later* deadline
+        but a long predicted service time outranks an earlier-deadline
+        LM request that needs almost no time."""
+        toks = [1] * TINY_SD.text_len
+        dcm = CostModel()
+        dcm.seed(("diff", TINY_SD.name, "clip", False, 1), 0.01)
+        dcm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1),
+                 0.5)
+        dcm.seed(("diff", TINY_SD.name, "vae", 8, 1), 0.01)
+        lcm = CostModel()
+        diff = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                               cost_model=dcm)
+        lm = _mk(params, cost_model=lcm)
+        lcm.seed(lcm.lm_keys(lm)[0], 0.001)
+        lcm.seed(lcm.lm_keys(lm)[1], 0.001)
+        router = EngineRouter(diffusion=diff, lm=lm)
+        # Deadlines are wall-clock here, so keep them far out (compile
+        # time must not expire them); only their *order* matters.
+        # diffusion: est 0.01+4*0.5+0.01 ~ 2 s, deadline 301 s
+        #   -> slack ~299 s
+        router.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                      steps=4, seed=0,
+                                      deadline_ms=301_000.0))
+        # LM: est ~4 ms, deadline 300 s (earlier!) -> slack ~300 s
+        router.submit(Request(rid=1, prompt=_prompt(3, 3), max_new=2,
+                              deadline_ms=300_000.0))
+        log = list(router.stream())
+        admits = [e.rid for e in log if isinstance(e, Admitted)]
+        # raw-deadline stepping (PR 4) would admit the LM request
+        # first; slack stepping starts the long diffusion job.
+        assert admits[0] == 0
+        assert sum(isinstance(e, Finished) for e in log) == 2
