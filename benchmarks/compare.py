@@ -1,0 +1,171 @@
+"""Perf-trajectory comparator: diff two ``BENCH_<suite>.json`` records.
+
+CI persists every suite's benchmark rows as a versioned JSON artifact
+(``benchmarks/common.py`` schema).  This tool closes the loop: given
+the previous run's artifact and the current one, it matches entries by
+``(bench, name)``, extracts the leading numeric from each free-form
+value string, and reports the delta per metric — failing (exit 1) on
+regressions beyond a threshold.
+
+Metrics are classified from their name + unit text:
+
+* **direction** — ``req/s`` / ``tok/s`` / ``hit`` / ``speedup`` are
+  higher-better; ``latency`` / ``ttft`` / seconds / ``quanta`` /
+  ``bytes`` / ``makespan`` / ``launches`` are lower-better.  Metrics
+  with no recognizable direction are reported but never gate.
+* **noise class** — wall-clock metrics (seconds, req/s, tok/s) flap on
+  shared CI runners, so they gate at the loose ``--time-threshold``
+  (default 50%); counter metrics (quanta, bytes, launches) are
+  deterministic for a given code version, so they gate at the tight
+  ``--count-threshold`` (default 5%).
+
+A missing baseline file is NOT an error (first run of the trajectory,
+expired artifact retention): the comparator notes it and exits 0 —
+the trajectory starts from the current run.
+
+Run:  python benchmarks/compare.py --baseline OLD.json --current NEW.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+try:                          # package import (python -m ...)
+    from benchmarks.common import validate_record
+except ImportError:           # script run: sys.path[0] is benchmarks/
+    from common import validate_record
+
+# A number not glued to a word ("p50", "q8_0" are labels, not values).
+_NUM = re.compile(r"(?<![\w.])-?\d+(?:\.\d+)?(?:e-?\d+)?", re.IGNORECASE)
+
+# Token lists scanned against "<name> <value>" lowercased.  Order
+# matters: the first hit wins, so higher-better rate units are listed
+# before the bare seconds tokens they would otherwise collide with
+# ("req/s" contains "s").
+_HIGHER = ("req/s", "tok/s", "throughput", "hit", "speedup", "scaling")
+_LOWER = ("latency", "ttft", "makespan", "quanta", "launches", "bytes",
+          "kb", "mb", " ms", " s,", "s)", "time")
+_COUNTERS = ("quanta", "launches", "bytes", "kb", "mb", "makespan")
+
+
+def _leading_number(value: str) -> float | None:
+    m = _NUM.search(value)
+    return float(m.group()) if m else None
+
+
+def classify(name: str, value: str) -> tuple[str, str]:
+    """-> (direction: higher|lower|unknown, noise: time|count).
+    Direction keys on the metric leaf + value text, not the bench
+    prefix ("engine_throughput/latency" is a latency, not a
+    throughput)."""
+    text = f"{name.rsplit('/', 1)[-1]} {value}".lower()
+    direction = "unknown"
+    for tok in _HIGHER:
+        if tok in text:
+            direction = "higher"
+            break
+    else:
+        for tok in _LOWER:
+            if tok in text or text.rstrip().endswith("s"):
+                direction = "lower"
+                break
+    noise = "count" if any(t in text for t in _COUNTERS) else "time"
+    return direction, noise
+
+
+def _index(rec: dict) -> dict[tuple[str, str], dict]:
+    return {(e["bench"], e["name"]): e for e in rec["entries"]}
+
+
+def compare_records(base: dict, cur: dict, time_threshold: float,
+                    count_threshold: float) -> tuple[list[str], list[str]]:
+    """-> (report lines, regression lines).  Pure so it is unit-testable
+    without touching the filesystem."""
+    report, regressions = [], []
+    bi, ci = _index(base), _index(cur)
+    for key in sorted(set(bi) | set(ci)):
+        bench, name = key
+        if key not in bi:
+            report.append(f"  NEW     {name}: {ci[key]['value']}")
+            continue
+        if key not in ci:
+            report.append(f"  GONE    {name} (was {bi[key]['value']})")
+            continue
+        old, new = bi[key]["value"], ci[key]["value"]
+        ov, nv = _leading_number(old), _leading_number(new)
+        if ov is None or nv is None:
+            if old != new:
+                report.append(f"  text    {name}: {old!r} -> {new!r}")
+            continue
+        direction, noise = classify(name, new)
+        if ov == 0:
+            rel = 0.0 if nv == 0 else float("inf")
+        else:
+            rel = (nv - ov) / abs(ov)
+        arrow = f"{ov:g} -> {nv:g} ({rel:+.1%})"
+        if direction == "unknown":
+            report.append(f"  ?       {name}: {arrow}")
+            continue
+        worse = rel < 0 if direction == "higher" else rel > 0
+        limit = (count_threshold if noise == "count" else time_threshold)
+        if worse and abs(rel) > limit:
+            regressions.append(
+                f"  REGRESS {name}: {arrow} [{direction}-better, "
+                f"{noise} threshold {limit:.0%}]")
+        elif worse:
+            report.append(f"  ~       {name}: {arrow} (within "
+                          f"{limit:.0%} {noise} threshold)")
+        else:
+            report.append(f"  ok      {name}: {arrow}")
+    return report, regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="previous run's BENCH_<suite>.json (missing "
+                         "file is fine: the trajectory starts here)")
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--time-threshold", type=float, default=0.5,
+                    help="max relative regression for wall-clock "
+                         "metrics (noisy on shared runners)")
+    ap.add_argument("--count-threshold", type=float, default=0.05,
+                    help="max relative regression for deterministic "
+                         "counter metrics (quanta/bytes/launches)")
+    a = ap.parse_args()
+
+    if not os.path.exists(a.baseline):
+        print(f"compare: no baseline at {a.baseline} — first run of "
+              f"the trajectory, nothing to diff")
+        return 0
+    with open(a.baseline) as f:
+        base = json.load(f)
+    with open(a.current) as f:
+        cur = json.load(f)
+    validate_record(base)
+    validate_record(cur)
+    if base["suite"] != cur["suite"]:
+        print(f"compare: suite mismatch ({base['suite']!r} vs "
+              f"{cur['suite']!r})")
+        return 1
+
+    report, regressions = compare_records(
+        base, cur, a.time_threshold, a.count_threshold)
+    print(f"perf trajectory [{cur['suite']}]: "
+          f"{len(cur['entries'])} metrics vs baseline")
+    for line in report:
+        print(line)
+    for line in regressions:
+        print(line)
+    if regressions:
+        print(f"compare: {len(regressions)} regression(s) beyond "
+              f"threshold")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,6 +20,14 @@ Mechanisms provided (and exercised by the launcher / tests):
    model code depends only on mesh axis names, a job restarted on
    fewer pods re-lowers the same program with a smaller `pod` axis and
    continues from checkpoint (tested in tests/test_distributed.py).
+4. **Replica health state machine** — `ReplicaHealth` turns the
+   per-step `Watchdog` signal into a serving-side lifecycle
+   (HEALTHY -> SUSPECT -> EVICTED, plus DRAINING for planned removal)
+   consumed by `repro.engine.fleet.FleetManager`: one straggler step
+   marks a replica SUSPECT, `suspect_limit` *consecutive* stragglers
+   (or a hard fault) evict it, and a clean step clears suspicion.
+   Eviction is terminal: a flapping replica must be replaced, not
+   re-trusted.
 """
 from __future__ import annotations
 
@@ -54,6 +62,78 @@ class Watchdog:
                          else (1 - self.alpha) * self.ewma
                          + self.alpha * seconds)
         return suspect
+
+
+# Replica lifecycle states (see ReplicaHealth).
+HEALTHY = "HEALTHY"
+SUSPECT = "SUSPECT"
+DRAINING = "DRAINING"
+EVICTED = "EVICTED"
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """Watchdog-driven replica lifecycle state machine.
+
+    ``observe_step(step, seconds)`` feeds one step duration through
+    the :class:`Watchdog` and advances the state:
+
+    * HEALTHY -> SUSPECT on one straggler step (duration above
+      ``threshold x`` the EWMA);
+    * SUSPECT -> HEALTHY on a clean step (suspicion is consecutive);
+    * SUSPECT -> EVICTED after ``suspect_limit`` consecutive
+      straggler steps (a hung replica never produces a clean step, so
+      it converges here);
+    * any live state -> EVICTED via :meth:`evict` (hard fault:
+      the replica's step raised);
+    * HEALTHY/SUSPECT -> DRAINING via :meth:`drain` (planned removal:
+      finish in-flight work, accept nothing new).  A DRAINING replica
+      is still watched and can still be EVICTED.
+
+    EVICTED is terminal — a fleet migrates the replica's in-flight
+    requests and never dispatches to it again.
+    """
+    watchdog: Watchdog = dataclasses.field(default_factory=Watchdog)
+    suspect_limit: int = 2
+    state: str = HEALTHY
+    consecutive_suspects: int = 0
+    reason: str = ""
+
+    @property
+    def live(self) -> bool:
+        return self.state != EVICTED
+
+    @property
+    def dispatchable(self) -> bool:
+        """Whether new requests may be placed on this replica."""
+        return self.state in (HEALTHY, SUSPECT)
+
+    def observe_step(self, step: int, seconds: float) -> str:
+        if not self.live:
+            return self.state
+        if self.watchdog.observe(step, seconds):
+            self.consecutive_suspects += 1
+            if self.consecutive_suspects >= self.suspect_limit:
+                self.evict(f"watchdog: {self.consecutive_suspects} "
+                           f"consecutive straggler steps "
+                           f"(last {seconds:.3f}s vs EWMA "
+                           f"{self.watchdog.ewma or 0:.3f}s)")
+            elif self.state == HEALTHY:
+                self.state = SUSPECT
+        else:
+            self.consecutive_suspects = 0
+            if self.state == SUSPECT:
+                self.state = HEALTHY
+        return self.state
+
+    def evict(self, reason: str) -> None:
+        if self.live:
+            self.state = EVICTED
+            self.reason = reason
+
+    def drain(self) -> None:
+        if self.state in (HEALTHY, SUSPECT):
+            self.state = DRAINING
 
 
 class StepTimer:

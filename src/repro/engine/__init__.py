@@ -12,6 +12,8 @@ from repro.engine.costmodel import CostModel, calibrate
 from repro.engine.events import (Admitted, Cancelled, Event, EventBus,
                                  Finished, Preempted, PreviewLatent, Progress,
                                  Rejected, RequestHandle, TokenDelta)
+from repro.engine.fleet import (FaultInjector, FleetManager, ReplicaFault,
+                                ReplicaSpec)
 from repro.engine.router import EngineRouter
 from repro.engine.samplers import (get_sampler, list_samplers,
                                    register_sampler)
@@ -28,5 +30,6 @@ __all__ = [
     "PreviewLatent", "Progress", "Preempted", "Cancelled", "Rejected",
     "Finished",
     "EngineRouter",
+    "FleetManager", "ReplicaSpec", "ReplicaFault", "FaultInjector",
     "get_sampler", "list_samplers", "register_sampler",
 ]

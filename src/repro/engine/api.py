@@ -92,6 +92,11 @@ class GenerateRequest:
     preview_every: int = 0          # 0 -> no previews (fused scan path)
     deadline_ms: float | None = None  # SLO budget from submission
     priority: int = 0               # higher wins EDF ties
+    # Absolute deadline on the engine's clock, set at submission.  A
+    # declared field (mirroring serving.Request._deadline) so a request
+    # migrated across replicas keeps its original budget instead of
+    # restarting it at adoption.
+    _deadline: float = dataclasses.field(default=float("inf"), repr=False)
 
 
 @dataclasses.dataclass

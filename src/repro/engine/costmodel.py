@@ -56,13 +56,18 @@ Consumers
   *predicted* to overrun (now + remaining tokens × decode cost past
   the deadline) instead of waiting for the overrun to happen.
 
-Estimates are intentionally simple: they price a request as if it ran
-alone (no queueing delay, no co-batching discount) and return ``None``
-— "admit optimistically" — whenever a needed phase has never been
-observed.  Everything here is pure host Python; no jax imports.
+Estimates are intentionally simple: they ignore queueing delay and
+return ``None`` — "admit optimistically" — whenever a needed phase has
+never been observed.  Diffusion estimates DO apply a co-batching
+discount (queued requests sharing a group key ride one compiled
+program, so each one's expected cost is the program cost over the
+occupancy); the table itself persists across restarts via
+:meth:`CostModel.save`/:meth:`CostModel.load` (versioned JSON).
+Everything here is pure host Python; no jax imports.
 """
 from __future__ import annotations
 
+import json
 from typing import Any, Iterable
 
 from repro.engine.api import GenerateRequest, uses_cfg
@@ -109,9 +114,50 @@ class CostModel:
 
     def snapshot(self) -> dict[tuple, tuple[float, int]]:
         """``key -> (cost_s, observation count)`` — introspection and
-        (future) cross-engine calibration persistence."""
+        cross-engine calibration persistence (see :meth:`save`)."""
         return {k: (v, self._counts.get(k, 0))
                 for k, v in self._costs.items()}
+
+    # ---------------------------------------------------- persistence
+    SNAPSHOT_VERSION = 1
+
+    def save(self, path: str) -> None:
+        """Persist the cost table as versioned JSON so calibration
+        survives restarts (and can seed CI runs).  Phase keys are
+        tuples of str/int/bool/float — JSON lists round-trip every
+        element type exactly, so ``load(save())`` is lossless."""
+        rec = {
+            "version": self.SNAPSHOT_VERSION,
+            "alpha": self.alpha,
+            "entries": [{"key": list(k), "cost_s": c,
+                         "count": self._counts.get(k, 0)}
+                        for k, c in sorted(self._costs.items(),
+                                           key=lambda kv: repr(kv[0]))],
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "CostModel":
+        """Restore a :meth:`save`-d table.  Raises ``ValueError`` on a
+        version the current code does not understand (snapshots are a
+        contract, not a cache: silently dropping entries would skew
+        every estimate built on them)."""
+        with open(path) as f:
+            rec = json.load(f)
+        if not isinstance(rec, dict) \
+                or rec.get("version") != cls.SNAPSHOT_VERSION:
+            raise ValueError(
+                f"cost-model snapshot version "
+                f"{rec.get('version') if isinstance(rec, dict) else rec!r}"
+                f" != {cls.SNAPSHOT_VERSION}")
+        cm = cls(alpha=float(rec.get("alpha", 0.3)))
+        for e in rec["entries"]:
+            key = tuple(e["key"])
+            cm._costs[key] = float(e["cost_s"])
+            cm._counts[key] = int(e.get("count", 0))
+        return cm
 
     # ----------------------------------------------- diffusion phases
     def _diff_keys(self, eng: Any, req: GenerateRequest) -> dict:
@@ -130,19 +176,42 @@ class CostModel:
             vae=("diff", m, "vae", hw, b),
         )
 
+    def _co_batch(self, eng: Any, req: GenerateRequest) -> int:
+        """Expected program occupancy for ``req``: how many requests
+        (itself included, capped at the batch bucket) would share the
+        compiled program it joins — queued requests with the same
+        group key co-batch into ONE launch."""
+        group_key = getattr(eng, "_group_key", None)
+        queue = getattr(eng, "queue", None)
+        if group_key is None or queue is None:
+            return 1
+        gk = group_key(req)
+        n = 1 + sum(1 for r in queue
+                    if r is not req and group_key(r) == gk)
+        return max(1, min(n, eng.max_batch))
+
     def estimate_diffusion(self, eng: Any,
                            req: GenerateRequest) -> float | None:
-        """Whole-request service time for a ``DiffusionEngine``
+        """Expected per-request service time for a ``DiffusionEngine``
         request: the fused program's own cost when that exact shape has
         been observed, else the Fig.-11 phase composition
         ``clip + steps x unet_step + vae`` (padded pow2 steps on the
         fused path, exact steps on the segmented preview path).
-        ``None`` if a needed phase was never observed."""
+        ``None`` if a needed phase was never observed.
+
+        The program cost is **amortized over the co-batch**: phase
+        costs are observed per compiled program at the engine's batch
+        bucket, and queued requests with the same group key ride the
+        SAME launch, so a request's expected share is the program cost
+        divided by the occupancy (pricing each of n co-batched
+        requests at the full program cost would treat them as n serial
+        programs and over-reject feasible work)."""
         k = self._diff_keys(eng, req)
+        share = self._co_batch(eng, req)
         if not req.preview_every:
             c = self.cost(k["fused"])
             if c is not None:
-                return c
+                return c / share
             eff = steps_bucket(k["steps"])   # fused scan pays padding
         else:
             eff = k["steps"]                 # segmented path is exact
@@ -150,7 +219,7 @@ class CostModel:
                       self.cost(k["vae"]))
         if cc is None or cu is None or cv is None:
             return None
-        return cc + eff * cu + cv
+        return (cc + eff * cu + cv) / share
 
     def remaining_diffusion(self, eng: Any, req: GenerateRequest,
                             steps_done: int) -> float | None:

@@ -292,7 +292,47 @@ class DiffusionEngine(ev.EventStreamMixin):
                 return self.handle(request.rid)
         deadline = (float("inf") if request.deadline_ms is None
                     else self.bus.clock() + request.deadline_ms / 1e3)
+        request._deadline = deadline
         self._meta[request.rid] = (self._subseq, deadline, request.priority)
+        self._subseq += 1
+        self.queue.append(request)
+        return self.handle(request.rid)
+
+    # ------------------------------------------- fleet migration hooks
+    def evacuate(self, reason: str = "evacuate") -> list[GenerateRequest]:
+        """Drain hook for fleet migration: return every live request —
+        in-flight segmented ones first (``Preempted`` emitted, their
+        partial denoise is abandoned), then the queue in arrival order —
+        with no terminal events, so a surviving replica can ``adopt()``
+        them.  Restarting from the original seed is bit-exact: the seed
+        alone determines the initial latent and the solver is
+        deterministic, so a rerun matches an uninterrupted run."""
+        out: list[GenerateRequest] = []
+        st = self._inflight
+        if st is not None:
+            for r in st["reqs"]:
+                if r.rid not in st["cancelled"]:
+                    self.bus.emit(ev.Preempted, r.rid, reason=reason)
+                    out.append(r)
+            self._inflight = None
+        out.extend(self.queue)
+        self.queue = deque()
+        for r in out:
+            self._meta.pop(r.rid, None)
+        return out
+
+    def adopt(self, request: GenerateRequest) -> ev.RequestHandle:
+        """Admit a request evacuated from another engine on the same
+        shared bus.  Unlike ``submit()`` this skips the duplicate-rid
+        guard (the rid's prior admission legitimately lives on the bus)
+        and submit-time feasibility rejection (the request was already
+        admitted once; the per-step queue sweep still applies), and it
+        keeps the request's original absolute deadline
+        (``request._deadline``) instead of restarting the budget.  At
+        batch pop an already-admitted rid re-enters via
+        ``Progress(phase="resume")``, never a second ``Admitted``."""
+        self._meta[request.rid] = (self._subseq, request._deadline,
+                                   request.priority)
         self._subseq += 1
         self.queue.append(request)
         return self.handle(request.rid)
@@ -382,7 +422,11 @@ class DiffusionEngine(ev.EventStreamMixin):
                 rest.append(r)
         self.queue = rest
         for i, r in enumerate(batch):
-            self.bus.emit(ev.Admitted, r.rid, slot=i)
+            if self.bus.admitted(r.rid):   # adopted after a migration
+                self.bus.emit(ev.Progress, r.rid, phase="resume",
+                              step=0, total=gkey[1])
+            else:
+                self.bus.emit(ev.Admitted, r.rid, slot=i)
         if gkey[-1]:                     # preview_every > 0: segmented
             self._start_segmented(batch, gkey)
             return self._segment_quantum()

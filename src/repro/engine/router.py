@@ -92,9 +92,53 @@ class EngineRouter(ev.EventStreamMixin):
         return min((e.next_deadline() for e in self.engines),
                    default=float("inf"))
 
+    def next_slack(self) -> float:
+        """Minimum estimated slack over every engine's pending work
+        (+inf when none declares a deadline) — the key a
+        :class:`repro.engine.fleet.FleetManager` multiplexes replica
+        routers on, mirroring how ``step()`` multiplexes the engines
+        inside one router.  Engines without a cost model price their
+        work at zero remaining service (raw deadline ordering)."""
+        return min((e.next_slack() for e in self.engines),
+                   default=float("inf"))
+
+    @property
+    def cost_model(self):
+        """A router "has a cost model" (for slack-based multiplexing
+        above it) only when every engine behind it does."""
+        models = [getattr(e, "cost_model", None) for e in self.engines]
+        return models[0] if all(m is not None for m in models) else None
+
     def cancel(self, rid: int) -> bool:
         engine = self._owner.get(rid)
         return engine.cancel(rid) if engine is not None else False
+
+    # ------------------------------------------- fleet migration hooks
+    def evacuate(self, reason: str = "evacuate") -> list:
+        """Drain hook for fleet migration: evacuate every engine behind
+        the router and forget ownership; returns the mixed-type live
+        requests for a surviving replica to ``adopt()``."""
+        out: list = []
+        for e in self.engines:
+            out.extend(e.evacuate(reason))
+        for r in out:
+            self._owner.pop(r.rid, None)
+        return out
+
+    def adopt(self, request: Any) -> ev.RequestHandle:
+        """Admit a request evacuated from another replica (see the
+        engines' ``adopt()``): dispatched by type like ``submit()`` but
+        without the duplicate-rid guard — the rid's prior admission
+        lives on the shared bus."""
+        engine = (self.diffusion if isinstance(request, GenerateRequest)
+                  else self.lm)
+        if engine is None:
+            raise ValueError(
+                f"no engine for adopted {type(request).__name__}")
+        engine.adopt(request)
+        self._owner[request.rid] = engine
+        return ev.RequestHandle(request.rid, self.bus, self.step,
+                                self.cancel, self.has_work)
 
     def step(self) -> int:
         """Advance the engine with the most urgent pending work by one

@@ -2,7 +2,7 @@
 
   python -m repro.launch.serve --arch deepseek-moe-16b [--policy q8_0] \
       [--slots 4] [--requests 8] [--gen 16] [--deadline-ms 500] \
-      [--admission]
+      [--admission] [--replicas 3] [--cost-model-path cm.json]
 
 Requests flow through the ``ContinuousBatcher`` engine (the same
 ``submit()``/``stream()``/``run()`` protocol as the diffusion engine):
@@ -18,13 +18,21 @@ every request and the scheduler admits earliest-deadline-first.
 EWMA over observed quanta): requests whose estimated service time
 exceeds their budget are **rejected up front** instead of expiring in
 the queue, and the launcher reports the estimated-vs-budget detail per
-rejection.  Runs reduced configs on CPU; on TPU the same path serves
-full configs with TP-only weight sharding (no FSDP — see DESIGN.md)
-and the Pallas fused-dequant kernels.
+rejection.  ``--cost-model-path`` persists that calibration as
+versioned JSON — an existing file seeds the table (skipping the
+calibration micro-run's trace-poisoned first impressions) and the
+refined table is written back after the run.  ``--replicas N`` fronts
+N data-parallel engine replicas with a ``FleetManager`` (shared event
+bus, cost-balanced dispatch, watchdog-driven health) instead of one
+engine — the rest of the host loop is unchanged, which is the point.
+Runs reduced configs on CPU; on TPU the same path serves full configs
+with TP-only weight sharding (no FSDP — see DESIGN.md) and the Pallas
+fused-dequant kernels.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -33,7 +41,8 @@ import numpy as np
 from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
-from repro.engine import CostModel, Finished, Rejected, TokenDelta, calibrate
+from repro.engine import (CostModel, Finished, FleetManager, Rejected,
+                          ReplicaSpec, TokenDelta, calibrate)
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 
@@ -53,6 +62,15 @@ def main() -> None:
                     help="attach a phase-aware cost model: reject "
                          "requests whose estimated service time "
                          "exceeds their deadline budget up front")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a FleetManager fronting N "
+                         "data-parallel engine replicas (default 1: "
+                         "a single engine, no fleet layer)")
+    ap.add_argument("--cost-model-path", default=None, metavar="PATH",
+                    help="persist cost-model calibration as versioned "
+                         "JSON: load it if the file exists, write the "
+                         "refined table back after the run (implies a "
+                         "cost model even without --admission)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -68,27 +86,51 @@ def main() -> None:
                        seq=args.prompt_len)
     max_len = ContinuousBatcher.required_len(n_requests, args.slots,
                                              args.prompt_len, args.gen)
-    engine = ContinuousBatcher(qp, cfg, slots=args.slots, max_len=max_len,
-                               enc_embeds=inp.get("enc_embeds"),
-                               cost_model=CostModel() if args.admission
-                               else None)
+    cm = None
+    restored = False
+    if args.admission or args.cost_model_path:
+        if args.cost_model_path and os.path.exists(args.cost_model_path):
+            cm = CostModel.load(args.cost_model_path)
+            restored = True
+            print(f"cost model restored from {args.cost_model_path} "
+                  f"({len(cm.snapshot())} phase entries)")
+        else:
+            cm = CostModel()
+
+    def build_engine():
+        # One shared CostModel instance across replicas: any replica's
+        # observed quanta refine every replica's estimates.
+        return ContinuousBatcher(qp, cfg, slots=args.slots,
+                                 max_len=max_len,
+                                 enc_embeds=inp.get("enc_embeds"),
+                                 cost_model=cm)
+
+    if args.replicas > 1:
+        engine = FleetManager([ReplicaSpec(f"replica{i}", build_engine)
+                               for i in range(args.replicas)])
+        batchers = [r.engine for r in engine.replicas]
+    else:
+        engine = build_engine()
+        batchers = [engine]
     prompts = np.asarray(inp["tokens"])
-    if args.admission:
+    if cm is not None and not restored:
         # Calibration micro-run: one deadline-free request per compiled
         # shape seeds the per-phase cost table (and pre-compiles, so
         # workload estimates don't include trace time).
         calibrate(engine, [Request(rid=-1 - w,
                                    prompt=prompts[0].tolist(),
                                    max_new=args.gen)
-                           for w in range(2)])
-        kp, kd = engine.cost_model.lm_keys(engine)
+                           for w in range(2 * args.replicas)])
+    if cm is not None:
+        kp, kd = cm.lm_keys(batchers[0])
         print(f"calibrated: prefill chunk "
-              f"{(engine.cost_model.cost(kp) or 0) * 1e3:.1f} ms, "
+              f"{(cm.cost(kp) or 0) * 1e3:.1f} ms, "
               f"decode token "
-              f"{(engine.cost_model.cost(kd) or 0) * 1e3:.1f} ms")
+              f"{(cm.cost(kd) or 0) * 1e3:.1f} ms")
     # Counter baselines so the summary reports workload quanta only
     # (the calibration micro-run above consumed some already).
-    q0p, q0d = engine.prefill_quanta, engine.decode_quanta
+    q0p = sum(b.prefill_quanta for b in batchers)
+    q0d = sum(b.decode_quanta for b in batchers)
     submit_ts = {}
     for r in range(n_requests):
         submit_ts[r] = engine.bus.clock()
@@ -109,8 +151,11 @@ def main() -> None:
     dt = time.time() - t0
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
     print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
-          f"({engine.prefill_quanta - q0p} prefill + "
-          f"{engine.decode_quanta - q0d} decode quanta)")
+          f"({sum(b.prefill_quanta for b in batchers) - q0p} prefill + "
+          f"{sum(b.decode_quanta for b in batchers) - q0d} decode quanta)")
+    if args.replicas > 1:
+        for rs in engine.stats()["replicas"]:
+            print(f"  {rs['name']}: {rs['state']}, {rs['steps']} quanta")
     for e in rejected:
         print(f"rejected rid {e.rid} ({e.reason}): estimated "
               f"{e.estimated_s * 1e3:.1f} ms > budget "
@@ -120,6 +165,10 @@ def main() -> None:
               f"worst {max(ttft.values()):.2f}s (incl. compile)")
     if done:
         print("first request:", done[0].prompt + done[0].out)
+    if cm is not None and args.cost_model_path:
+        cm.save(args.cost_model_path)
+        print(f"cost model saved to {args.cost_model_path} "
+              f"({len(cm.snapshot())} phase entries)")
 
 
 if __name__ == "__main__":

@@ -535,6 +535,49 @@ class ContinuousBatcher(ev.EventStreamMixin):
                 return True
         return False
 
+    # ------------------------------------------- fleet migration hooks
+    def evacuate(self, reason: str = "evacuate") -> list[Request]:
+        """Drain hook for fleet migration: preempt every running
+        request (KV blocks released, ``Preempted`` emitted, feed reset
+        to prompt + generated-so-far) and pop every queued one; returns
+        them in arrival order with no terminal events, so a surviving
+        replica can ``adopt()`` them.  Resume via chunked re-prefill of
+        the feed is bit-exact on the decode-step-scan path and
+        agreement-gated on the fused path — exactly the PR 4 preemption
+        contract, now across engine instances."""
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                self._preempt_slot(i, reason)
+        out = [r for q in self._groups.values() for r in q]
+        self._groups.clear()
+        self._rr.clear()
+        out.sort(key=lambda r: r._seq)
+        return out
+
+    def adopt(self, req: Request) -> ev.RequestHandle:
+        """Admit a request evacuated from another engine on the same
+        shared bus.  Unlike ``submit()`` this skips the duplicate-rid
+        guard (the rid's prior admission legitimately lives on the
+        bus) and submit-time feasibility rejection (the request was
+        already admitted once; the per-step queue sweep still
+        applies), and it keeps the original absolute deadline
+        (``req._deadline``) instead of restarting the budget.  The
+        feed is reset to prompt + generated-so-far, so admission
+        re-prefills exactly the state the dead replica held; an
+        already-admitted rid re-enters via ``Progress(phase="resume")``
+        (the normal ``_admit`` path checks the shared bus), never a
+        second ``Admitted``."""
+        need = len(req.prompt) + req.max_new - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"adopted rid {req.rid} needs capacity {need} > "
+                f"per-request max_len={self.max_len}")
+        req._feed = list(req.prompt) + list(req.out)
+        req._seq = self._subseq
+        self._subseq += 1
+        self._enqueue(req)
+        return self.handle(req.rid)
+
     def cancel(self, rid: int) -> bool:
         """Abort a request wherever it is — wait queue, mid-prefill,
         or mid-decode.  A running request's slot and every KV block it

@@ -12,6 +12,8 @@ import pytest
 from benchmarks.common import (BENCH_SCHEMA_VERSION, bench_record,
                                parse_row, validate_record,
                                write_bench_json)
+from benchmarks.compare import (_leading_number, classify,
+                                compare_records)
 
 ROWS = [
     "engine_throughput/steady,12.41 req/s,0.97s for 12 reqs "
@@ -104,3 +106,65 @@ class TestWriteMerge:
             f.write('{"schema_version": 0, "suite": "unit"}')
         with pytest.raises(ValueError, match="schema_version"):
             write_bench_json(path, "unit", ROWS[:1], bench="a")
+
+
+def _rec(*rows_by_bench):
+    """Build a minimal valid record from (bench, row) pairs."""
+    return bench_record("serving",
+                        [parse_row(r, bench=b) for b, r in rows_by_bench])
+
+
+class TestCompare:
+    """`benchmarks/compare.py`: the trajectory diff CI runs between a
+    run's BENCH_<suite>.json and the previous artifact."""
+
+    def test_leading_number_and_classify(self):
+        assert _leading_number("12.41 req/s") == 12.41
+        assert _leading_number("ttft p50 0.123s") == 0.123
+        assert _leading_number("bit-exact across kill") is None
+        assert classify("engine_throughput/stream", "12.4 req/s") == \
+            ("higher", "time")
+        assert classify("engine_throughput/latency", "p50 0.1s") == \
+            ("lower", "time")
+        assert classify("serving_cache/quanta", "prefill 4 + decode 9") \
+            == ("lower", "count")
+        assert classify("serving_cache/bytes", "paged 34.8 KB")[0] == \
+            "lower"
+        assert classify("fleet_smoke/scaling", "2.99x speedup")[0] == \
+            "higher"
+
+    def test_improvement_and_within_threshold_pass(self):
+        base = _rec(("a", "x/tput,10.0 req/s"), ("a", "x/quanta,20 quanta"))
+        cur = _rec(("a", "x/tput,12.0 req/s"), ("a", "x/quanta,20 quanta"))
+        report, regressions = compare_records(base, cur, 0.5, 0.05)
+        assert not regressions
+        assert any("ok" in line for line in report)
+
+    def test_counter_regression_gates_tight(self):
+        base = _rec(("a", "x/quanta,20 quanta"))
+        cur = _rec(("a", "x/quanta,23 quanta"))   # +15% > 5%
+        _, regressions = compare_records(base, cur, 0.5, 0.05)
+        assert len(regressions) == 1 and "REGRESS" in regressions[0]
+
+    def test_time_metric_tolerates_runner_noise(self):
+        base = _rec(("a", "x/tput,10.0 req/s"))
+        cur = _rec(("a", "x/tput,8.0 req/s"))     # -20% < 50%
+        report, regressions = compare_records(base, cur, 0.5, 0.05)
+        assert not regressions and any("~" in line for line in report)
+        cur = _rec(("a", "x/tput,3.0 req/s"))     # -70% > 50%
+        _, regressions = compare_records(base, cur, 0.5, 0.05)
+        assert len(regressions) == 1
+
+    def test_new_gone_and_text_metrics_never_gate(self):
+        base = _rec(("a", "x/old,5 quanta"), ("a", "x/note,all good"))
+        cur = _rec(("a", "x/new,7 quanta"), ("a", "x/note,still good"))
+        report, regressions = compare_records(base, cur, 0.5, 0.05)
+        assert not regressions
+        joined = "\n".join(report)
+        assert "NEW" in joined and "GONE" in joined and "text" in joined
+
+    def test_zero_baseline_handled(self):
+        base = _rec(("a", "x/launches,0 launches"))
+        cur = _rec(("a", "x/launches,2 launches"))
+        _, regressions = compare_records(base, cur, 0.5, 0.05)
+        assert len(regressions) == 1   # 0 -> nonzero is inf regression

@@ -1,0 +1,470 @@
+"""Replica fleet serving: cost-balanced dispatch, health-gated
+eviction, and bit-exact request migration.
+
+The LM replicas run the real paged runtime (tiny dense config), so
+eviction paths exercise actual KV-block release — including
+prefix-shared copy-on-write blocks on the dying replica.  Bit-exact
+migration leans on the decode-step-scan prefill path
+(``fused_prefill=False``), which PR 2/3 oracle tests pin to decode.
+Watchdog escalation tests run on a virtual clock (measured quanta are
+0 s, so injector-synthesized durations are the only signal) and are
+therefore fully deterministic.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.distributed.fault_tolerance import (DRAINING, EVICTED, HEALTHY,
+                                               SUSPECT, ReplicaHealth,
+                                               Watchdog)
+from repro.engine import (TINY_SD, Admitted, Cancelled, CostModel,
+                          DiffusionEngine, EngineRouter, FaultInjector,
+                          Finished, FleetManager, GenerateRequest, Preempted,
+                          Progress, ReplicaFault, ReplicaSpec, init_pipeline)
+from repro.models.transformer import init_lm
+from repro.serving import ContinuousBatcher, Request
+
+pytestmark = pytest.mark.serving
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                  head_dim=16)
+
+# Parked-high watchdog threshold: these tests drive eviction through
+# the injector (kill) or through synthesized durations on a virtual
+# clock — real CPU timing must never evict a replica under test.
+NO_WD = dict(watchdog_threshold=1e9)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def sd_params():
+    return init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+
+
+def _prompt(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(1, 90, n)]
+
+
+def _lm_spec(name, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("fused_prefill", False)
+    return ReplicaSpec(name,
+                       lambda: ContinuousBatcher(params, CFG, **kw))
+
+
+def _tokens_by_rid(log):
+    return {e.rid: list(e.result.out) for e in log
+            if isinstance(e, Finished)}
+
+
+def _reference_tokens(params, reqs, **kw):
+    """Single-replica run of the same seeds: the bit-exactness oracle."""
+    fleet = FleetManager([_lm_spec("solo", params, **kw)], **NO_WD)
+    for r in reqs:
+        fleet.submit(r)
+    return _tokens_by_rid(fleet.stream())
+
+
+# ---------------------------------------------------- health machine
+class TestReplicaHealth:
+    def test_straggler_escalation_and_recovery(self):
+        h = ReplicaHealth(Watchdog(threshold=3.0), suspect_limit=2)
+        assert h.observe_step(0, 1.0) == HEALTHY     # seeds EWMA
+        assert h.observe_step(1, 1.0) == HEALTHY
+        assert h.observe_step(2, 10.0) == SUSPECT    # one straggler
+        assert h.consecutive_suspects == 1
+        assert h.observe_step(3, 1.0) == HEALTHY     # clean step clears
+        assert h.consecutive_suspects == 0
+
+    def test_consecutive_stragglers_evict(self):
+        h = ReplicaHealth(Watchdog(threshold=3.0), suspect_limit=2)
+        h.observe_step(0, 1.0)
+        assert h.observe_step(1, 10.0) == SUSPECT
+        assert h.observe_step(2, 10.0) == EVICTED
+        assert "watchdog" in h.reason
+        assert not h.live and not h.dispatchable
+        # terminal: nothing revives an evicted replica
+        assert h.observe_step(3, 1.0) == EVICTED
+
+    def test_drain_is_not_dispatchable_but_live(self):
+        h = ReplicaHealth()
+        h.drain()
+        assert h.state == DRAINING
+        assert h.live and not h.dispatchable
+        h.evict("gone")      # a draining replica can still die
+        assert h.state == EVICTED
+
+    def test_evict_records_first_reason_only(self):
+        h = ReplicaHealth()
+        h.evict("first")
+        h.evict("second")
+        assert h.reason == "first"
+
+
+# ---------------------------------------------------- fault injector
+class TestFaultInjector:
+    def test_kill_fires_exactly_at_step(self):
+        inj = FaultInjector().kill("a", 3)
+        inj.check("a", 2)
+        inj.check("b", 3)
+        with pytest.raises(ReplicaFault, match="kill of a at step 3"):
+            inj.check("a", 3)
+
+    def test_hang_and_slow_windows(self):
+        inj = (FaultInjector().hang("h", 2)
+               .slow("s", 1, 0.5, for_steps=2))
+        assert inj.extra_s("h", 1) == 0.0
+        assert inj.extra_s("h", 2) == float("inf")
+        assert inj.extra_s("h", 99) == float("inf")
+        assert inj.extra_s("s", 0) == 0.0
+        assert inj.extra_s("s", 1) == 0.5
+        assert inj.extra_s("s", 2) == 0.5
+        assert inj.extra_s("s", 3) == 0.0
+        assert inj.extra_s("other", 1) == 0.0
+
+
+# --------------------------------------------------------- dispatch
+class TestDispatch:
+    def test_least_outstanding_fallback_spreads(self, params):
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)], **NO_WD)
+        assert fleet.cost_model is None
+        for rid in range(4):
+            fleet.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                 max_new=3))
+        outs = {r["name"]: r["outstanding"]
+                for r in fleet.stats()["replicas"]}
+        assert outs == {"a": 2, "b": 2}
+        assert len(_tokens_by_rid(fleet.stream())) == 4
+
+    def test_cost_balanced_dispatch_prefers_cheap_replica(self, params):
+        """With per-replica cost models, placement is least estimated
+        completion time: everything lands on the fast replica until
+        its backlog exceeds one slow-replica request."""
+        fast, slow = CostModel(), CostModel()
+        specs = []
+        for name, cm, cost in (("fast", fast, 0.01), ("slow", slow, 1.0)):
+            def build(cm=cm):
+                return ContinuousBatcher(params, CFG, slots=2, max_len=32,
+                                         fused_prefill=False,
+                                         cost_model=cm)
+            specs.append(ReplicaSpec(name, build))
+        probe = ContinuousBatcher(params, CFG, slots=2, max_len=32,
+                                  fused_prefill=False)
+        for cm, cost in ((fast, 0.01), (slow, 1.0)):
+            kp, kd = cm.lm_keys(probe)
+            cm.seed(kp, cost)
+            cm.seed(kd, cost)
+        fleet = FleetManager(specs, **NO_WD)
+        for rid in range(3):
+            fleet.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                 max_new=3))
+        outs = {r["name"]: r["outstanding"]
+                for r in fleet.stats()["replicas"]}
+        # est(fast) = 4 quanta * 0.01; three requests stack to 0.12,
+        # still far below one slow-replica request (~4.0).
+        assert outs == {"fast": 3, "slow": 0}
+
+    def test_duplicate_rid_rejected_fleet_wide(self, params):
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)], **NO_WD)
+        fleet.submit(Request(rid=7, prompt=_prompt(0, 4), max_new=2))
+        with pytest.raises(ValueError, match="duplicate rid 7"):
+            fleet.submit(Request(rid=7, prompt=_prompt(1, 4), max_new=2))
+
+    def test_no_replica_for_type_raises(self, params):
+        fleet = FleetManager([_lm_spec("a", params)], **NO_WD)
+        with pytest.raises(RuntimeError, match="no dispatchable"):
+            fleet.submit(GenerateRequest(rid=0, tokens=[1] * 8, steps=1,
+                                         seed=0))
+
+    def test_handle_pumps_whole_fleet(self, params):
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)], **NO_WD)
+        h = fleet.submit(Request(rid=0, prompt=_prompt(0, 4), max_new=3))
+        fleet.submit(Request(rid=1, prompt=_prompt(1, 4), max_new=3))
+        assert h.result() is not None
+        # waiting on a handle placed on one replica still progressed
+        # the other (the handle pumps FleetManager.step, not a replica)
+        steps = {r["name"]: r["steps"] for r in fleet.stats()["replicas"]}
+        assert all(s > 0 for s in steps.values())
+
+    def test_unique_names_required(self, params):
+        with pytest.raises(ValueError, match="unique"):
+            FleetManager([_lm_spec("a", params), _lm_spec("a", params)])
+
+
+# -------------------------------------------------------- migration
+class TestMigration:
+    def test_kill_migrates_bit_exact(self, params):
+        reqs = lambda: [Request(rid=i, prompt=_prompt(i, 4), max_new=5)
+                        for i in range(4)]
+        want = _reference_tokens(params, reqs())
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)],
+                             injector=FaultInjector().kill("a", 2),
+                             **NO_WD)
+        for r in reqs():
+            fleet.submit(r)
+        log = list(fleet.stream())
+        stats = fleet.stats()
+        assert ("a", "injected kill of a at step 2") in stats["evictions"]
+        assert stats["migrations"] == 2 and not stats["lost"]
+        assert _tokens_by_rid(log) == want
+        # migrated rids resumed, never re-admitted
+        admits = [e.rid for e in log if isinstance(e, Admitted)]
+        assert sorted(admits) == sorted(set(admits))
+        resumed = {e.rid for e in log
+                   if isinstance(e, Progress) and e.phase == "resume"}
+        preempted = {e.rid for e in log if isinstance(e, Preempted)}
+        assert preempted and preempted <= resumed
+
+    def test_mid_prefill_eviction_resumes_bit_exact(self, params):
+        """Kill a replica after exactly one prefill chunk of a
+        multi-chunk prompt: the survivor re-prefills from scratch and
+        must land on identical tokens."""
+        reqs = lambda: [Request(rid=0, prompt=_prompt(3, 12), max_new=4)]
+        want = _reference_tokens(params, reqs())
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)],
+                             injector=FaultInjector().kill("a", 1),
+                             **NO_WD)
+        for r in reqs():
+            fleet.submit(r)       # placement tie -> replica "a" first
+        log = list(fleet.stream())
+        stats = fleet.stats()
+        # one quantum ran (one 8-token chunk of the 12-token prompt),
+        # so the kill caught the request genuinely mid-prefill
+        assert stats["migrations"] == 1 and not stats["lost"]
+        assert _tokens_by_rid(log) == want
+        assert any(isinstance(e, Preempted) for e in log)
+
+    def test_prefix_shared_blocks_on_dead_replica(self, params):
+        """Requests whose KV blocks are copy-on-write prefix-shared on
+        the dying replica migrate and finish bit-exactly; the
+        survivor's pool stays consistent."""
+        shared = _prompt(5, 8)
+        reqs = lambda: [Request(rid=i, prompt=list(shared), max_new=4)
+                        for i in range(4)]
+        kw = dict(prefix_share=True, slots=2, max_len=32)
+        want = _reference_tokens(params, reqs(), **kw)
+        fleet = FleetManager([_lm_spec("a", params, **kw),
+                              _lm_spec("b", params, **kw)],
+                             injector=FaultInjector().kill("a", 3),
+                             **NO_WD)
+        for r in reqs():
+            fleet.submit(r)
+        log = list(fleet.stream())
+        stats = fleet.stats()
+        assert stats["migrations"] > 0 and not stats["lost"]
+        assert _tokens_by_rid(log) == want
+        survivor = fleet._by_name("b").engine
+        survivor.runtime.check_consistency()
+        assert survivor.runtime.allocated_blocks == 0
+
+    def test_cancel_racing_eviction(self, params):
+        """Cancelling a request right after its replica died must
+        land on the adopting replica: terminal Cancelled, everything
+        else still finishes."""
+        reqs = lambda: [Request(rid=i, prompt=_prompt(i, 4), max_new=6)
+                        for i in range(4)]
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)],
+                             injector=FaultInjector().kill("a", 2),
+                             **NO_WD)
+        handles = {r.rid: fleet.submit(r) for r in reqs()}
+        while not fleet.evictions:
+            fleet.step()
+        moved = [rid for rid, rep in fleet._owner.items()
+                 if rep.spec.name == "b" and rid % 2 == 0]
+        victim = moved[0]     # originally placed on "a" (even rids)
+        assert fleet.cancel(victim)
+        log = list(fleet.stream())
+        assert handles[victim].state == "CANCELLED"
+        done = _tokens_by_rid(log)
+        assert set(done) == {r.rid for r in reqs()} - {victim}
+        assert not fleet.stats()["lost"]
+
+    def test_no_survivor_emits_cancelled_not_hang(self, params):
+        fleet = FleetManager([_lm_spec("only", params)],
+                             injector=FaultInjector().kill("only", 1),
+                             **NO_WD)
+        h = fleet.submit(Request(rid=0, prompt=_prompt(0, 4), max_new=4))
+        log = list(fleet.stream())
+        assert fleet.stats()["lost"] == [0]
+        assert h.state == "CANCELLED"
+        assert isinstance(log[-1], Cancelled)
+
+    def test_mixed_router_replicas_migrate_both_types(self, params,
+                                                      sd_params):
+        toks = [1] * TINY_SD.text_len
+
+        def build():
+            return EngineRouter(
+                diffusion=DiffusionEngine(sd_params, TINY_SD, max_batch=1),
+                lm=ContinuousBatcher(params, CFG, slots=2, max_len=32,
+                                     fused_prefill=False))
+        def reqs():
+            return [GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                    steps=2, seed=0),
+                    GenerateRequest(rid=1, tokens=toks, sampler="ddim",
+                                    steps=2, seed=1),
+                    Request(rid=2, prompt=_prompt(2, 4), max_new=4),
+                    Request(rid=3, prompt=_prompt(3, 4), max_new=4)]
+
+        ref = FleetManager([ReplicaSpec("solo", build)], **NO_WD)
+        for r in reqs():
+            ref.submit(r)
+        ref_log = list(ref.stream())
+        want_img = {e.rid: np.asarray(e.result.image) for e in ref_log
+                    if isinstance(e, Finished) and hasattr(e.result,
+                                                           "image")}
+        want_tok = {e.rid: e.result.out for e in ref_log
+                    if isinstance(e, Finished) and hasattr(e.result,
+                                                           "out")}
+        fleet = FleetManager([ReplicaSpec("a", build),
+                              ReplicaSpec("b", build)],
+                             injector=FaultInjector().kill("a", 2),
+                             **NO_WD)
+        for r in reqs():
+            fleet.submit(r)
+        log = list(fleet.stream())
+        assert not fleet.stats()["lost"]
+        got_img = {e.rid: np.asarray(e.result.image) for e in log
+                   if isinstance(e, Finished) and hasattr(e.result,
+                                                          "image")}
+        got_tok = {e.rid: e.result.out for e in log
+                   if isinstance(e, Finished) and hasattr(e.result,
+                                                          "out")}
+        assert got_tok == want_tok
+        assert set(got_img) == set(want_img)
+        for rid in want_img:
+            assert np.array_equal(got_img[rid], want_img[rid])
+
+
+# -------------------------------------------------- watchdog + drain
+class TestHealthGating:
+    def _virtual_fleet(self, params, injector, **kw):
+        t = [0.0]
+        kw.setdefault("suspect_limit", 2)
+        kw.setdefault("watchdog_threshold", 3.0)
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)],
+                             clock=lambda: t[0], injector=injector, **kw)
+        return fleet, t
+
+    def test_hang_escalates_to_eviction(self, params):
+        """A wedged replica (infinite observed quanta from step 2 on)
+        walks SUSPECT -> EVICTED via the watchdog; its requests finish
+        on the survivor."""
+        fleet, _ = self._virtual_fleet(
+            params, FaultInjector().hang("a", 2))
+        for rid in range(4):
+            fleet.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                 max_new=4))
+        done = fleet.run()
+        stats = fleet.stats()
+        assert [n for n, _ in stats["evictions"]] == ["a"]
+        assert "watchdog" in stats["evictions"][0][1]
+        assert len(done) == 4 and not stats["lost"]
+
+    def test_slow_window_suspects_then_recovers(self, params):
+        """A bounded straggler window (one slow quantum) marks the
+        replica SUSPECT, a clean quantum clears it: no eviction, no
+        migration."""
+        fleet, _ = self._virtual_fleet(
+            params, FaultInjector().slow("a", 1, 0.5, for_steps=1))
+        for rid in range(4):
+            fleet.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                 max_new=4))
+        done = fleet.run()
+        stats = fleet.stats()
+        a = fleet._by_name("a")
+        assert len(a.health.watchdog.suspects) == 1
+        assert a.health.state == HEALTHY
+        assert not stats["evictions"] and stats["migrations"] == 0
+        assert len(done) == 4
+
+    def test_drain_stops_dispatch_and_retires(self, params):
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)], **NO_WD)
+        fleet.submit(Request(rid=0, prompt=_prompt(0, 4), max_new=3))
+        fleet.drain("a")
+        for rid in range(1, 4):
+            fleet.submit(Request(rid=rid, prompt=_prompt(rid, 4),
+                                 max_new=3))
+        done = fleet.run()
+        stats = fleet.stats()
+        assert len(done) == 4
+        # nothing new landed on the draining replica...
+        outs = {r["name"]: r for r in stats["replicas"]}
+        assert outs["b"]["steps"] > 0
+        # ...its in-flight work ran to completion (no migration), and
+        # it retired as a planned removal
+        assert stats["migrations"] == 0 and not stats["lost"]
+        assert stats["evictions"] == [("a", "drained")]
+        assert outs["a"]["state"] == EVICTED
+
+    def test_drain_unknown_name_raises(self, params):
+        fleet = FleetManager([_lm_spec("a", params)], **NO_WD)
+        with pytest.raises(KeyError, match="nope"):
+            fleet.drain("nope")
+
+
+# ------------------------------------------------- cost-model extras
+class TestCostModelPersistence:
+    def test_save_load_roundtrip_preserves_key_types(self, tmp_path):
+        cm = CostModel(alpha=0.4)
+        keys = [("lm", "t", "prefill", False, True),
+                ("lm", "t", "decode", True),
+                ("diff", "sd", "fused", "ddim", 8, 8, False, 2)]
+        for i, k in enumerate(keys):
+            cm.seed(k, 0.1 * (i + 1))
+            cm.observe(k, 0.1 * (i + 1))
+        p = str(tmp_path / "cm.json")
+        cm.save(p)
+        back = CostModel.load(p)
+        assert back.alpha == 0.4
+        assert back.snapshot() == cm.snapshot()
+        for k in keys:       # tuple keys with exact element types
+            assert back.cost(k) == cm.cost(k)
+
+    def test_load_rejects_unknown_version(self, tmp_path):
+        p = tmp_path / "cm.json"
+        p.write_text('{"version": 99, "alpha": 0.3, "entries": []}')
+        with pytest.raises(ValueError, match="version"):
+            CostModel.load(str(p))
+
+
+class TestCoBatchDiscount:
+    def test_queued_same_group_amortizes_cost(self, sd_params):
+        cm = CostModel()
+        eng = DiffusionEngine(sd_params, TINY_SD, max_batch=2,
+                              cost_model=cm)
+        toks = [1] * TINY_SD.text_len
+        mk = lambda rid: GenerateRequest(rid=rid, tokens=toks,
+                                         sampler="ddim", steps=4, seed=rid)
+        k = cm._diff_keys(eng, mk(0))
+        cm.seed(k["fused"], 1.0)
+        solo = cm.estimate_diffusion(eng, mk(100))
+        assert solo == 1.0                       # empty queue: no sharing
+        eng.submit(mk(0))
+        half = cm.estimate_diffusion(eng, mk(101))
+        assert half == 0.5                       # shares one launch
+        eng.submit(mk(1))
+        eng.submit(mk(2))
+        capped = cm.estimate_diffusion(eng, mk(102))
+        assert capped == 0.5                     # capped at max_batch=2
+        other = GenerateRequest(rid=103, tokens=toks, sampler="ddim",
+                                steps=8, seed=3)  # different group key
+        ko = cm._diff_keys(eng, other)
+        cm.seed(ko["fused"], 1.0)
+        assert cm.estimate_diffusion(eng, other) == 1.0

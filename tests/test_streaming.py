@@ -690,3 +690,57 @@ class TestRouter:
         # first; slack stepping starts the long diffusion job.
         assert admits[0] == 0
         assert sum(isinstance(e, Finished) for e in log) == 2
+
+    def test_next_slack_is_min_over_engines(self, params, sd_params):
+        """``router.next_slack()`` is the minimum estimated slack over
+        the engines behind it — the key a FleetManager multiplexes
+        replica routers on — computed on the one shared (virtual)
+        clock."""
+        toks = [1] * TINY_SD.text_len
+        dcm, lcm = CostModel(), CostModel()
+        diff = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                               cost_model=dcm, clock=lambda: 0.0)
+        lm = _mk(params, cost_model=lcm, clock=lambda: 0.0)
+        router = EngineRouter(diffusion=diff, lm=lm)
+        dreq = GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                               steps=4, seed=0, deadline_ms=5_000.0)
+        dcm.seed(dcm._diff_keys(diff, dreq)["fused"], 2.0)
+        kp, kd = lcm.lm_keys(lm)
+        lcm.seed(kp, 0.01)
+        lcm.seed(kd, 0.01)
+        router.submit(dreq)
+        # 1 prefill chunk + 1 decode -> est 0.02 s, slack 1 - 0.02
+        router.submit(Request(rid=1, prompt=_prompt(4, 3), max_new=2,
+                              deadline_ms=1_000.0))
+        assert diff.next_slack() == pytest.approx(5.0 - 2.0)
+        assert lm.next_slack() == pytest.approx(1.0 - 0.02)
+        assert router.next_slack() == pytest.approx(
+            min(diff.next_slack(), lm.next_slack()))
+        # an engine with no deadline-bearing work contributes +inf
+        lm.cancel(1)
+        assert lm.next_slack() == float("inf")
+        assert router.next_slack() == diff.next_slack()
+
+    def test_next_slack_tie_rotates_round_robin(self, params,
+                                                sd_params):
+        """Deadline-free work on both engines gives identical +inf
+        slack every quantum: the tie must rotate round-robin so a
+        deadline-free diffusion backlog cannot starve LM decode on the
+        slack path (the PR 4 guarantee, preserved under cost models)."""
+        toks = [1] * TINY_SD.text_len
+        diff = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                               cost_model=CostModel())
+        lm = _mk(params, cost_model=CostModel())
+        router = EngineRouter(diffusion=diff, lm=lm)
+        router.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                      steps=6, seed=0, preview_every=1))
+        router.submit(Request(rid=1, prompt=_prompt(5, 4), max_new=6))
+        assert router.next_slack() == float("inf")
+        order = []
+        while router.has_work() and len(order) < 4:
+            before = lm.prefill_quanta + lm.decode_quanta
+            router.step()
+            order.append("lm" if lm.prefill_quanta + lm.decode_quanta
+                         > before else "diff")
+        # both stayed busy for these quanta, so ties alternated 1:1
+        assert order == ["diff", "lm", "diff", "lm"]
