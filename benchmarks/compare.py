@@ -23,11 +23,24 @@ A missing baseline file is NOT an error (first run of the trajectory,
 expired artifact retention): the comparator notes it and exits 0 —
 the trajectory starts from the current run.
 
+Per-metric threshold overrides (optional ``--config FILE``)::
+
+    {"overrides": [
+      {"pattern": "serving_cache/*hit*", "threshold": 0.0},
+      {"pattern": "phase_seconds*", "threshold": 0.8}
+    ]}
+
+Patterns are shell globs (fnmatch) tried against ``bench/name`` first,
+then the bare metric name; the FIRST matching override wins and
+replaces the default tight/loose limit for that metric.  With no
+config (or no match) the defaults above apply unchanged.
+
 Run:  python benchmarks/compare.py --baseline OLD.json --current NEW.json
 """
 from __future__ import annotations
 
 import argparse
+import fnmatch
 import json
 import os
 import re
@@ -80,8 +93,34 @@ def _index(rec: dict) -> dict[tuple[str, str], dict]:
     return {(e["bench"], e["name"]): e for e in rec["entries"]}
 
 
+def load_overrides(config: dict) -> list[tuple[str, float]]:
+    """Validate a ``--config`` document into ``(pattern, threshold)``
+    pairs, preserving order (first match wins)."""
+    out = []
+    for o in config.get("overrides", []):
+        if not isinstance(o, dict) or "pattern" not in o \
+                or "threshold" not in o:
+            raise ValueError(
+                f"override needs 'pattern' and 'threshold': {o!r}")
+        thr = float(o["threshold"])
+        if thr < 0:
+            raise ValueError(f"threshold must be >= 0: {o!r}")
+        out.append((str(o["pattern"]), thr))
+    return out
+
+
+def _override_limit(overrides, bench: str, name: str) -> float | None:
+    for pattern, thr in overrides:
+        if fnmatch.fnmatch(f"{bench}/{name}", pattern) \
+                or fnmatch.fnmatch(name, pattern):
+            return thr
+    return None
+
+
 def compare_records(base: dict, cur: dict, time_threshold: float,
-                    count_threshold: float) -> tuple[list[str], list[str]]:
+                    count_threshold: float,
+                    overrides: list[tuple[str, float]] = (),
+                    ) -> tuple[list[str], list[str]]:
     """-> (report lines, regression lines).  Pure so it is unit-testable
     without touching the filesystem."""
     report, regressions = [], []
@@ -110,14 +149,18 @@ def compare_records(base: dict, cur: dict, time_threshold: float,
             report.append(f"  ?       {name}: {arrow}")
             continue
         worse = rel < 0 if direction == "higher" else rel > 0
-        limit = (count_threshold if noise == "count" else time_threshold)
+        limit = _override_limit(overrides, bench, name)
+        which = "override" if limit is not None else noise
+        if limit is None:
+            limit = (count_threshold if noise == "count"
+                     else time_threshold)
         if worse and abs(rel) > limit:
             regressions.append(
                 f"  REGRESS {name}: {arrow} [{direction}-better, "
-                f"{noise} threshold {limit:.0%}]")
+                f"{which} threshold {limit:.0%}]")
         elif worse:
             report.append(f"  ~       {name}: {arrow} (within "
-                          f"{limit:.0%} {noise} threshold)")
+                          f"{limit:.0%} {which} threshold)")
         else:
             report.append(f"  ok      {name}: {arrow}")
     return report, regressions
@@ -135,7 +178,17 @@ def main() -> int:
     ap.add_argument("--count-threshold", type=float, default=0.05,
                     help="max relative regression for deterministic "
                          "counter metrics (quanta/bytes/launches)")
+    ap.add_argument("--config", default=None,
+                    help="optional JSON file with per-metric threshold "
+                         "overrides ({'overrides': [{'pattern': "
+                         "'bench/name-glob', 'threshold': 0.1}]}); "
+                         "defaults apply when absent or unmatched")
     a = ap.parse_args()
+
+    overrides: list[tuple[str, float]] = []
+    if a.config is not None:
+        with open(a.config) as f:
+            overrides = load_overrides(json.load(f))
 
     if not os.path.exists(a.baseline):
         print(f"compare: no baseline at {a.baseline} — first run of "
@@ -153,7 +206,7 @@ def main() -> int:
         return 1
 
     report, regressions = compare_records(
-        base, cur, a.time_threshold, a.count_threshold)
+        base, cur, a.time_threshold, a.count_threshold, overrides)
     print(f"perf trajectory [{cur['suite']}]: "
           f"{len(cur['entries'])} metrics vs baseline")
     for line in report:

@@ -1,0 +1,339 @@
+"""Gating observability smoke: spans/counters vs engine ground truth.
+
+Exercises the `repro.obs` telemetry layer end-to-end against the
+serving stack and **gates** on the three consistency promises the
+layer contracts on:
+
+* **Zero-perturbation** — the same virtual-clock workload run with
+  ``metrics=None`` and with a full ``Telemetry`` (registry + tracer)
+  produces an *identical* event sequence (type, rid, timestamp) and
+  bit-identical outputs (LM token lists / diffusion images).  The
+  virtual clock is derived from scheduler quanta counters, so any
+  instrumentation overhead that leaked into scheduling or timing
+  would shift an event and fail the gate.  Wall-clock overhead is
+  reported as a non-gating row.
+* **Counter/histogram reconciliation** — ``phase_seconds`` histogram
+  counts equal the engine's own quantum counters
+  (``prefill_quanta``/``decode_quanta``, diffusion step quanta);
+  ``events_total`` / ``tokens_emitted_total`` /
+  ``requests_terminal_total`` equal what the bus log says; the
+  cost-model ``cost_model_rel_error`` histogram is populated once a
+  calibrated model observes real quanta.
+* **Span-tree/event consistency** — per rid the tracer holds exactly
+  one root ``request`` span whose outcome matches the terminal event,
+  a ``queue_wait`` span iff admitted, and per-phase child spans whose
+  counts equal the per-request step counters (``prefill_steps`` /
+  ``decode_steps`` for LM; ``clip``/``unet_step``/``vae``/``fused``
+  quanta for diffusion), all contained in the root interval.
+
+Plus the exporters: the JSON snapshot is validated against
+``benchmarks.common.validate_record`` (the CI perf-trajectory
+schema), the Prometheus text exposition is spot-checked, and the
+Chrome trace JSON is re-loaded and structurally checked.  A fleet
+section gates the health-transition / dispatch / migration counters
+across an injected replica kill.
+
+Run:  PYTHONPATH=src python benchmarks/obs_smoke.py \
+          [--json PATH] [--trace-out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine import (TINY_SD, CostModel, DiffusionEngine,
+                          FaultInjector, Finished, FleetManager,
+                          GenerateRequest, PreviewLatent, ReplicaSpec,
+                          TokenDelta, calibrate, init_pipeline)
+from repro.models.transformer import init_lm
+from repro.obs import Telemetry, TraceRecorder
+from repro.serving import ContinuousBatcher, Request
+
+try:                          # package import (python -m ...)
+    from benchmarks.common import validate_record
+    from benchmarks.streaming_smoke import check_event_invariants
+except ImportError:           # script run: sys.path[0] is benchmarks/
+    from common import validate_record
+    from streaming_smoke import check_event_invariants
+
+LM_CFG = ModelConfig(name="smoke-lm", family="dense", num_layers=2,
+                     d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                     vocab_size=96, head_dim=16)
+
+NO_WATCHDOG = 1e9            # injector-driven faults only (no timing)
+
+
+def _event_sig(log, min_rid=0):
+    """Comparable event signature: (type, rid, ts) per event.  The ts
+    comes from the quanta-derived virtual clock, so any
+    instrumentation-induced scheduling perturbation shows up here."""
+    return [(type(e).__name__, e.rid, e.ts) for e in log
+            if e.rid >= min_rid]
+
+
+def _run_lm(lm_params, tele):
+    """One deterministic LM workload under a quanta-derived virtual
+    clock; identical scheduling with or without telemetry attached."""
+    box: dict = {}
+
+    def vclock() -> float:   # 1 scheduling quantum == 10 virtual ms
+        cb = box.get("cb")
+        return 0.0 if cb is None else \
+            (cb.prefill_quanta + cb.decode_quanta) * 0.01
+
+    cm = CostModel()
+    if tele is not None:
+        cm.metrics = tele    # estimate-vs-actual error histograms
+    cb = ContinuousBatcher(lm_params, LM_CFG, slots=2, max_len=32,
+                           fused_prefill=False, clock=vclock,
+                           cost_model=cm, metrics=tele)
+    box["cb"] = cb
+    if tele is not None:
+        tele.attach(cb.bus)  # single engine: no bus rebinding after
+    calibrate(cb, [Request(rid=100 + i, prompt=[1, 2, 3], max_new=4)
+                   for i in range(2)])
+    rng = np.random.RandomState(7)
+    reqs = [Request(rid=i, prompt=rng.randint(1, 90, size=4).tolist(),
+                    max_new=4 + i % 3) for i in range(4)]
+    for r in reqs:
+        cb.submit(r)
+    log = list(cb.stream())
+    return log, {r.rid: list(r.out) for r in reqs}, cb, reqs
+
+
+def smoke_lm_consistency(trace_out: str | None) -> list[str]:
+    lm_params = init_lm(jax.random.PRNGKey(2), LM_CFG)
+
+    t0 = time.perf_counter()
+    plain_log, plain_out, _, _ = _run_lm(lm_params, None)
+    t_plain = time.perf_counter() - t0
+    tele = Telemetry(tracer=TraceRecorder())
+    t0 = time.perf_counter()
+    log, out, cb, reqs = _run_lm(lm_params, tele)
+    t_tele = time.perf_counter() - t0
+
+    # Gate 1: zero-perturbation — identical events and tokens.
+    assert _event_sig(log) == _event_sig(plain_log), \
+        "telemetry perturbed the event sequence / virtual timestamps"
+    assert out == plain_out, "telemetry perturbed generated tokens"
+    check_event_invariants([e for e in log if e.rid < 100],
+                           expect_finished=tuple(out))
+
+    # Gate 2: histogram counts reconcile with engine step counters.
+    reg = tele.registry
+    ph = reg.get("phase_seconds")
+    assert ph.count(engine="lm", phase="prefill") == cb.prefill_quanta, \
+        (ph.count(engine="lm", phase="prefill"), cb.prefill_quanta)
+    assert ph.count(engine="lm", phase="decode") == cb.decode_quanta, \
+        (ph.count(engine="lm", phase="decode"), cb.decode_quanta)
+    ev_total = reg.get("events_total")
+    for t in ("Admitted", "TokenDelta", "Finished", "Progress"):
+        want = sum(type(e).__name__ == t for e in log)
+        assert ev_total.value(type=t) == want, (t, want)
+    n_tok = sum(isinstance(e, TokenDelta) for e in log)
+    assert reg.get("tokens_emitted_total").value() == n_tok
+    n_fin = sum(isinstance(e, Finished) for e in log)
+    assert reg.get("requests_terminal_total").value(
+        engine="lm", outcome="finished") == n_fin
+    assert reg.get("requests_submitted_total").value(engine="lm") \
+        == 6                  # 2 calibration + 4 workload requests
+    # Calibrated model observed real quanta -> error histogram live.
+    err = reg.get("cost_model_rel_error")
+    n_err = sum(err.samples().values()) if err is not None else 0
+    assert n_err > 0, "cost_model_rel_error never observed"
+
+    # Gate 3: span trees match per-request ground truth.
+    tr = tele.tracer
+    for r in reqs:
+        root, children = tr.request_tree(r.rid)
+        assert root is not None and root.args["outcome"] == "finished"
+        names = [s.name for s in children]
+        assert names.count("queue_wait") == 1, (r.rid, names)
+        assert names.count("prefill") == r.prefill_steps, (r.rid, names)
+        assert names.count("decode") == r.decode_steps, (r.rid, names)
+        for s in children:
+            assert root.start <= s.start and s.end <= root.end, \
+                f"rid {r.rid}: span {s.name} outside root interval"
+        assert tr.outcome(r.rid) == "finished"
+
+    # Gate 4: exporters round-trip.
+    with tempfile.TemporaryDirectory() as td:
+        snap_path = os.path.join(td, "snap.json")
+        reg.write_snapshot(snap_path)
+        with open(snap_path) as f:
+            snap = json.load(f)
+        validate_record(snap)       # CI perf-trajectory schema
+        assert snap["suite"] == "obs" and snap["entries"]
+        tpath = trace_out or os.path.join(td, "trace.json")
+        tr.export(tpath)
+        with open(tpath) as f:
+            chrome = json.load(f)
+    evs = chrome["traceEvents"]
+    assert evs and all("ph" in e and "pid" in e for e in evs)
+    n_x = sum(e["ph"] == "X" for e in evs)
+    assert n_x == len(tr.spans) and \
+        all("ts" in e and "dur" in e for e in evs if e["ph"] == "X")
+    prom = reg.to_prometheus()
+    assert "# TYPE phase_seconds histogram" in prom
+    assert 'phase_seconds_bucket{engine="lm",phase="decode",le="+Inf"}' \
+        in prom
+
+    overhead = (t_tele - t_plain) / max(t_plain, 1e-9)
+    rows = [
+        f"obs_smoke/lm_consistency,{len(log)} events bit-identical "
+        f"with telemetry on,phase counts == "
+        f"{cb.prefill_quanta}+{cb.decode_quanta} quanta; "
+        f"{len(tr.spans)} spans; {n_err:.0f} cost-error samples",
+        f"obs_smoke/exporters,{len(snap['entries'])} snapshot entries "
+        f"+ {n_x} trace spans,schema + prometheus + chrome round-trip",
+        f"obs_smoke/overhead,{max(overhead, 0.0):.2f}x wall overhead "
+        f"with telemetry,non-gating; virtual-clock overhead gated at 0",
+    ]
+    for r in rows:
+        print(r)
+    return rows
+
+
+def smoke_diffusion_spans() -> list[str]:
+    sd_params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (TINY_SD.text_len,), 0,
+                              TINY_SD.clip_cfg().vocab_size)
+    steps = 4
+
+    def run(tele):
+        box: dict = {}
+
+        def vclock() -> float:   # 1 engine quantum == 10 virtual ms
+            eng = box.get("eng")
+            return 0.0 if eng is None else eng.quanta * 0.01
+
+        eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                              clock=vclock, metrics=tele)
+        box["eng"] = eng
+        if tele is not None:
+            tele.attach(eng.bus)
+        # rid 0 streams previews (segmented clip/unet_step/vae path);
+        # rid 1 runs the fused scan.
+        eng.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                   steps=steps, seed=0, preview_every=2))
+        eng.submit(GenerateRequest(rid=1, tokens=toks, sampler="ddim",
+                                   steps=steps, seed=1))
+        log = list(eng.stream())
+        imgs = {e.rid: np.asarray(e.result.image) for e in log
+                if isinstance(e, Finished)}
+        return log, imgs, eng
+
+    plain_log, plain_imgs, _ = run(None)
+    tele = Telemetry(tracer=TraceRecorder())
+    log, imgs, eng = run(tele)
+
+    assert _event_sig(log) == _event_sig(plain_log), \
+        "telemetry perturbed the diffusion event sequence"
+    assert set(imgs) == set(plain_imgs) == {0, 1}
+    for rid in imgs:
+        assert np.array_equal(imgs[rid], plain_imgs[rid]), \
+            f"rid {rid}: image not bit-identical with telemetry on"
+    check_event_invariants(log, expect_finished=(0, 1))
+
+    tr = tele.tracer
+    root0, ch0 = tr.request_tree(0)
+    names0 = [s.name for s in ch0]
+    assert names0.count("clip") == 1, names0
+    assert names0.count("unet_step") == steps, names0
+    assert names0.count("vae") == 1, names0
+    root1, ch1 = tr.request_tree(1)
+    names1 = [s.name for s in ch1]
+    assert names1.count("fused") == 1, names1
+    for root, ch in ((root0, ch0), (root1, ch1)):
+        assert root is not None and root.args["outcome"] == "finished"
+        for s in ch:
+            assert root.start <= s.start and s.end <= root.end
+
+    reg = tele.registry
+    ph = reg.get("phase_seconds")
+    assert ph.count(engine="diffusion", phase="unet_step") == steps
+    assert ph.count(engine="diffusion", phase="clip") == 1
+    assert ph.count(engine="diffusion", phase="vae") == 1
+    assert ph.count(engine="diffusion", phase="fused") == 1
+    n_prev = sum(isinstance(e, PreviewLatent) for e in log)
+    assert reg.get("previews_total").value() == n_prev > 0
+    assert reg.get("requests_terminal_total").value(
+        engine="diffusion", outcome="finished") == 2
+    rows = [f"obs_smoke/diffusion_spans,clip+{steps}x unet_step+vae "
+            f"spans match Fig.11 phases,fused span 1; {n_prev} preview "
+            f"markers; images bit-identical"]
+    print(rows[0])
+    return rows
+
+
+def smoke_fleet_health_metrics() -> list[str]:
+    lm_params = init_lm(jax.random.PRNGKey(2), LM_CFG)
+    tele = Telemetry()
+    n_req = 8
+
+    def build():
+        return ContinuousBatcher(lm_params, LM_CFG, slots=2, max_len=32,
+                                 fused_prefill=False, metrics=tele)
+
+    fleet = FleetManager([ReplicaSpec(f"r{i}", build) for i in range(3)],
+                         injector=FaultInjector().kill("r1", 3),
+                         watchdog_threshold=NO_WATCHDOG, metrics=tele)
+    tele.attach(fleet.bus)   # AFTER construction: replica buses rebound
+    rng = np.random.RandomState(3)
+    for i in range(n_req):
+        fleet.submit(Request(rid=i,
+                             prompt=rng.randint(1, 90, size=4).tolist(),
+                             max_new=5))
+    log = list(fleet.stream())
+    stats = fleet.stats()
+    assert not stats["lost"]
+    check_event_invariants(log, expect_finished=tuple(range(n_req)))
+
+    reg = tele.registry
+    disp = reg.get("fleet_dispatch_total")
+    assert sum(disp.samples().values()) == n_req, disp.samples()
+    assert reg.get("fleet_evictions_total").value(replica="r1") == 1
+    assert reg.get("fleet_migrations_total").value() \
+        == stats["migrations"] > 0
+    lost = reg.get("fleet_lost_total")
+    assert lost is None or sum(lost.samples().values()) == 0
+    trans = reg.get("replica_health_transitions_total")
+    evicted = {k[0]: v for k, v in trans.samples().items()
+               if k[2] == "EVICTED"}
+    assert evicted == {"r1": 1.0}, trans.samples()
+    assert reg.get("requests_terminal_total").value(
+        engine="lm", outcome="finished") == n_req
+    rows = [f"obs_smoke/fleet_health,r1 kill -> 1 eviction transition,"
+            f"{stats['migrations']} migrations counted, "
+            f"{n_req} dispatches, 0 lost"]
+    print(rows[0])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append machine-readable rows to the suite's "
+                         "perf-trajectory record (benchmarks/common.py "
+                         "schema)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="also keep the LM section's Chrome trace JSON "
+                         "at PATH (CI uploads it as an artifact)")
+    a = ap.parse_args()
+    all_rows = (smoke_lm_consistency(a.trace_out)
+                + smoke_diffusion_spans()
+                + smoke_fleet_health_metrics())
+    if a.json:
+        try:
+            from benchmarks.common import write_bench_json
+        except ImportError:
+            from common import write_bench_json
+        write_bench_json(a.json, "obs", all_rows, bench="obs_smoke")

@@ -98,6 +98,12 @@ class ReplicaHealth:
     state: str = HEALTHY
     consecutive_suspects: int = 0
     reason: str = ""
+    # Optional telemetry: ``name`` identifies the replica and
+    # ``metrics`` is a duck-typed sink (repro.obs.Telemetry or a bare
+    # MetricsRegistry) — every state change increments a
+    # ``replica_health_transitions_total{replica, src, dst}`` counter.
+    name: str = ""
+    metrics: object = None
 
     @property
     def live(self) -> bool:
@@ -107,6 +113,17 @@ class ReplicaHealth:
     def dispatchable(self) -> bool:
         """Whether new requests may be placed on this replica."""
         return self.state in (HEALTHY, SUSPECT)
+
+    def _set_state(self, new: str) -> None:
+        if new == self.state:
+            return
+        old, self.state = self.state, new
+        if self.metrics is not None:
+            self.metrics.counter(
+                "replica_health_transitions_total",
+                "replica health state transitions",
+                labels=("replica", "src", "dst"),
+            ).inc(replica=self.name, src=old, dst=new)
 
     def observe_step(self, step: int, seconds: float) -> str:
         if not self.live:
@@ -119,35 +136,44 @@ class ReplicaHealth:
                            f"(last {seconds:.3f}s vs EWMA "
                            f"{self.watchdog.ewma or 0:.3f}s)")
             elif self.state == HEALTHY:
-                self.state = SUSPECT
+                self._set_state(SUSPECT)
         else:
             self.consecutive_suspects = 0
             if self.state == SUSPECT:
-                self.state = HEALTHY
+                self._set_state(HEALTHY)
         return self.state
 
     def evict(self, reason: str) -> None:
         if self.live:
-            self.state = EVICTED
+            self._set_state(EVICTED)
             self.reason = reason
 
     def drain(self) -> None:
         if self.state in (HEALTHY, SUSPECT):
-            self.state = DRAINING
+            self._set_state(DRAINING)
 
 
 class StepTimer:
-    def __init__(self, watchdog: Watchdog):
+    """Context manager timing one step into a :class:`Watchdog`.
+
+    ``clock`` is injectable (default ``time.monotonic``) so fleet
+    health telemetry is deterministic under virtual-clock tests — the
+    same discipline as :class:`repro.engine.events.EventBus`.
+    """
+
+    def __init__(self, watchdog: Watchdog,
+                 clock: Callable[[], float] = time.monotonic):
         self.watchdog = watchdog
+        self.clock = clock
         self._t0 = None
         self._step = 0
 
     def __enter__(self):
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
         return self
 
     def __exit__(self, *exc):
-        self.watchdog.observe(self._step, time.monotonic() - self._t0)
+        self.watchdog.observe(self._step, self.clock() - self._t0)
         self._step += 1
         return False
 

@@ -87,12 +87,19 @@ class CostModel:
     ``alpha`` is the EWMA weight of a fresh observation.
     """
 
-    def __init__(self, alpha: float = 0.3):
+    def __init__(self, alpha: float = 0.3, metrics=None):
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
         self.alpha = alpha
         self._costs: dict[tuple, float] = {}
         self._counts: dict[tuple, int] = {}
+        # Optional telemetry sink (repro.obs.Telemetry or a bare
+        # MetricsRegistry, duck-typed): every observe() against an
+        # existing estimate records |actual - estimate| / estimate in
+        # an error histogram per (engine, model, phase) — the
+        # estimate-vs-actual signal the queueing-delay-aware work
+        # needs.  Not persisted by save()/load().
+        self.metrics = metrics
 
     # --------------------------------------------------------- table
     def seed(self, key: tuple, cost_s: float) -> None:
@@ -104,6 +111,17 @@ class CostModel:
     def observe(self, key: tuple, cost_s: float) -> None:
         """Fold one measured phase duration into the EWMA."""
         cur = self._costs.get(key)
+        if cur is not None and self.metrics is not None:
+            from repro.obs.metrics import DEFAULT_ERROR_BUCKETS
+            rel = abs(float(cost_s) - cur) / max(abs(cur), 1e-12)
+            self.metrics.histogram(
+                "cost_model_rel_error",
+                "relative estimate-vs-actual error per phase "
+                "(|actual - estimate| / estimate, pre-EWMA-fold)",
+                labels=("engine", "model", "phase"),
+                buckets=DEFAULT_ERROR_BUCKETS,
+            ).observe(rel, engine=str(key[0]), model=str(key[1]),
+                      phase=str(key[2]))
         self._costs[key] = (float(cost_s) if cur is None else
                             (1 - self.alpha) * cur + self.alpha * cost_s)
         self._counts[key] = self._counts.get(key, 0) + 1

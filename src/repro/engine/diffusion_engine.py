@@ -249,7 +249,7 @@ class DiffusionEngine(ev.EventStreamMixin):
     def __init__(self, params: dict, cfg: SDConfig, *, max_batch: int = 1,
                  bus: ev.EventBus | None = None,
                  clock: Callable[[], float] = time.monotonic,
-                 cost_model=None):
+                 cost_model=None, metrics=None):
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -263,6 +263,8 @@ class DiffusionEngine(ev.EventStreamMixin):
         self._subseq = 0
         self.cost_model = cost_model            # None -> no admission ctrl
         self.rejections = 0
+        self.metrics = metrics                  # None -> no instrumentation
+        self.quanta = 0                         # non-idle step() count
 
     # ------------------------------------------------------------ API
     def submit(self, request: GenerateRequest) -> ev.RequestHandle:
@@ -282,6 +284,11 @@ class DiffusionEngine(ev.EventStreamMixin):
         if request.rid in self._meta \
                 or self.bus.terminal(request.rid) is not None:
             raise ValueError(f"duplicate rid {request.rid}")
+        if self.metrics is not None:
+            # Before admission control: rejected-at-submit requests are
+            # telemetry-visible too (submission is not a bus event).
+            self.metrics.request_submitted(request.rid, "diffusion",
+                                           self.bus.clock())
         if self.cost_model is not None and request.deadline_ms is not None:
             est = self.cost_model.estimate_diffusion(self, request)
             budget = request.deadline_ms / 1e3
@@ -296,6 +303,7 @@ class DiffusionEngine(ev.EventStreamMixin):
         self._meta[request.rid] = (self._subseq, deadline, request.priority)
         self._subseq += 1
         self.queue.append(request)
+        self._obs_sched()
         return self.handle(request.rid)
 
     # ------------------------------------------- fleet migration hooks
@@ -406,9 +414,13 @@ class DiffusionEngine(ev.EventStreamMixin):
         if self.cost_model is not None and self.queue:
             self._sweep_infeasible()
         if self._inflight is not None:
+            self.quanta += 1
+            self._obs_sched()
             return self._segment_quantum()
         if not self.queue:
             return 0
+        self.quanta += 1
+        self._obs_sched()
         seed = min(self.queue, key=self._edf_key)
         gkey = self._group_key(seed)
         batch: list[GenerateRequest] = [seed]
@@ -488,6 +500,34 @@ class DiffusionEngine(ev.EventStreamMixin):
         jax.block_until_ready(out)
         self.cost_model.observe(key, self.bus.clock() - t0)
 
+    def _obs_phase(self, phase: str, t0: float, out, rids: list,
+                   args: dict | None = None) -> None:
+        """Phase telemetry mark (histogram + trace span).  Unlike the
+        cost-model ``_observe`` this never skips first-trace quanta —
+        phase counts must reconcile exactly with emitted events, so
+        first observations simply include compile time (documented in
+        the metric help text)."""
+        if self.metrics is None:
+            return
+        jax.block_until_ready(out)
+        self.metrics.phase("diffusion", phase, t0, self.bus.clock(),
+                           rids=rids, args=args)
+
+    def _obs_sched(self) -> None:
+        if self.metrics is None:
+            return
+        self.metrics.gauge(
+            "engine_queue_depth", "queued requests by engine",
+            labels=("engine",)).set(len(self.queue), engine="diffusion")
+        st = self._inflight
+        live = 0 if st is None else sum(
+            1 for r in st["reqs"] if r.rid not in st["cancelled"])
+        self.metrics.gauge(
+            "diffusion_inflight",
+            "live requests in the segmented in-flight batch").set(live)
+        self.metrics.gauge("diffusion_traces",
+                           "cumulative jit traces").set(self.traces)
+
     def _group_key(self, req: GenerateRequest) -> tuple:
         fixed = samplers_mod.get_sampler(req.sampler).fixed_steps
         return (req.sampler, fixed or req.steps,
@@ -547,6 +587,8 @@ class DiffusionEngine(ev.EventStreamMixin):
         self._observe(("diff", self.cfg.name, "fused", sampler_name,
                        sbucket, hw, use_cfg, self.max_batch), t0, tr0,
                       imgs)
+        self._obs_phase("fused", t0, imgs, [r.rid for r in reqs],
+                        args={"steps": steps, "batch": len(reqs)})
         for i, r in enumerate(reqs):
             res = GenerateResult(
                 rid=r.rid, image=imgs[i], sampler=sampler_name,
@@ -565,6 +607,8 @@ class DiffusionEngine(ev.EventStreamMixin):
         ctx, ctx_u = enc(self.params, toks, negs)
         self._observe(("diff", self.cfg.name, "clip", use_cfg,
                        self.max_batch), t0, tr0, ctx)
+        self._obs_phase("clip", t0, ctx, [r.rid for r in reqs],
+                        args={"batch": len(reqs)})
         sampler = samplers_mod.get_sampler(sampler_name)
         # Unpadded plan: the 1-step segment program serves any step
         # count, so segmented requests never pay pow2 padding steps.
@@ -592,6 +636,9 @@ class DiffusionEngine(ev.EventStreamMixin):
                      st["x"], step_slice)
         self._observe(("diff", self.cfg.name, "unet_step", sampler_name,
                        hw, use_cfg, self.max_batch), t0, tr0, st["x"])
+        self._obs_phase("unet_step", t0, st["x"],
+                        [r.rid for _row, r in live],
+                        args={"step": i + 1, "total": steps})
         st["i"] = i + 1
         sampler = samplers_mod.get_sampler(sampler_name)
         for row, r in live:
@@ -610,6 +657,8 @@ class DiffusionEngine(ev.EventStreamMixin):
             imgs = dec(self.params, st["x"])
             self._observe(("diff", self.cfg.name, "vae", hw,
                            self.max_batch), t0, tr0, imgs)
+            self._obs_phase("vae", t0, imgs,
+                            [r.rid for _row, r in live])
             for row, r in live:
                 res = GenerateResult(
                     rid=r.rid, image=imgs[row], sampler=sampler_name,

@@ -161,6 +161,16 @@ class EventBus:
         self._base = 0            # seq of log[0] (prefix compaction)
         self._admitted: set[int] = set()
         self._terminal: dict[int, Event] = {}
+        self._subs: list[Callable[[Event], None]] = []
+
+    def subscribe(self, fn: Callable[[Event], None]) -> Callable:
+        """Register a synchronous observer called once per emitted
+        event, after it is appended to the log (the observability
+        layer's tap — ``repro.obs.Telemetry.attach``).  Observers must
+        not emit or mutate the bus; subscriptions live on this bus
+        object, so attach only after router/fleet bus rebinding."""
+        self._subs.append(fn)
+        return fn
 
     def emit(self, cls: type, rid: int, **fields) -> Event:
         """Append one event; enforces the per-rid lifecycle invariants
@@ -180,6 +190,8 @@ class EventBus:
         if isinstance(ev, TERMINAL_EVENTS):
             self._terminal[rid] = ev
         self.log.append(ev)
+        for fn in self._subs:
+            fn(ev)
         return ev
 
     def admitted(self, rid: int) -> bool:

@@ -146,13 +146,15 @@ class FleetManager(ev.EventStreamMixin):
                  injector: FaultInjector | None = None,
                  watchdog_threshold: float = 3.0,
                  watchdog_alpha: float = 0.2,
-                 suspect_limit: int = 2):
+                 suspect_limit: int = 2,
+                 metrics=None):
         if not specs:
             raise ValueError("fleet needs at least one replica")
         if len({s.name for s in specs}) != len(specs):
             raise ValueError("replica names must be unique")
         self.bus = ev.EventBus(clock)
         self.injector = injector
+        self.metrics = metrics          # None -> no instrumentation
         self.replicas: list[_Replica] = []
         for spec in specs:
             engine = spec.build()
@@ -161,7 +163,8 @@ class FleetManager(ev.EventStreamMixin):
                 spec, engine,
                 ReplicaHealth(Watchdog(threshold=watchdog_threshold,
                                        alpha=watchdog_alpha),
-                              suspect_limit=suspect_limit)))
+                              suspect_limit=suspect_limit,
+                              name=spec.name, metrics=metrics)))
         self._owner: dict[int, _Replica] = {}     # rid -> replica
         self._est: dict[int, float] = {}          # rid -> placed estimate
         self._rr_place = 0                        # placement tie rotation
@@ -249,6 +252,11 @@ class FleetManager(ev.EventStreamMixin):
         rep, est = self._place(cands, request)
         rep.engine.submit(request)
         self._owner[rid] = rep
+        if self.metrics is not None:
+            self.metrics.counter(
+                "fleet_dispatch_total",
+                "requests placed per replica",
+                labels=("replica",)).inc(replica=rep.spec.name)
         # A submit-time Rejected is terminal already: no backlog entry.
         if est is not None and self.bus.terminal(rid) is None:
             self._est[rid] = est
@@ -341,6 +349,10 @@ class FleetManager(ev.EventStreamMixin):
         rep.evicted = True
         rep.health.evict(reason)
         self.evictions.append((rep.spec.name, reason))
+        if self.metrics is not None:
+            self.metrics.counter(
+                "fleet_evictions_total", "replica evictions",
+                labels=("replica",)).inc(replica=rep.spec.name)
         moved = rep.engine.evacuate("replica-evicted")
         for req in moved:
             cands = self._dispatchable(req)
@@ -351,6 +363,10 @@ class FleetManager(ev.EventStreamMixin):
                 self.bus.emit(ev.Cancelled, req.rid)
                 self._owner.pop(req.rid, None)
                 self._est.pop(req.rid, None)
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "fleet_lost_total",
+                        "requests with no survivor to adopt them").inc()
                 continue
             target, est = self._place(cands, req)
             target.engine.adopt(req)
@@ -358,6 +374,10 @@ class FleetManager(ev.EventStreamMixin):
             if est is not None:
                 self._est[req.rid] = est
             self.migrations += 1
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "fleet_migrations_total",
+                    "requests migrated off evicted replicas").inc()
 
     # ------------------------------------------------------------- drain
     def run(self, max_steps: int = 100_000) -> list:

@@ -47,11 +47,13 @@ class EngineRouter(ev.EventStreamMixin):
     """Multiplexes a diffusion engine and an LM engine behind one
     streaming Engine surface (either may be ``None``)."""
 
-    def __init__(self, diffusion: Any = None, lm: Any = None):
+    def __init__(self, diffusion: Any = None, lm: Any = None,
+                 metrics=None):
         if diffusion is None and lm is None:
             raise ValueError("router needs at least one engine")
         self.diffusion = diffusion
         self.lm = lm
+        self.metrics = metrics          # None -> no instrumentation
         self.engines = [e for e in (diffusion, lm) if e is not None]
         # Rebind every engine onto one shared bus (single clock, one
         # total event order).  Refuse once events exist: merging
@@ -158,6 +160,13 @@ class EngineRouter(ev.EventStreamMixin):
         tied = [e for e, k in zip(busy, keys) if k == best]
         engine = tied[self._rr % len(tied)]
         self._rr += 1
+        if self.metrics is not None:
+            self.metrics.counter(
+                "router_steps_total",
+                "scheduling quanta granted by the router, per engine",
+                labels=("engine",)).inc(
+                engine="diffusion" if engine is self.diffusion
+                else "lm")
         return engine.step()
 
     def run(self, max_steps: int = 100_000) -> list:

@@ -71,6 +71,16 @@ def main() -> None:
                          "JSON: load it if the file exists, write the "
                          "refined table back after the run (implies a "
                          "cost model even without --admission)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the telemetry layer and write the "
+                         "final metrics snapshot (benchmarks/common.py "
+                         "record schema) to PATH; PATH ending in "
+                         "'.prom' writes Prometheus text exposition "
+                         "instead")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable per-request span tracing and write a "
+                         "Chrome trace-event JSON (Perfetto-loadable) "
+                         "to PATH (implies the metrics layer)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -86,6 +96,11 @@ def main() -> None:
                        seq=args.prompt_len)
     max_len = ContinuousBatcher.required_len(n_requests, args.slots,
                                              args.prompt_len, args.gen)
+    tele = None
+    if args.metrics_out or args.trace_out:
+        from repro.obs import Telemetry, TraceRecorder
+        tele = Telemetry(tracer=TraceRecorder() if args.trace_out
+                         else None)
     cm = None
     restored = False
     if args.admission or args.cost_model_path:
@@ -96,6 +111,7 @@ def main() -> None:
                   f"({len(cm.snapshot())} phase entries)")
         else:
             cm = CostModel()
+        cm.metrics = tele   # estimate-vs-actual error histograms
 
     def build_engine():
         # One shared CostModel instance across replicas: any replica's
@@ -103,15 +119,21 @@ def main() -> None:
         return ContinuousBatcher(qp, cfg, slots=args.slots,
                                  max_len=max_len,
                                  enc_embeds=inp.get("enc_embeds"),
-                                 cost_model=cm)
+                                 cost_model=cm, metrics=tele)
 
     if args.replicas > 1:
         engine = FleetManager([ReplicaSpec(f"replica{i}", build_engine)
-                               for i in range(args.replicas)])
+                               for i in range(args.replicas)],
+                              metrics=tele)
         batchers = [r.engine for r in engine.replicas]
     else:
         engine = build_engine()
         batchers = [engine]
+    if tele is not None:
+        # Attach AFTER fleet/engine construction: the fleet rebinds
+        # replica buses onto its shared one, and subscriptions live on
+        # the bus object itself.
+        tele.attach(engine.bus)
     prompts = np.asarray(inp["tokens"])
     if cm is not None and not restored:
         # Calibration micro-run: one deadline-free request per compiled
@@ -169,6 +191,21 @@ def main() -> None:
         cm.save(args.cost_model_path)
         print(f"cost model saved to {args.cost_model_path} "
               f"({len(cm.snapshot())} phase entries)")
+    if tele is not None:
+        if args.metrics_out:
+            if args.metrics_out.endswith(".prom"):
+                with open(args.metrics_out, "w") as f:
+                    f.write(tele.registry.to_prometheus())
+            else:
+                tele.registry.write_snapshot(args.metrics_out)
+            print(f"metrics snapshot written to {args.metrics_out} "
+                  f"({len(tele.registry.instruments())} instruments)")
+        if args.trace_out and tele.tracer is not None:
+            tele.tracer.export(args.trace_out)
+            print(f"trace written to {args.trace_out} "
+                  f"({len(tele.tracer.spans)} spans, "
+                  f"{len(tele.tracer.markers)} markers — load in "
+                  f"Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -184,7 +184,8 @@ class PagedKVRuntime:
     def __init__(self, slots: int, max_len: int, block_size: int = 16, *,
                  num_blocks: int | None = None, extra_blocks: int = 0,
                  prefix_share: bool = False,
-                 copy_block: Callable[[int, int], None] | None = None):
+                 copy_block: Callable[[int, int], None] | None = None,
+                 metrics=None):
         self.slots = slots
         self.max_len = max_len
         self.block_size = block_size
@@ -201,6 +202,31 @@ class PagedKVRuntime:
                        for _ in range(slots)]
         self._owned = [0] * slots         # blocks in use (incl. shared)
         self.cow_copies = 0
+        self.metrics = metrics            # None -> no instrumentation
+        self._obs_pool()
+
+    # ---------------------------------------------------- observability
+    def _obs_pool(self) -> None:
+        """Refresh pool gauges (allocated/free blocks, CoW copies,
+        prefix-cache size and hits) after any state change; the gauges
+        mirror the host-side counters exactly, so snapshot values and
+        ``stats()``-style asserts never diverge."""
+        m = self.metrics
+        if m is None:
+            return
+        g = m.gauge("kv_pool_blocks", "physical KV blocks by state "
+                    "(null block excluded)", labels=("state",))
+        g.set(self.allocated_blocks, state="allocated")
+        g.set(self.alloc.num_free, state="free")
+        m.gauge("kv_cow_copies",
+                "cumulative copy-on-write block copies").set(
+            self.cow_copies)
+        if self.prefix is not None:
+            m.gauge("kv_prefix_entries",
+                    "retained prefix-cache blocks").set(len(self.prefix))
+            m.gauge("kv_prefix_hits",
+                    "cumulative prefix blocks adopted").set(
+                self.prefix.hits)
 
     # ------------------------------------------------------- invariants
     def check_consistency(self) -> None:
@@ -258,6 +284,7 @@ class PagedKVRuntime:
         n_reused = len(shared) * self.block_size
         self.pos[slot] = n_reused
         self.check_consistency()
+        self._obs_pool()
         return n_reused
 
     # ------------------------------------------------------ write guard
@@ -281,6 +308,7 @@ class PagedKVRuntime:
         self.tables[slot][bi] = fresh[0]
         self.cow_copies += 1
         self.check_consistency()
+        self._obs_pool()
         return fresh[0]
 
     # ------------------------------------------------------- retirement
@@ -299,6 +327,7 @@ class PagedKVRuntime:
         self._owned[slot] = 0
         self.pos[slot] = 0
         self.check_consistency()
+        self._obs_pool()
 
     # ------------------------------------------------------------ stats
     @property

@@ -209,7 +209,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
                  clock: Callable[[], float] = time.monotonic,
                  edf: bool = True,
                  preempt_over_budget: bool = False,
-                 cost_model=None):
+                 cost_model=None, metrics=None):
         if prefix_share and (set(cfg.block_pattern) != {"attn"}
                              or cfg.is_enc_dec):
             raise ValueError(
@@ -219,10 +219,12 @@ class ContinuousBatcher(ev.EventStreamMixin):
         self.cfg = cfg
         self.max_len = max_len
         self.prefill_chunk = max(1, prefill_chunk)
+        self.metrics = metrics          # None -> no instrumentation
         self.runtime = PagedKVRuntime(
             slots, max_len, block_size, prefix_share=prefix_share,
             extra_blocks=extra_blocks
-            + (slots * cdiv(max_len, block_size) if prefix_share else 0))
+            + (slots * cdiv(max_len, block_size) if prefix_share else 0),
+            metrics=metrics)
         self.runtime.copy_block = self._copy_block
         self.cache = init_cache(params, cfg, slots, max_len,
                                 quantized_kv=quantized_kv,
@@ -307,6 +309,11 @@ class ContinuousBatcher(ev.EventStreamMixin):
                          else self.bus.clock() + req.deadline_ms / 1e3)
         if not req._feed:
             req._feed = list(req.prompt)
+        if self.metrics is not None:
+            # Before admission control: rejected-at-submit requests are
+            # telemetry-visible too (submission is not a bus event).
+            self.metrics.request_submitted(req.rid, "lm",
+                                           self.bus.clock())
         if self.cost_model is not None and req.deadline_ms is not None:
             est = self.cost_model.estimate_lm(self, req)
             budget = req.deadline_ms / 1e3
@@ -607,10 +614,34 @@ class ContinuousBatcher(ev.EventStreamMixin):
             self._sweep_infeasible()
         self._maybe_preempt()
         self._admit()
+        self._obs_sched()
         for i, req in enumerate(self.slots):
             if req is not None and self._pending[i]:
                 return self._prefill_quantum(i)
         return self._decode_quantum()
+
+    def _obs_quantum(self, kind: str, t0: float, out, rids: list,
+                     args: dict | None = None) -> None:
+        """Phase telemetry mark (histogram + trace span).  Unlike the
+        cost-model ``_observe_quantum`` this never skips first-trace
+        quanta — phase counts must reconcile exactly with the
+        ``prefill_quanta``/``decode_quanta`` step counters, so first
+        observations simply include compile time."""
+        if self.metrics is None:
+            return
+        jax.block_until_ready(out)
+        self.metrics.phase("lm", kind, t0, self.bus.clock(),
+                           rids=rids, args=args)
+
+    def _obs_sched(self) -> None:
+        if self.metrics is None:
+            return
+        self.metrics.gauge(
+            "engine_queue_depth", "queued requests by engine",
+            labels=("engine",)).set(self.queue_len, engine="lm")
+        self.metrics.gauge(
+            "lm_slots_active", "occupied decode slots").set(
+            sum(1 for s in self.slots if s is not None))
 
     def _observe_quantum(self, key: tuple, shape: tuple,
                          t0: float, out) -> None:
@@ -651,6 +682,8 @@ class ContinuousBatcher(ev.EventStreamMixin):
         if self.cost_model is not None:
             self._observe_quantum(self.cost_model.lm_keys(self)[0],
                                   ("prefill", len(chunk)), t0, nxt)
+        self._obs_quantum("prefill", t0, nxt, [req.rid],
+                          args={"tokens": len(chunk), "slot": i})
         self.bus.emit(ev.Progress, req.rid, phase="prefill",
                       step=req._cursor, total=len(req._feed))
         if not self._pending[i]:        # feed done: next token is out
@@ -681,6 +714,9 @@ class ContinuousBatcher(ev.EventStreamMixin):
         if self.cost_model is not None:
             self._observe_quantum(self.cost_model.lm_keys(self)[1],
                                   ("decode",), t0, nxt)
+        self._obs_quantum("decode", t0, nxt,
+                          [self.slots[i].rid for i in active],
+                          args={"batch": len(active)})
         for i in active:
             req = self.slots[i]
             self.runtime.pos[i] += 1    # the fed token is now cached

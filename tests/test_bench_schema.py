@@ -12,8 +12,9 @@ import pytest
 from benchmarks.common import (BENCH_SCHEMA_VERSION, bench_record,
                                parse_row, validate_record,
                                write_bench_json)
-from benchmarks.compare import (_leading_number, classify,
-                                compare_records)
+from benchmarks.compare import (_leading_number, _override_limit,
+                                classify, compare_records,
+                                load_overrides)
 
 ROWS = [
     "engine_throughput/steady,12.41 req/s,0.97s for 12 reqs "
@@ -168,3 +169,53 @@ class TestCompare:
         cur = _rec(("a", "x/launches,2 launches"))
         _, regressions = compare_records(base, cur, 0.5, 0.05)
         assert len(regressions) == 1   # 0 -> nonzero is inf regression
+
+
+class TestCompareOverrides:
+    """Per-metric threshold overrides (`--config`): globs against
+    ``bench/name`` then the bare name; first match wins; defaults
+    apply when absent or unmatched."""
+
+    def test_load_overrides_validation(self):
+        ovs = load_overrides({"overrides": [
+            {"pattern": "a/*", "threshold": 0.2},
+            {"pattern": "*quanta*", "threshold": 0},
+        ]})
+        assert ovs == [("a/*", 0.2), ("*quanta*", 0.0)]
+        assert load_overrides({}) == []
+        with pytest.raises(ValueError, match="pattern"):
+            load_overrides({"overrides": [{"threshold": 0.1}]})
+        with pytest.raises(ValueError, match=">= 0"):
+            load_overrides({"overrides": [
+                {"pattern": "x", "threshold": -0.1}]})
+
+    def test_override_matching_order(self):
+        ovs = [("a/x*", 0.1), ("x/*", 0.2)]
+        assert _override_limit(ovs, "a", "x/quanta") == 0.1
+        # second pattern matches the bare name, not bench/name
+        assert _override_limit(ovs, "b", "x/quanta") == 0.2
+        assert _override_limit(ovs, "b", "y/quanta") is None
+
+    def test_override_loosens_tight_counter_gate(self):
+        base = _rec(("a", "x/quanta,20 quanta"))
+        cur = _rec(("a", "x/quanta,23 quanta"))   # +15% > default 5%
+        _, regress = compare_records(base, cur, 0.5, 0.05,
+                                     overrides=[("a/x/quanta", 0.2)])
+        assert not regress
+        report, _ = compare_records(base, cur, 0.5, 0.05,
+                                    overrides=[("a/x/quanta", 0.2)])
+        assert any("override" in line for line in report)
+
+    def test_override_tightens_loose_time_gate(self):
+        base = _rec(("a", "x/tput,10.0 req/s"))
+        cur = _rec(("a", "x/tput,9.0 req/s"))     # -10% < default 50%
+        _, regress = compare_records(base, cur, 0.5, 0.05,
+                                     overrides=[("*tput*", 0.0)])
+        assert len(regress) == 1 and "override" in regress[0]
+
+    def test_unmatched_pattern_keeps_defaults(self):
+        base = _rec(("a", "x/quanta,20 quanta"))
+        cur = _rec(("a", "x/quanta,23 quanta"))
+        _, regress = compare_records(base, cur, 0.5, 0.05,
+                                     overrides=[("elsewhere/*", 0.9)])
+        assert len(regress) == 1 and "count threshold" in regress[0]

@@ -1,0 +1,348 @@
+"""Unit tests for the `repro.obs` telemetry layer.
+
+Registry semantics (labels, kinds, buckets, exposition formats),
+trace assembly from synthetic bus events, the Telemetry facade's
+event-derived metrics, the cost-model estimate-vs-actual error
+histogram (and that the error *shrinks* as the EWMA refines), the
+injectable `StepTimer` clock, and `ReplicaHealth` transition
+counters.  End-to-end engine consistency (bit-identical events with
+telemetry attached, span/counter reconciliation) is gated by
+`benchmarks/obs_smoke.py`.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from benchmarks.common import parse_row, validate_record
+from repro.distributed.fault_tolerance import (EVICTED, HEALTHY,
+                                               SUSPECT, ReplicaHealth,
+                                               StepTimer, Watchdog)
+from repro.engine.costmodel import CostModel
+from repro.obs import (DEFAULT_ERROR_BUCKETS, MetricsRegistry,
+                       Telemetry, TraceRecorder)
+
+
+# Synthetic bus events: the recorder/telemetry dispatch on class
+# *names*, so these stand in for repro.engine.events without jax.
+def _ev(name, rid, ts, **fields):
+    cls = dataclasses.make_dataclass(name, ["rid", "ts", "seq",
+                                            *fields])
+    return cls(rid, ts, 0, *fields.values())
+
+
+class _Bus:
+    def __init__(self):
+        self._subs = []
+        self.log = []
+
+    def subscribe(self, fn):
+        self._subs.append(fn)
+        return fn
+
+    def emit(self, ev):
+        self.log.append(ev)
+        for fn in self._subs:
+            fn(ev)
+
+
+class TestRegistry:
+    def test_counter_labels_and_values(self):
+        reg = MetricsRegistry()
+        c = reg.counter("reqs_total", "requests", labels=("engine",))
+        c.inc(engine="lm")
+        c.inc(2, engine="lm")
+        c.inc(engine="diffusion")
+        assert c.value(engine="lm") == 3
+        assert c.value(engine="diffusion") == 1
+        assert c.value(engine="never") == 0
+        assert c.samples() == {("lm",): 3.0, ("diffusion",): 1.0}
+
+    def test_counter_rejects_negative(self):
+        c = MetricsRegistry().counter("c")
+        with pytest.raises(ValueError, match="negative"):
+            c.inc(-1)
+
+    def test_label_mismatch_raises(self):
+        c = MetricsRegistry().counter("c", labels=("a", "b"))
+        with pytest.raises(ValueError, match="labels"):
+            c.inc(a="x")                       # missing b
+        with pytest.raises(ValueError, match="labels"):
+            c.inc(a="x", b="y", z="typo")
+
+    def test_get_or_create_and_kind_conflicts(self):
+        reg = MetricsRegistry()
+        c = reg.counter("m", labels=("a",))
+        assert reg.counter("m", labels=("a",)) is c
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("m", labels=("a",))      # kind conflict
+        with pytest.raises(ValueError, match="already registered"):
+            reg.counter("m", labels=("b",))    # label-set conflict
+
+    def test_gauge_set_inc_dec(self):
+        g = MetricsRegistry().gauge("depth")
+        g.set(5)
+        g.inc()
+        g.dec(2)
+        assert g.value() == 4
+
+    def test_histogram_buckets_and_moments(self):
+        h = MetricsRegistry().histogram("lat", buckets=(0.1, 1.0))
+        for v in (0.05, 0.1, 0.5, 2.0):        # 0.1 lands in le=0.1
+            h.observe(v)
+        assert h.count() == 4
+        assert h.sum() == pytest.approx(2.65)
+        assert h.buckets() == {0.1: 2, 1.0: 3, float("inf"): 4}
+
+    def test_histogram_bad_buckets_rejected(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError, match="strictly increasing"):
+            reg.histogram("h", buckets=(1.0, 1.0))
+        with pytest.raises(ValueError, match="strictly increasing"):
+            reg.histogram("h2", buckets=())
+
+    def test_prometheus_exposition(self):
+        reg = MetricsRegistry()
+        reg.counter("reqs_total", "all requests",
+                    labels=("engine",)).inc(engine="lm")
+        reg.histogram("lat", "latency", buckets=(0.1,)).observe(0.05)
+        text = reg.to_prometheus()
+        assert "# HELP reqs_total all requests" in text
+        assert "# TYPE reqs_total counter" in text
+        assert 'reqs_total{engine="lm"} 1' in text
+        assert 'lat_bucket{le="0.1"} 1' in text
+        assert 'lat_bucket{le="+Inf"} 1' in text
+        assert "lat_sum 0.05" in text and "lat_count 1" in text
+
+    def test_snapshot_matches_bench_schema(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("c", "help, with comma",
+                    labels=("k",)).inc(k="v")
+        reg.histogram("h", buckets=(1.0,)).observe(0.5)
+        reg.histogram("ph", labels=("engine", "phase"),
+                      buckets=(1.0,)).observe(0.5, engine="lm",
+                                              phase="decode")
+        rec = reg.snapshot_record(suite="obs", bench="metrics")
+        validate_record(rec)                   # benchmarks/common.py
+        names = {e["name"] for e in rec["entries"]}
+        assert {'c{k="v"}', "h_count", "h_sum",
+                'ph_count{engine="lm";phase="decode"}'} <= names
+        # multi-label names must stay comma-free (parse_row 2-split)
+        assert all("," not in n for n in names)
+        # The printed-row form parses like any benchmark row.
+        for row in reg.rows():
+            parse_row(row, bench="metrics")
+        path = str(tmp_path / "snap.json")
+        reg.write_snapshot(path)
+        with open(path) as f:
+            validate_record(json.load(f))
+
+
+class TestTraceRecorder:
+    def test_lifecycle_spans_from_bus_events(self):
+        tr = TraceRecorder()
+        bus = _Bus()
+        tr.attach(bus)
+        tr.note_submit(7, 0.0, kind="lm")
+        bus.emit(_ev("Admitted", 7, 0.02, slot=1))
+        bus.emit(_ev("TokenDelta", 7, 0.03, token=5, pos=0))
+        bus.emit(_ev("Finished", 7, 0.04, result=None))
+        root, children = tr.request_tree(7)
+        assert root.start == 0.0 and root.end == 0.04
+        assert root.args["outcome"] == "finished"
+        assert [s.name for s in children] == ["queue_wait"]
+        assert children[0].end == 0.02 and children[0].cat == "lm"
+        assert [m.name for m in tr.markers] == ["token"]
+        assert tr.outcome(7) == "finished" and tr.rids() == [7]
+
+    def test_unsubmitted_rid_and_rejection(self):
+        tr = TraceRecorder()
+        tr.on_event(_ev("Rejected", 3, 0.5, reason="infeasible",
+                        estimated_s=1.0, budget_s=0.1))
+        root, children = tr.request_tree(3)
+        assert root.args["outcome"] == "rejected" and not children
+        assert root.start == root.end == 0.5   # no submit mark: first ev
+
+    def test_phase_emits_engine_and_rid_spans(self):
+        tr = TraceRecorder()
+        tr.note_submit(1, 0.0)
+        tr.phase("lm", "decode", 0.1, 0.2, rids=(1, 2),
+                 args={"batch": 2})
+        eng = [s for s in tr.spans if s.rid is None]
+        assert len(eng) == 1 and eng[0].args["rids"] == [1, 2]
+        assert [s.name for s in tr.request_spans(1)] == ["decode"]
+        assert [s.name for s in tr.request_spans(2)] == ["decode"]
+        # phase marks upgrade the rid's engine kind for thread naming
+        assert tr._req[1]["kind"] == "lm"
+
+    def test_chrome_export_structure(self, tmp_path):
+        tr = TraceRecorder()
+        tr.note_submit(0, 0.0, kind="lm")
+        tr.on_event(_ev("Admitted", 0, 0.01, slot=0))
+        tr.phase("lm", "decode", 0.01, 0.02, rids=(0,))
+        tr.on_event(_ev("Finished", 0, 0.02, result=None))
+        path = str(tmp_path / "trace.json")
+        tr.export(path)
+        with open(path) as f:
+            doc = json.load(f)
+        evs = doc["traceEvents"]
+        phs = [e["ph"] for e in evs]
+        assert phs.count("X") == len(tr.spans)
+        assert "M" in phs                      # thread_name metadata
+        xs = [e for e in evs if e["ph"] == "X"]
+        assert all(e["ts"] >= 0 and e["dur"] >= 0 and "pid" in e
+                   for e in xs)
+        # engine-track span rides a synthetic tid, not a rid row
+        eng_x = [e for e in xs if e["name"] == "decode"
+                 and e["tid"] >= 1_000_000]
+        assert len(eng_x) == 1
+
+
+class TestTelemetry:
+    def test_event_derived_metrics(self):
+        tele = Telemetry(tracer=TraceRecorder())
+        bus = _Bus()
+        tele.attach(bus)
+        tele.request_submitted(0, "lm", 0.0)
+        bus.emit(_ev("Admitted", 0, 0.05, slot=0))
+        bus.emit(_ev("TokenDelta", 0, 0.06, token=1, pos=0))
+        bus.emit(_ev("Preempted", 0, 0.07, reason="budget"))
+        bus.emit(_ev("Finished", 0, 0.08, result=None))
+        reg = tele.registry
+        assert reg.get("requests_submitted_total").value(engine="lm") \
+            == 1
+        assert reg.get("events_total").value(type="TokenDelta") == 1
+        assert reg.get("tokens_emitted_total").value() == 1
+        assert reg.get("preemptions_total").value() == 1
+        assert reg.get("requests_terminal_total").value(
+            engine="lm", outcome="finished") == 1
+        qw = reg.get("queue_wait_seconds")
+        assert qw.count(engine="lm") == 1
+        assert qw.sum(engine="lm") == pytest.approx(0.05)
+        # one subscription also fed the tracer
+        root, _ = tele.tracer.request_tree(0)
+        assert root is not None
+
+    def test_unsubmitted_terminal_counts_as_unknown(self):
+        tele = Telemetry()
+        bus = _Bus()
+        tele.attach(bus)
+        bus.emit(_ev("Cancelled", 9, 1.0))
+        assert tele.registry.get("requests_terminal_total").value(
+            engine="unknown", outcome="cancelled") == 1
+
+    def test_phase_feeds_histogram_and_tracer(self):
+        tele = Telemetry(tracer=TraceRecorder())
+        tele.phase("diffusion", "unet_step", 1.0, 1.25, rids=(4,),
+                   args={"step": 1})
+        h = tele.registry.get("phase_seconds")
+        assert h.count(engine="diffusion", phase="unet_step") == 1
+        assert h.sum(engine="diffusion",
+                     phase="unet_step") == pytest.approx(0.25)
+        assert [s.name for s in tele.tracer.request_spans(4)] == \
+            ["unet_step"]
+
+
+class TestCostModelErrorHistogram:
+    """Satellite: estimate-vs-actual relative error is recorded per
+    phase key and *shrinks* as the EWMA refines a bad seed."""
+
+    KEY = ("lm", "m", "decode", False)
+
+    def _errors(self, seed, actuals, alpha=0.3):
+        """Relative errors the histogram should have observed."""
+        cur, errs = seed, []
+        for a in actuals:
+            errs.append(abs(a - cur) / cur)
+            cur = (1 - alpha) * cur + alpha * a
+        return errs
+
+    def test_error_recorded_and_shrinks(self):
+        reg = MetricsRegistry()                # bare registry sink
+        cm = CostModel()
+        cm.metrics = reg
+        cm.seed(self.KEY, 0.100)               # 5x over-estimate
+        actuals = [0.020] * 20
+        for a in actuals:
+            cm.observe(self.KEY, a)
+        h = reg.get("cost_model_rel_error")
+        assert h.count(engine="lm", model="m", phase="decode") == 20
+        assert h.bucket_bounds == DEFAULT_ERROR_BUCKETS
+        errs = self._errors(0.100, actuals)
+        assert h.sum(engine="lm", model="m",
+                     phase="decode") == pytest.approx(sum(errs))
+        assert errs[0] > 0.5 and errs[-1] < 0.01   # EWMA converged
+        cum = h.buckets(engine="lm", model="m", phase="decode")
+        assert cum[0.05] == sum(e <= 0.05 for e in errs) >= 7
+        assert cum[float("inf")] - cum[0.5] >= 1   # the bad first ones
+
+    def test_first_observation_has_no_estimate(self):
+        reg = MetricsRegistry()
+        cm = CostModel()
+        cm.metrics = reg
+        cm.observe(("lm", "m", "prefill", True), 0.01)  # no prior
+        assert reg.get("cost_model_rel_error") is None
+        cm.observe(("lm", "m", "prefill", True), 0.01)
+        h = reg.get("cost_model_rel_error")
+        assert h.count(engine="lm", model="m", phase="prefill") == 1
+
+    def test_metrics_none_is_default(self):
+        cm = CostModel()
+        cm.observe(("lm", "m", "decode", False), 0.01)
+        cm.observe(("lm", "m", "decode", False), 0.02)  # no sink: no-op
+
+
+class TestStepTimer:
+    def test_injectable_clock(self):
+        ticks = iter([10.0, 10.5, 20.0, 20.25])
+        wd = Watchdog(threshold=100.0)
+        timer = StepTimer(wd, clock=lambda: next(ticks))
+        with timer:
+            pass
+        with timer:
+            pass
+        assert wd.ewma == pytest.approx(0.5 * 0.8 + 0.25 * 0.2)
+        assert timer._step == 2
+
+    def test_default_clock_is_wall(self):
+        wd = Watchdog()
+        with StepTimer(wd):
+            pass
+        assert wd.ewma is not None and wd.ewma >= 0
+
+
+class TestReplicaHealthTransitions:
+    def _health(self, reg):
+        return ReplicaHealth(watchdog=Watchdog(threshold=3.0),
+                             suspect_limit=2, name="r1", metrics=reg)
+
+    def test_suspect_recover_and_evict_counted(self):
+        reg = MetricsRegistry()
+        h = self._health(reg)
+        h.observe_step(0, 1.0)                 # seeds EWMA, clean
+        h.observe_step(1, 10.0)                # straggler -> SUSPECT
+        h.observe_step(2, 1.0)                 # clean -> HEALTHY
+        h.observe_step(3, 10.0)                # SUSPECT again
+        h.observe_step(4, 10.0)                # 2nd consecutive -> EVICTED
+        assert h.state == EVICTED and not h.live
+        c = reg.get("replica_health_transitions_total")
+        assert c.value(replica="r1", src=HEALTHY, dst=SUSPECT) == 2
+        assert c.value(replica="r1", src=SUSPECT, dst=HEALTHY) == 1
+        assert c.value(replica="r1", src=SUSPECT, dst=EVICTED) == 1
+        # terminal: further steps change nothing
+        h.observe_step(5, 1.0)
+        assert sum(c.samples().values()) == 4
+
+    def test_same_state_not_counted(self):
+        reg = MetricsRegistry()
+        h = self._health(reg)
+        h.observe_step(0, 1.0)
+        h.observe_step(1, 1.0)                 # stays HEALTHY
+        assert reg.get("replica_health_transitions_total") is None
+
+    def test_metrics_none_still_works(self):
+        h = ReplicaHealth(watchdog=Watchdog(threshold=3.0),
+                          suspect_limit=1)
+        h.observe_step(0, 1.0)
+        h.observe_step(1, 10.0)
+        assert h.state == EVICTED              # limit 1: straight out
