@@ -19,7 +19,24 @@ reports
   continue-on-error): fused admission must use strictly fewer
   per-token launches than the scan, and the two paths must agree on
   >= 90% of emitted tokens (bf16-ulp numeric divergence may flip a
-  rare near-tie argmax; wholesale divergence means a kernel bug).
+  rare near-tie argmax; wholesale divergence means a kernel bug),
+* the same admission comparison on Q8_0 KV pools
+  (``quantized_kv=True``): the fused-q8 prefill sibling must beat the
+  dequant-reference scan on launches and pass the same >= 90% token
+  agreement gate — the fused kernel requantizes with the exact
+  arithmetic of the scan's ``_quantize_kv`` and reads the pool at the
+  scan's bf16 dequant precision, so the pools are bit-identical and
+  only accumulation-order near-tie argmax flips remain
+  (pool/token identity is gated bit-exactly in
+  ``tests/test_flash_prefill.py``),
+* roofline memory terms for the quantized hot path (packed Q8_0
+  weight + KV bytes through ``fused_dequant_memory_s``) against the
+  bf16 baseline, so ``BENCH_serving.json`` records the before/after
+  HBM story alongside the launch counts.
+
+Each admission arm asserts ``cb.fused_prefill`` matches what it asked
+for, so the launch-count gate cannot pass vacuously by both arms
+silently running the scan.
 
 Run:  PYTHONPATH=src python benchmarks/serving_cache.py \
           [--slots 4] [--requests 16] [--prompt-len 24] [--gen 16] \
@@ -107,10 +124,17 @@ def run(slots: int = 4, requests: int = 16, prompt_len: int = 24,
         "truncated outputs: paged sizing is wrong"
 
     # ---- fused vs scan admission on an identical workload ----
-    adm = {}
-    for fused in (True, False):
+    def admission_arm(fused: bool, quantized_kv: bool):
         cb2 = ContinuousBatcher(params, cfg, slots=slots, max_len=max_len,
-                                block_size=block_size, fused_prefill=fused)
+                                block_size=block_size, fused_prefill=fused,
+                                quantized_kv=quantized_kv)
+        # Non-vacuity: the arm must actually take the path it names —
+        # if init silently downgraded fused admission, the launch-count
+        # gate below would compare scan against scan and prove nothing.
+        assert cb2.fused_prefill is fused, (
+            f"admission arm asked for fused={fused} "
+            f"(quantized_kv={quantized_kv}) but got "
+            f"fused_prefill={cb2.fused_prefill}")
         for rid, p in enumerate(prompts):   # warm-up wave compiles
             cb2.submit(Request(rid=rid, prompt=list(p), max_new=gen))
         cb2.run()
@@ -120,9 +144,11 @@ def run(slots: int = 4, requests: int = 16, prompt_len: int = 24,
                                max_new=gen))
         t0 = time.time()
         out = cb2.run()
-        adm[fused] = (cb2.prefill_launches - l0, time.time() - t0,
-                      {r.rid: r.out for r in out[-requests:]})
-    (fl, ft, fo), (sl, st, so) = adm[True], adm[False]
+        return (cb2.prefill_launches - l0, time.time() - t0,
+                {r.rid: r.out for r in out[-requests:]}, cb2)
+
+    (fl, ft, fo, _), (sl, st, so, _) = (admission_arm(True, False),
+                                        admission_arm(False, False))
     rows.append(
         f"serving_cache/admission,fused {fl} launches in {ft:.2f}s,"
         f"scan {sl} launches in {st:.2f}s")
@@ -141,6 +167,52 @@ def run(slots: int = 4, requests: int = 16, prompt_len: int = 24,
     assert agree >= 0.9, (
         f"fused and scan admission agree on only {agree:.0%} of tokens "
         f"— fused prefill has diverged from the decode-step oracle")
+
+    # ---- quantized-KV admission: fused-q8 vs dequant-reference scan ----
+    (qfl, qft, qfo, qcb), (qsl, qst, qso, _) = (
+        admission_arm(True, True), admission_arm(False, True))
+    rows.append(
+        f"serving_cache/admission_q8,fused {qfl} launches in {qft:.2f}s,"
+        f"scan {qsl} launches in {qst:.2f}s")
+    assert qfl < qsl, (
+        f"fused-q8 admission used {qfl} per-token kernel launches, "
+        f"dequant-reference scan used {qsl}: the fused Q8_0 path must "
+        f"be strictly cheaper")
+    # The fused kernel requantizes each chunk with quantize_q8_0 — the
+    # same function the scan path's _quantize_kv applies — and reads
+    # the pool at the scan's bf16 dequant precision, so the pools are
+    # bit-identical between the paths (gated bit-exactly in
+    # tests/test_flash_prefill.py).  Token streams are gated like the
+    # fp arm: chunk-at-once vs per-token programs accumulate in a
+    # different order, so a rare near-tie greedy argmax may flip;
+    # wholesale divergence means a requantization bug.
+    qtoks = [(a, b) for rid in qfo for a, b in zip(qfo[rid], qso[rid])]
+    qagree = sum(a == b for a, b in qtoks) / max(1, len(qtoks))
+    assert qagree >= 0.9, (
+        f"fused-q8 and dequant-reference scan admission agree on only "
+        f"{qagree:.0%} of tokens — in-kernel requantization has "
+        f"diverged from the scan oracle")
+
+    # ---- roofline memory terms: quantized hot path vs bf16 baseline --
+    from repro.core.policy import get_policy
+    from repro.core.qlinear import param_bytes, quantize_params
+    from repro.profiling.roofline import fused_dequant_memory_s
+    dense_wb = param_bytes(params)
+    packed_wb = param_bytes(quantize_params(params, get_policy("q8_0")))
+    q8_kvb = cache_bytes(qcb)       # int8 pools + f16 scale pools
+    base_kvb = cache_bytes(cb)      # the bf16 pools measured above
+    t_bf16 = fused_dequant_memory_s(
+        packed_weight_bytes_per_chip=dense_wb, kv_bytes_per_chip=base_kvb)
+    t_q8 = fused_dequant_memory_s(
+        packed_weight_bytes_per_chip=packed_wb, kv_bytes_per_chip=q8_kvb)
+    rows.append(
+        f"serving_cache/roofline_q8,memory term {t_q8 * 1e6:.2f} us vs "
+        f"bf16 {t_bf16 * 1e6:.2f} us,weights {packed_wb / 1e3:.1f} KB "
+        f"packed vs {dense_wb / 1e3:.1f} KB bf16; KV {q8_kvb / 1e3:.1f} "
+        f"KB q8 vs {base_kvb / 1e3:.1f} KB bf16")
+    assert t_q8 < t_bf16, (
+        "quantized hot path must strictly lower the streaming memory "
+        "term (packed weights + Q8_0 KV pools)")
     if verbose:
         for r in rows:
             print(r)

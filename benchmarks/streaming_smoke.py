@@ -235,10 +235,11 @@ def smoke_admission_feasibility() -> list[str]:
     sd_params = init_pipeline(jax.random.PRNGKey(0), TINY_SD)
     toks = [1] * TINY_SD.text_len
     dcm = CostModel()
-    dcm.seed(("diff", TINY_SD.name, "clip", False, 1), 0.010)
-    dcm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1),
+    dcm.seed(("diff", TINY_SD.name, "clip", False, 1, None), 0.010)
+    dcm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1,
+              None),
              0.020)
-    dcm.seed(("diff", TINY_SD.name, "vae", 8, 1), 0.010)
+    dcm.seed(("diff", TINY_SD.name, "vae", 8, 1, None), 0.010)
     eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
                           cost_model=dcm)
     # 4 ddim steps pad to a pow2 scan of 4: 10 + 4x20 + 10 = 100 ms.

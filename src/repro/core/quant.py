@@ -19,6 +19,19 @@ by the in-kernel ``ql|qh<<2`` unpack in ``repro.kernels.q3k_matmul``.
 
 All functions are pure-jnp and jittable; leading (row) dimensions are
 arbitrary, the quantized axis is always the last one.
+
+Edge cases (regression-tested in ``tests/test_quant.py``):
+
+* fp16 block scales are saturated into ``[F16_TINY, F16_MAX]`` for
+  non-zero blocks, so huge blocks cannot dequantize to NaN (0 * inf)
+  and tiny-but-representable blocks are not silently flushed to zero.
+* int8 codes are clipped to the symmetric ``[-127, 127]`` (Q8_0) /
+  ``[0, 15]`` (Q4_0) before the narrowing cast — fp16 rounding of the
+  scale can otherwise overshoot to -128 / 16 and wrap.
+* Q8_0/Q4_0 accept ragged last dimensions: the tail block is zero
+  padded for storage and the logical length is carried on the tensor
+  (``.shape`` stays logical, ``dequantize_*`` slices the pad off).
+  K-quants (Q3_K/Q8_K) keep GGML's hard divisibility requirement.
 """
 from __future__ import annotations
 
@@ -51,24 +64,66 @@ def _check_last_divisible(x: jax.Array, block: int) -> None:
             f"quantized axis {x.shape[-1]} not divisible by block {block}")
 
 
+# fp16 range guards for block scales.  GGML stores ``d`` as fp16; a naive
+# ``(amax / q_max).astype(float16)`` overflows to inf for amax beyond
+# ~127 * 65504 (dequant then yields 0 * inf = NaN) and flushes to zero
+# below the smallest subnormal (silently zeroing a representable block).
+F16_MAX = 65504.0    # largest finite float16
+F16_TINY = 2.0 ** -24  # smallest positive (subnormal) float16
+
+
+def _f16_scale(amax: jax.Array, q_max: float) -> jax.Array:
+    """Block scale ``amax / q_max`` saturated into fp16's positive range.
+
+    Zero blocks keep a scale of exactly 0 (and quantize to all-zero via
+    the ``inv`` guard in the callers); non-zero blocks are clamped into
+    ``[F16_TINY, F16_MAX]`` so the fp16 cast can neither overflow to inf
+    nor flush a representable scale to zero.
+    """
+    d = amax / q_max
+    d = jnp.where(amax > 0, jnp.clip(d, F16_TINY, F16_MAX), 0.0)
+    return d.astype(jnp.float16)
+
+
+def _pad_tail(x: jax.Array, block: int) -> tuple[jax.Array, int | None]:
+    """Zero-pad the last axis up to a block multiple.
+
+    Returns ``(padded, logical)`` where ``logical`` is the original last
+    dimension when padding was needed, else ``None``.  Padding zeros are
+    inert: they never raise a block's amax and dequantize back to 0.
+    """
+    pad = -x.shape[-1] % block
+    if not pad:
+        return x, None
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths), x.shape[-1]
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Q8_0Tensor:
-    """Q8_0: int8 quants + fp16 per-32 scales. Logical shape = qs.shape."""
-    qs: jax.Array  # int8   (..., K)
-    d: jax.Array   # f16    (..., K // 32)
+    """Q8_0: int8 quants + fp16 per-32 scales.
+
+    ``logical`` (static aux) records the pre-padding last dimension for
+    tensors whose quantized axis was not a block multiple; ``None`` means
+    the stored and logical lengths agree.  ``shape`` always reports the
+    logical shape; ``nbytes`` counts the stored (padded) payload.
+    """
+    qs: jax.Array  # int8   (..., Kp)  Kp = logical rounded up to 32
+    d: jax.Array   # f16    (..., Kp // 32)
+    logical: int | None = None
 
     @property
     def shape(self):
-        return self.qs.shape
+        k = self.logical if self.logical is not None else self.qs.shape[-1]
+        return self.qs.shape[:-1] + (k,)
 
     def tree_flatten(self):
-        return (self.qs, self.d), None
+        return (self.qs, self.d), self.logical
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(*children, logical=aux)
 
     def nbytes(self) -> int:
         return self.qs.size + 2 * self.d.size
@@ -131,19 +186,24 @@ class Q8KTensor:
 # ---------------------------------------------------------------- Q8_0
 
 def quantize_q8_0(x: jax.Array) -> Q8_0Tensor:
-    _check_last_divisible(x, QK8_0)
-    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], -1, QK8_0)
+    xp, logical = _pad_tail(x, QK8_0)
+    xb = xp.astype(jnp.float32).reshape(*xp.shape[:-1], -1, QK8_0)
     amax = jnp.max(jnp.abs(xb), axis=-1)
-    d = (amax / 127.0).astype(jnp.float16)
+    d = _f16_scale(amax, 127.0)
     inv = jnp.where(d > 0, 1.0 / d.astype(jnp.float32), 0.0)
+    # clip to the symmetric [-127, 127]: fp16 rounding of ``d`` can push
+    # ``round(x * inv)`` to -128, which must not wrap on the int8 cast.
     q = jnp.clip(jnp.round(xb * inv[..., None]), -127, 127).astype(jnp.int8)
-    return Q8_0Tensor(qs=q.reshape(x.shape), d=d)
+    return Q8_0Tensor(qs=q.reshape(xp.shape), d=d, logical=logical)
 
 
 def dequantize_q8_0(t: Q8_0Tensor, dtype=jnp.float32) -> jax.Array:
     qb = t.qs.reshape(*t.qs.shape[:-1], -1, QK8_0).astype(jnp.float32)
     w = qb * t.d.astype(jnp.float32)[..., None]
-    return w.reshape(t.qs.shape).astype(dtype)
+    w = w.reshape(t.qs.shape)
+    if t.logical is not None:
+        w = w[..., :t.logical]
+    return w.astype(dtype)
 
 
 # ---------------------------------------------------------------- Q4_0
@@ -157,20 +217,21 @@ class Q4_0Tensor:
     format beyond the paper's two — 4.5 bits/weight, the most common
     llama.cpp deployment point.
     """
-    qs: jax.Array  # uint8 (..., K // 2) packed low-nibble-first
-    d: jax.Array   # f16   (..., K // 32)
+    qs: jax.Array  # uint8 (..., Kp // 2) packed low-nibble-first
+    d: jax.Array   # f16   (..., Kp // 32)
+    logical: int | None = None  # pre-padding K when ragged, else None
 
     @property
     def shape(self):
-        return self.qs.shape[:-1] + (self.qs.shape[-1] * 2,)
+        k = self.logical if self.logical is not None else self.qs.shape[-1] * 2
+        return self.qs.shape[:-1] + (k,)
 
     def tree_flatten(self):
-        return (self.qs, self.d), None
+        return (self.qs, self.d), self.logical
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(*children, logical=aux)
 
     def nbytes(self) -> int:
         return self.qs.size + 2 * self.d.size
@@ -193,21 +254,27 @@ def unpack_q4(qs: jax.Array) -> jax.Array:
 
 
 def quantize_q4_0(x: jax.Array) -> Q4_0Tensor:
-    _check_last_divisible(x, QK8_0)
-    xb = x.astype(jnp.float32).reshape(*x.shape[:-1], -1, QK8_0)
+    xp, logical = _pad_tail(x, QK8_0)
+    xb = xp.astype(jnp.float32).reshape(*xp.shape[:-1], -1, QK8_0)
     amax = jnp.max(jnp.abs(xb), axis=-1)
-    d = (amax / 7.0).astype(jnp.float16)  # q-8 in [-8,7]; use +/-7 sym
+    d = _f16_scale(amax, 7.0)  # q-8 in [-8,7]; use +/-7 sym
     inv = jnp.where(d > 0, 1.0 / d.astype(jnp.float32), 0.0)
+    # clip keeps the code in [0, 15]: without it, fp16 rounding of ``d``
+    # can drive ``round(x * inv)`` to -8 (code -8+8 = 0 is fine) or +8
+    # (code 16 would wrap into the neighbouring nibble when packed).
     q = jnp.clip(jnp.round(xb * inv[..., None]) + 8, 0, 15)
-    qs = pack_q4(q.reshape(*x.shape[:-1], -1).astype(jnp.uint8))
-    return Q4_0Tensor(qs=qs, d=d)
+    qs = pack_q4(q.reshape(*xp.shape[:-1], -1).astype(jnp.uint8))
+    return Q4_0Tensor(qs=qs, d=d, logical=logical)
 
 
 def dequantize_q4_0(t: Q4_0Tensor, dtype=jnp.float32) -> jax.Array:
     q = unpack_q4(t.qs).astype(jnp.float32)
     qb = q.reshape(*q.shape[:-1], -1, QK8_0)
     w = qb * t.d.astype(jnp.float32)[..., None]
-    return w.reshape(q.shape).astype(dtype)
+    w = w.reshape(q.shape)
+    if t.logical is not None:
+        w = w[..., :t.logical]
+    return w.astype(dtype)
 
 
 # ---------------------------------------------------------------- Q8_K

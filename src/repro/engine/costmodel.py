@@ -11,19 +11,24 @@ answer "how long will this request take?" *before* running it.
 Phase keys
 ----------
 
-Diffusion (per jitted program; ``b`` is the engine's batch bucket)::
+Diffusion (per jitted program; ``b`` is the engine's batch bucket,
+``wq`` the engine's ``weight_quant`` policy name or ``None``)::
 
-    ("diff", model, "clip",      use_cfg, b)            one prompt encode
-    ("diff", model, "unet_step", sampler, hw, use_cfg, b)  one denoise step
-    ("diff", model, "vae",       hw, b)                 finalize + decode
-    ("diff", model, "fused", sampler, sbucket, hw, use_cfg, b)
+    ("diff", model, "clip",      use_cfg, b, wq)        one prompt encode
+    ("diff", model, "unet_step", sampler, hw, use_cfg, b, wq)
+                                                        one denoise step
+    ("diff", model, "vae",       hw, b, wq)             finalize + decode
+    ("diff", model, "fused", sampler, sbucket, hw, use_cfg, b, wq)
                                 whole fused-scan program (clip + sbucket
                                 padded steps + vae in one launch)
 
-LM (per scheduling quantum)::
+LM (per scheduling quantum; ``fused`` is the batcher's *executed*
+prefill path — both it and the dispatch in ``lm_prefill_chunk`` derive
+from ``models.transformer.prefill_path``, so an estimate can never be
+keyed on a path the quantum doesn't take)::
 
-    ("lm", model, "prefill", fused, quantized_kv)       one prompt chunk
-    ("lm", model, "decode",  quantized_kv)              one batched token
+    ("lm", model, "prefill", fused, quantized_kv, wq)   one prompt chunk
+    ("lm", model, "decode",  quantized_kv, wq)          one batched token
 
 Seeding and refinement
 ----------------------
@@ -185,13 +190,14 @@ class CostModel:
         steps = get_sampler(req.sampler).fixed_steps or req.steps
         b = eng.max_batch
         m = cfg.name
+        wq = getattr(eng, "weight_quant", None)
         return dict(
             steps=steps,
             fused=("diff", m, "fused", req.sampler, steps_bucket(steps),
-                   hw, ucfg, b),
-            clip=("diff", m, "clip", ucfg, b),
-            unet=("diff", m, "unet_step", req.sampler, hw, ucfg, b),
-            vae=("diff", m, "vae", hw, b),
+                   hw, ucfg, b, wq),
+            clip=("diff", m, "clip", ucfg, b, wq),
+            unet=("diff", m, "unet_step", req.sampler, hw, ucfg, b, wq),
+            vae=("diff", m, "vae", hw, b, wq),
         )
 
     def _co_batch(self, eng: Any, req: GenerateRequest) -> int:
@@ -252,10 +258,17 @@ class CostModel:
 
     # ------------------------------------------------------ LM phases
     def lm_keys(self, cb: Any) -> tuple[tuple, tuple]:
-        """(prefill key, decode key) for a ``ContinuousBatcher``."""
+        """(prefill key, decode key) for a ``ContinuousBatcher``.
+
+        ``cb.fused_prefill`` is the executed path (the batcher derives
+        it from ``prefill_path``, the same predicate that dispatches
+        inside ``lm_prefill_chunk``), so calibration seeds the path a
+        production quantum will actually take."""
         m = cb.cfg.name
-        return (("lm", m, "prefill", cb.fused_prefill, cb.quantized_kv),
-                ("lm", m, "decode", cb.quantized_kv))
+        wq = getattr(cb, "weight_quant", None)
+        return (("lm", m, "prefill", cb.fused_prefill, cb.quantized_kv,
+                 wq),
+                ("lm", m, "decode", cb.quantized_kv, wq))
 
     def estimate_lm(self, cb: Any, req: Any) -> float | None:
         """Whole-request (or, after a preemption, remaining) service

@@ -65,7 +65,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import OffloadPolicy
+from repro.core.policy import OffloadPolicy, get_policy
 from repro.core.qlinear import quantize_params
 from repro.diffusion import schedule as sched_mod
 from repro.engine import events as ev
@@ -249,7 +249,14 @@ class DiffusionEngine(ev.EventStreamMixin):
     def __init__(self, params: dict, cfg: SDConfig, *, max_batch: int = 1,
                  bus: ev.EventBus | None = None,
                  clock: Callable[[], float] = time.monotonic,
-                 cost_model=None, metrics=None):
+                 cost_model=None, metrics=None,
+                 weight_quant: str | None = None):
+        if weight_quant is not None:
+            # Opt-in quantized weights (GGML model-file semantics):
+            # CLIP/UNet/VAE linears move to blocked storage and route
+            # through core.qlinear onto the quantized matmul kernels.
+            params = quantize_pipeline(params, get_policy(weight_quant))
+        self.weight_quant = weight_quant
         self.params = params
         self.cfg = cfg
         self.max_batch = max_batch
@@ -585,10 +592,11 @@ class DiffusionEngine(ev.EventStreamMixin):
         t0, tr0 = self.bus.clock(), self.traces
         imgs = fn(self.params, toks, negs, scales, noises, plan)
         self._observe(("diff", self.cfg.name, "fused", sampler_name,
-                       sbucket, hw, use_cfg, self.max_batch), t0, tr0,
-                      imgs)
+                       sbucket, hw, use_cfg, self.max_batch,
+                       self.weight_quant), t0, tr0, imgs)
         self._obs_phase("fused", t0, imgs, [r.rid for r in reqs],
-                        args={"steps": steps, "batch": len(reqs)})
+                        args={"steps": steps, "batch": len(reqs),
+                              "weight_quant": self.weight_quant})
         for i, r in enumerate(reqs):
             res = GenerateResult(
                 rid=r.rid, image=imgs[i], sampler=sampler_name,
@@ -606,9 +614,10 @@ class DiffusionEngine(ev.EventStreamMixin):
         t0, tr0 = self.bus.clock(), self.traces
         ctx, ctx_u = enc(self.params, toks, negs)
         self._observe(("diff", self.cfg.name, "clip", use_cfg,
-                       self.max_batch), t0, tr0, ctx)
+                       self.max_batch, self.weight_quant), t0, tr0, ctx)
         self._obs_phase("clip", t0, ctx, [r.rid for r in reqs],
-                        args={"batch": len(reqs)})
+                        args={"batch": len(reqs),
+                              "weight_quant": self.weight_quant})
         sampler = samplers_mod.get_sampler(sampler_name)
         # Unpadded plan: the 1-step segment program serves any step
         # count, so segmented requests never pay pow2 padding steps.
@@ -635,10 +644,12 @@ class DiffusionEngine(ev.EventStreamMixin):
         st["x"] = fn(self.params, st["ctx"], st["ctx_u"], st["g"],
                      st["x"], step_slice)
         self._observe(("diff", self.cfg.name, "unet_step", sampler_name,
-                       hw, use_cfg, self.max_batch), t0, tr0, st["x"])
+                       hw, use_cfg, self.max_batch, self.weight_quant),
+                      t0, tr0, st["x"])
         self._obs_phase("unet_step", t0, st["x"],
                         [r.rid for _row, r in live],
-                        args={"step": i + 1, "total": steps})
+                        args={"step": i + 1, "total": steps,
+                              "weight_quant": self.weight_quant})
         st["i"] = i + 1
         sampler = samplers_mod.get_sampler(sampler_name)
         for row, r in live:
@@ -656,9 +667,11 @@ class DiffusionEngine(ev.EventStreamMixin):
             t0, tr0 = self.bus.clock(), self.traces
             imgs = dec(self.params, st["x"])
             self._observe(("diff", self.cfg.name, "vae", hw,
-                           self.max_batch), t0, tr0, imgs)
+                           self.max_batch, self.weight_quant), t0, tr0,
+                          imgs)
             self._obs_phase("vae", t0, imgs,
-                            [r.rid for _row, r in live])
+                            [r.rid for _row, r in live],
+                            args={"weight_quant": self.weight_quant})
             for row, r in live:
                 res = GenerateResult(
                     rid=r.rid, image=imgs[row], sampler=sampler_name,

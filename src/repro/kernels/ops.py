@@ -62,14 +62,16 @@ def quantized_matmul(x: jax.Array, w, *, force: Force = "auto",
     use_pallas, interp = _use_pallas(force)
     if isinstance(w, Q8_0Tensor):
         n = w.qs.shape[0]
-        if use_pallas:
+        # Tail-padded (ragged) tensors go through the ref path: the
+        # Pallas kernels expect x and w to share a 32-aligned K.
+        if use_pallas and w.logical is None:
             y = _q8.q8_matmul(xf, w.qs, w.d.astype(jnp.float32),
                               interpret=interp)
         else:
             y = ref.q8_matmul_ref(xf, w)
     elif isinstance(w, Q4_0Tensor):
         n = w.qs.shape[0]
-        if use_pallas:
+        if use_pallas and w.logical is None:
             y = _q4.q4_matmul(xf, w.qs, w.d.astype(jnp.float32),
                               interpret=interp)
         else:
@@ -182,16 +184,31 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def paged_prefill_attention(q, k_new, v_new, k_pool, v_pool, block_table,
                             pos0, *, window: int | None = None,
                             scale: float | None = None,
-                            force: Force = "auto"):
+                            force: Force = "auto",
+                            k_scale_pool=None, v_scale_pool=None):
     """Fused paged prefill of one chunk for one slot (see
     ``kernels.flash_prefill``): writes the chunk's KV into its
     destination blocks and attends all T queries in one program.
 
-    q: (T, Hkv, G, hd); k_new/v_new: (T, Hkv, hd); pools:
+    q: (T, Hkv, G, hd); k_new/v_new: (T, Hkv, hd) unquantized; pools:
     (NB, Hkv, bs, hd); block_table: (MB,) int32; pos0: scalar int32.
     Returns ``(out, k_pool', v_pool')``.
+
+    With ``k_scale_pool``/``v_scale_pool`` given, the pools are Q8_0
+    (int8 quants + fp16 per-32 scales): dispatches the quantized sibling
+    kernel, which requantizes the chunk in-kernel, and returns the
+    5-tuple ``(out, kq', vq', ks', vs')``.
     """
     use_pallas, interp = _use_pallas(force)
+    if k_scale_pool is not None:
+        if use_pallas:
+            return _fp.flash_prefill_paged_q8(
+                q, k_new, v_new, k_pool, v_pool, k_scale_pool,
+                v_scale_pool, block_table, pos0, scale=scale,
+                window=window, interpret=interp)
+        return _fp.flash_prefill_paged_q8_ref(
+            q, k_new, v_new, k_pool, v_pool, k_scale_pool, v_scale_pool,
+            block_table, pos0, scale=scale, window=window)
     if use_pallas:
         return _fp.flash_prefill_paged(q, k_new, v_new, k_pool, v_pool,
                                        block_table, pos0, scale=scale,

@@ -171,14 +171,15 @@ def attention_prefill_paged(p: dict, cfg: ModelConfig, x: jax.Array,
     One ``ops.paged_prefill_attention`` program per layer replaces T
     per-token decode scatter/gather rounds: the chunk's KV is written
     into its destination blocks in-kernel and every chunk query attends
-    causally to history + the chunk itself.  Quantized KV keeps the
-    decode-step scan path (``lm_prefill_chunk`` falls back).
+    causally to history + the chunk itself.  Quantized (Q8_0) pools take
+    the fused Q8 sibling kernel: the chunk's KV is requantized in-kernel
+    and all four pools (quants + scales) are updated in place.
 
     Returns (out (1, T, d), updated cache).
     """
-    assert cache.k_scale is None, "fused prefill is bf16-KV only"
     b, t, _ = x.shape
     assert b == 1, "admission prefill is batch-1 (one slot)"
+    quantized = cache.k_scale is not None
     positions = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
     q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
     k = _split_heads(apply_linear(p["wk"], x), cfg.num_kv_heads)
@@ -192,6 +193,19 @@ def attention_prefill_paged(p: dict, cfg: ModelConfig, x: jax.Array,
     qt = q[0].reshape(cfg.num_kv_heads, g, t, cfg.hd).transpose(2, 0, 1, 3)
     kn = k[0].transpose(1, 0, 2)                 # (T, Hkv, hd)
     vn = v[0].transpose(1, 0, 2)
+    if quantized:
+        # Pass the raw (unquantized) chunk KV: the kernel requantizes
+        # per-32 blocks along hd itself, matching _quantize_kv exactly.
+        out, kp, vp, ksp, vsp = ops.paged_prefill_attention(
+            qt, kn, vn, cache.k, cache.v, block_tables[0], pos0[0],
+            window=cfg.sliding_window, scale=cfg.hd ** -0.5,
+            k_scale_pool=cache.k_scale, v_scale_pool=cache.v_scale)
+        new = KVCache(ctx.paged_kv(kp), ctx.paged_kv(vp),
+                      ctx.paged_kv(ksp), ctx.paged_kv(vsp))
+        out = out.transpose(1, 2, 0, 3)          # (Hkv, G, T, hd)
+        out = out.reshape(1, cfg.num_heads, t, cfg.hd)
+        return apply_linear(p["wo"],
+                            _merge_heads(out).astype(x.dtype)), new
     out, kp, vp = ops.paged_prefill_attention(
         qt, kn.astype(cache.k.dtype), vn.astype(cache.v.dtype),
         cache.k, cache.v, block_tables[0], pos0[0],

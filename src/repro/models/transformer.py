@@ -406,15 +406,31 @@ def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
 
 def prefill_fused_eligible(cfg: ModelConfig, *,
                            quantized_kv: bool = False) -> bool:
-    """True when a prompt chunk can go through the fused paged
+    """True when a prompt chunk can go through a fused paged
     flash-prefill kernel instead of the decode-step scan: every layer
     must be plain self-attention (recurrent/hybrid state has no fused
-    multi-token update), no encoder-decoder cross attention, and the
-    KV pool must be bf16 (the kernel writes raw keys/values; Q8_0
-    requantization stays on the scan path)."""
-    return (set(_period_kinds(cfg)) == {"attn"}
-            and not cfg.is_enc_dec
-            and not quantized_kv)
+    multi-token update) and no encoder-decoder cross attention.
+
+    ``quantized_kv`` no longer disqualifies: Q8_0 pools dispatch the
+    ``flash_prefill_paged_q8`` sibling, which requantizes the chunk's
+    KV in-kernel (the kwarg is kept so callers can state the pool
+    dtype; both pool dtypes are now fused-eligible)."""
+    del quantized_kv  # Q8_0 pools take the fused q8 sibling kernel
+    return set(_period_kinds(cfg)) == {"attn"} and not cfg.is_enc_dec
+
+
+def prefill_path(cfg: ModelConfig, *, quantized_kv: bool = False,
+                 batch: int = 1, fused: bool = True) -> str:
+    """Single source of truth for which prefill path a chunk executes:
+    ``"fused"`` (one kernel launch per chunk) or ``"scan"`` (one decode
+    step per token).  ``lm_prefill_chunk``'s dispatch and the serving
+    scheduler's launch accounting / cost-model keys both derive from
+    this, so estimates can never be keyed on a path that isn't taken.
+    """
+    if (fused and batch == 1
+            and prefill_fused_eligible(cfg, quantized_kv=quantized_kv)):
+        return "fused"
+    return "scan"
 
 
 def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
@@ -476,15 +492,19 @@ def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
     * **decode-step scan** (the reference oracle) — a ``lax.scan`` of
       :func:`lm_decode_step`, bit-identical to feeding the chunk
       through single-token decode; recurrent (SSM / xLSTM) states,
-      encoder-decoder models, quantized KV, and batch > 1 always take
-      this path (the fused kernel is batch-1, one slot per admission),
-      and tests pin ``fused=False`` to it as the ground truth.
+      encoder-decoder models, and batch > 1 always take this path (the
+      fused kernel is batch-1, one slot per admission), and tests pin
+      ``fused=False`` to it as the ground truth.  Quantized (Q8_0) KV
+      is fused-eligible: it dispatches the q8 sibling kernel, which
+      requantizes the chunk in-kernel; the scan remains its
+      dequant-reference oracle at tolerance (see ``kernels/README.md``).
     """
-    if fused and block_tables is not None and tokens.shape[0] == 1:
+    if block_tables is not None:
         quantized = any(
             isinstance(c.kv, attn_mod.KVCache) and c.kv.k_scale is not None
             for c in cache)
-        if prefill_fused_eligible(cfg, quantized_kv=quantized):
+        if prefill_path(cfg, quantized_kv=quantized,
+                        batch=tokens.shape[0], fused=fused) == "fused":
             return _lm_prefill_chunk_fused(params, cfg, tokens, pos0,
                                            cache, block_tables)
 

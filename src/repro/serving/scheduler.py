@@ -23,10 +23,13 @@ around two compiled programs, with all cache bookkeeping delegated to
   causal within the chunk, position-masked against history, KV
   written in-kernel) — admission costs one kernel launch per chunk
   instead of one decode-step launch per token
-  (``prefill_launches``).  Recurrent/hybrid, enc-dec, and
-  quantized-KV models automatically fall back to the jitted
-  ``lax.scan`` of the decode step, which stays bit-identical to solo
-  decode and serves as the fused path's test oracle.  Either way,
+  (``prefill_launches``).  Quantized-KV pools are fused too: the Q8_0
+  sibling kernel requantizes the chunk in-kernel and updates the
+  quant + scale pools in place.  Recurrent/hybrid and enc-dec models
+  automatically fall back to the jitted ``lax.scan`` of the decode
+  step, which stays bit-identical to solo decode and serves as the
+  fused path's test oracle (at dequant-reference tolerance for
+  quantized pools).  Either way,
   prompt ingestion costs *prefill quanta*, not decode steps at the
   full slot batch; the final chunk's logits emit the first generated
   token.
@@ -101,10 +104,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.engine import events as ev
+from repro.core.policy import get_policy
+from repro.core.qlinear import quantize_params
 from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
                                       cache_slot_view, init_cache,
                                       lm_decode_step, lm_prefill_chunk,
-                                      prefill_fused_eligible)
+                                      prefill_path)
 from repro.serving.kvcache import PagedKVRuntime, cdiv
 
 DEFAULT_BLOCK = 16
@@ -200,6 +205,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
                  max_len: int, enc_embeds=None,
                  decode_fn: Callable | None = None,
                  quantized_kv: bool = False,
+                 weight_quant: str | None = None,
                  block_size: int = DEFAULT_BLOCK,
                  prefill_chunk: int = 8,
                  prefix_share: bool = False,
@@ -215,6 +221,13 @@ class ContinuousBatcher(ev.EventStreamMixin):
             raise ValueError(
                 "prefix_share needs a pure-attention decoder: recurrent "
                 "states and encoder KV cannot be adopted from a cache")
+        if weight_quant is not None:
+            # Opt-in quantized-weight decode: linear weights move to
+            # blocked storage (Q8_0/Q4_0/Q3_K per the policy) and every
+            # matmul routes through core.qlinear onto the quantized
+            # kernels (Pallas on TPU, dequant reference on CPU).
+            params = quantize_params(params, get_policy(weight_quant))
+        self.weight_quant = weight_quant
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
@@ -233,9 +246,13 @@ class ContinuousBatcher(ev.EventStreamMixin):
                                 num_blocks=self.runtime.num_blocks)
         self.step_fn = decode_fn or make_paged_decode(cfg)
         # Fused prefill quietly downgrades to the decode-step scan when
-        # the model cannot take it (recurrent/hybrid, enc-dec, Q8 KV).
-        self.fused_prefill = fused_prefill and prefill_fused_eligible(
-            cfg, quantized_kv=quantized_kv)
+        # the model cannot take it (recurrent/hybrid, enc-dec).  The
+        # same prefill_path() call backs lm_prefill_chunk's dispatch,
+        # so launch accounting and cost-model keys always describe the
+        # path actually executed.
+        self.fused_prefill = prefill_path(
+            cfg, quantized_kv=quantized_kv,
+            fused=fused_prefill) == "fused"
         self._prefill_raw = make_prefill_chunk(cfg,
                                                fused=self.fused_prefill)
         self._reset_fn = _make_slot_reset()
@@ -683,7 +700,10 @@ class ContinuousBatcher(ev.EventStreamMixin):
             self._observe_quantum(self.cost_model.lm_keys(self)[0],
                                   ("prefill", len(chunk)), t0, nxt)
         self._obs_quantum("prefill", t0, nxt, [req.rid],
-                          args={"tokens": len(chunk), "slot": i})
+                          args={"tokens": len(chunk), "slot": i,
+                                "fused": self.fused_prefill,
+                                "quantized_kv": self.quantized_kv,
+                                "weight_quant": self.weight_quant})
         self.bus.emit(ev.Progress, req.rid, phase="prefill",
                       step=req._cursor, total=len(req._feed))
         if not self._pending[i]:        # feed done: next token is out
@@ -716,7 +736,9 @@ class ContinuousBatcher(ev.EventStreamMixin):
                                   ("decode",), t0, nxt)
         self._obs_quantum("decode", t0, nxt,
                           [self.slots[i].rid for i in active],
-                          args={"batch": len(active)})
+                          args={"batch": len(active),
+                                "quantized_kv": self.quantized_kv,
+                                "weight_quant": self.weight_quant})
         for i in active:
             req = self.slots[i]
             self.runtime.pos[i] += 1    # the fed token is now cached

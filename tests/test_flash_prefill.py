@@ -13,11 +13,15 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 from repro.kernels.flash_prefill import (flash_prefill_paged,
+                                         flash_prefill_paged_q8,
+                                         flash_prefill_paged_q8_ref,
                                          flash_prefill_paged_ref)
 from repro.models.transformer import (init_cache, init_lm,
                                       lm_prefill_chunk,
-                                      prefill_fused_eligible)
+                                      prefill_fused_eligible,
+                                      prefill_path)
 from repro.serving import ContinuousBatcher, PagedKVRuntime, Request
 
 pytestmark = pytest.mark.serving
@@ -159,6 +163,143 @@ class TestKernelOracle:
                                       np.asarray(vp[hist_bid]))
 
 
+# ------------------------------------------------------ kernel level, Q8
+def _roundtrip(x):
+    """Q8_0 quantize-dequantize round trip along the last axis, read at
+    bf16 — the precision every pool reader (fused kernel and the scan
+    path's _dequantize_kv alike) attends at."""
+    return quant.dequantize_q8_0(quant.quantize_q8_0(x),
+                                 jnp.bfloat16).astype(jnp.float32)
+
+
+def _kernel_case_q8(t, pos0, seed):
+    """Q8_0 twin of _kernel_case: the fp pools are quantized per row
+    (per-32 blocks along hd, exactly like the serving cache), and the
+    one-shot history is their *dequantized* content — what any reader
+    of the quantized pool actually attends to."""
+    q, kn, vn, kp, vp, tbl, _, _ = _kernel_case(t, pos0, seed)
+    k8, v8 = quant.quantize_q8_0(kp), quant.quantize_q8_0(vp)
+    kq, ks = k8.qs, k8.d
+    vq, vs = v8.qs, v8.d
+    bs = kp.shape[2]
+    idx = jnp.arange(pos0)
+    kd = quant.dequantize_q8_0(k8, jnp.bfloat16).astype(jnp.float32)
+    vd = quant.dequantize_q8_0(v8, jnp.bfloat16).astype(jnp.float32)
+    k_hist = kd[tbl[idx // bs], :, idx % bs]
+    v_hist = vd[tbl[idx // bs], :, idx % bs]
+    return q, kn, vn, kq, vq, ks, vs, tbl, k_hist, v_hist
+
+
+class TestKernelOracleQ8:
+    """Oracle suite for ``flash_prefill_paged_q8`` per the pattern in
+    ``src/repro/kernels/README.md``: interpret-mode kernel vs the XLA
+    ref (tight), vs an independent one-shot reference over dequantized
+    content (tight — same requantized values), and vs the *unquantized*
+    fp32 one-shot at quantization tolerance (the requantization
+    round-trip bound)."""
+    CASES = [(1, 0), (1, 7), (3, 5), (3, 8), (8, 0), (8, 5), (8, 13)]
+
+    @pytest.mark.parametrize("t,pos0", CASES)
+    def test_fused_q8_equals_oracle_and_one_shot(self, t, pos0):
+        case = _kernel_case_q8(t, pos0, seed=13 * t + pos0)
+        q, kn, vn, kq, vq, ks, vs, tbl, kh, vh = case
+        got, kqo, vqo, kso, vso = flash_prefill_paged_q8(
+            q, kn, vn, kq, vq, ks, vs, tbl, pos0, interpret=True)
+        ref, kqr, vqr, ksr, vsr = flash_prefill_paged_q8_ref(
+            q, kn, vn, kq, vq, ks, vs, tbl, pos0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-6, rtol=1e-5)
+        # Pools: in-kernel requantize + scatter lands exactly where the
+        # oracle's quantize_q8_0 + scatter does — quants AND scales.
+        np.testing.assert_array_equal(np.asarray(kqo), np.asarray(kqr))
+        np.testing.assert_array_equal(np.asarray(vqo), np.asarray(vqr))
+        np.testing.assert_array_equal(np.asarray(kso), np.asarray(ksr))
+        np.testing.assert_array_equal(np.asarray(vso), np.asarray(vsr))
+        # One-shot over dequantized history + the chunk's requantized
+        # round trip: same values the kernel attends to, tight bound.
+        shot = _one_shot(q, kh, vh, _roundtrip(kn), _roundtrip(vn), pos0)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(shot), atol=2e-5,
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("t,pos0", [(3, 5), (8, 13)])
+    def test_requantization_roundtrip_tolerance_vs_fp32(self, t, pos0):
+        """Against the *unquantized* fp32 one-shot the only error is
+        the Q8_0 round trip of K/V — bounded by the per-block scale
+        (~amax / 127), loose compared to machine eps but tight in
+        absolute terms for unit-scale inputs."""
+        seed = 13 * t + pos0
+        q, kn, vn, kq, vq, ks, vs, tbl, _, _ = _kernel_case_q8(
+            t, pos0, seed)
+        # fp oracle uses the same underlying fp pools/history.
+        qf, knf, vnf, kpf, vpf, _tbl, khf, vhf = _kernel_case(t, pos0,
+                                                              seed)
+        got, *_ = flash_prefill_paged_q8(q, kn, vn, kq, vq, ks, vs, tbl,
+                                         pos0, interpret=True)
+        shot_fp = _one_shot(qf, khf, vhf, knf, vnf, pos0)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(shot_fp), atol=0.12,
+                                   rtol=0.12)
+
+    @pytest.mark.parametrize("t,pos0", [(3, 5), (8, 13)])
+    def test_sliding_window(self, t, pos0):
+        q, kn, vn, kq, vq, ks, vs, tbl, kh, vh = _kernel_case_q8(
+            t, pos0, seed=7)
+        got, *_ = flash_prefill_paged_q8(q, kn, vn, kq, vq, ks, vs, tbl,
+                                         pos0, window=6, interpret=True)
+        shot = _one_shot(q, kh, vh, _roundtrip(kn), _roundtrip(vn),
+                         pos0, window=6)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(shot), atol=2e-5,
+                                   rtol=1e-4)
+
+    def test_recycled_block_poison_is_inert(self):
+        """Recycled-block stale bytes: poison unlisted blocks and the
+        listed stale tail with 127 quants + NaN scales.  The output
+        must stay finite and unlisted blocks bit-unchanged (NaN scales
+        included)."""
+        t, pos0 = 5, 6
+        q, kn, vn, kq, vq, ks, vs, tbl, _, _ = _kernel_case_q8(
+            t, pos0, seed=2)
+        for bid in (5, 6, 7):                    # unlisted blocks
+            kq = kq.at[bid].set(127)
+            vq = vq.at[bid].set(127)
+            ks = ks.at[bid].set(jnp.nan)
+            vs = vs.at[bid].set(jnp.nan)
+        bs = kq.shape[2]
+        tail_blk, tail_off = int(tbl[(pos0 + t) // bs]), (pos0 + t) % bs
+        ks = ks.at[tail_blk, :, tail_off:].set(jnp.nan)
+        vs = vs.at[tail_blk, :, tail_off:].set(jnp.nan)
+        got, kqo, vqo, kso, vso = flash_prefill_paged_q8(
+            q, kn, vn, kq, vq, ks, vs, tbl, pos0, interpret=True)
+        assert bool(jnp.isfinite(got.astype(jnp.float32)).all())
+        want, *_ = flash_prefill_paged_q8_ref(
+            q, kn, vn, kq, vq, jnp.nan_to_num(ks), jnp.nan_to_num(vs),
+            tbl, pos0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-6, rtol=1e-5)
+        for bid in (5, 6, 7):
+            np.testing.assert_array_equal(np.asarray(kqo[bid]),
+                                          np.asarray(kq[bid]))
+            np.testing.assert_array_equal(np.asarray(kso[bid]),
+                                          np.asarray(ks[bid]))
+            np.testing.assert_array_equal(np.asarray(vso[bid]),
+                                          np.asarray(vs[bid]))
+
+    def test_prefix_shared_history_blocks_read_only(self):
+        """History blocks below pos0 (possibly adopted read-only by
+        several slots) must come back bit-identical in all four pools."""
+        t, pos0 = 4, 8                           # history fills block 0
+        q, kn, vn, kq, vq, ks, vs, tbl, _, _ = _kernel_case_q8(
+            t, pos0, seed=4)
+        _, kqo, vqo, kso, vso = flash_prefill_paged_q8(
+            q, kn, vn, kq, vq, ks, vs, tbl, pos0, interpret=True)
+        hist = int(tbl[0])
+        for out, orig in ((kqo, kq), (vqo, vq), (kso, ks), (vso, vs)):
+            np.testing.assert_array_equal(np.asarray(out[hist]),
+                                          np.asarray(orig[hist]))
+
+
 # ----------------------------------------------------------- model level
 class TestModelOracle:
     @pytest.mark.parametrize("chunks", [(1,), (3,), (8,), (5, 3), (3, 5),
@@ -205,10 +346,74 @@ class TestModelOracle:
                     np.asarray(b[:, bids, :, offs], np.float32),
                     atol=6e-2, rtol=6e-2)
 
+    @pytest.mark.parametrize("chunks", [(3,), (8,), (5, 3), (1, 8, 2)])
+    def test_fused_q8_matches_scan_at_dequant_reference(self, params,
+                                                        chunks):
+        """Quantized-KV tentpole acceptance at the model level: the
+        fused q8 path matches the decode-step-scan oracle.  Both paths
+        quantize each token's KV with the same per-row Q8_0 math, so
+        pool contents agree to quantization-step tolerance (the chunk
+        projections are computed at different batch shapes, hence not
+        bit-exact) and logits agree at dequant-reference precision."""
+        prompt = _prompt(17, sum(chunks))
+        rt = PagedKVRuntime(slots=1, max_len=16, block_size=4)
+        cache_f = init_cache(params, CFG, 1, 16, block_size=4,
+                             num_blocks=rt.num_blocks, quantized_kv=True)
+        cache_s = jax.tree.map(jnp.copy, cache_f)
+        rt.admit(0, prompt, 4)
+        tbl = jnp.asarray([rt.tables[0]], jnp.int32)
+        pos = 0
+        for c in chunks:
+            toks = jnp.asarray([prompt[pos:pos + c]], jnp.int32)
+            pos0 = jnp.full((1,), pos, jnp.int32)
+            logits_f, cache_f = lm_prefill_chunk(
+                params, CFG, toks, pos0, cache_f, block_tables=tbl,
+                fused=True)
+            logits_s, cache_s = lm_prefill_chunk(
+                params, CFG, toks, pos0, cache_s, block_tables=tbl,
+                fused=False)
+            pos += c
+        np.testing.assert_allclose(
+            np.asarray(logits_f, np.float32),
+            np.asarray(logits_s, np.float32), atol=3e-2, rtol=2e-2)
+        idx = jnp.arange(pos)
+        bids = tbl[0][idx // 4]
+        offs = idx % 4
+        for lf, ls in zip(cache_f, cache_s):
+            # Compare the *dequantized* written positions: quant codes
+            # can differ by +/-1 where the two paths' projections round
+            # differently, but the decoded values stay within the
+            # block-scale quantization step.
+            df = jax.tree.map(lambda q, s: np.asarray(
+                q[:, bids, :, offs], np.float32)
+                * np.asarray(s[:, bids, :, offs],
+                             np.float32).repeat(32, -1),
+                (lf.kv.k, lf.kv.v), (lf.kv.k_scale, lf.kv.v_scale))
+            ds = jax.tree.map(lambda q, s: np.asarray(
+                q[:, bids, :, offs], np.float32)
+                * np.asarray(s[:, bids, :, offs],
+                             np.float32).repeat(32, -1),
+                (ls.kv.k, ls.kv.v), (ls.kv.k_scale, ls.kv.v_scale))
+            for a, b in zip(df, ds):
+                np.testing.assert_allclose(a, b, atol=8e-2, rtol=8e-2)
+
     def test_eligibility_matrix(self):
         assert prefill_fused_eligible(CFG)
-        assert not prefill_fused_eligible(CFG, quantized_kv=True)
+        # Q8_0 pools are fused-eligible now: they take the q8 sibling
+        # kernel instead of falling back to the decode-step scan.
+        assert prefill_fused_eligible(CFG, quantized_kv=True)
         assert not prefill_fused_eligible(HYBRID)
+        assert not prefill_fused_eligible(HYBRID, quantized_kv=True)
+
+    def test_prefill_path_single_source_of_truth(self):
+        """prefill_path backs both lm_prefill_chunk's dispatch and the
+        batcher's launch accounting — pin the full matrix."""
+        assert prefill_path(CFG) == "fused"
+        assert prefill_path(CFG, quantized_kv=True) == "fused"
+        assert prefill_path(CFG, fused=False) == "scan"
+        assert prefill_path(CFG, batch=2) == "scan"
+        assert prefill_path(HYBRID) == "scan"
+        assert prefill_path(HYBRID, quantized_kv=True) == "scan"
 
     def test_batch_gt_one_keeps_documented_contract(self, params):
         """lm_prefill_chunk's (B, C) signature must survive the
@@ -261,12 +466,85 @@ class TestServingOracle:
         assert launches[False] == 12     # one decode step per token
         assert launches[True] < launches[False]
 
-    def test_fused_downgrades_for_hybrid_and_quantized(self, params):
+    def test_fused_q8_admission_uses_fewer_launches(self, params):
+        """Quantized-KV admission is 1 launch per chunk now — the last
+        1-launch-per-token path is gone."""
+        launches = {}
+        for fused in (True, False):
+            cb = ContinuousBatcher(params, CFG, slots=1, max_len=20,
+                                   fused_prefill=fused,
+                                   quantized_kv=True)
+            assert cb.fused_prefill is fused   # no silent downgrade
+            cb.submit(Request(rid=0, prompt=_prompt(1, 12), max_new=3))
+            cb.run()
+            launches[fused] = cb.prefill_launches
+        assert launches[True] == 2
+        assert launches[False] == 12
+
+    def test_quantized_fused_and_scan_admission_agree(self, params):
+        """Fused-q8 vs decode-step-scan through the batcher: same
+        requests, tokens identical at dequant-reference precision
+        (pool contents agree to the quantization step; greedy argmax
+        is stable under that perturbation for these workloads)."""
+        prompts = [_prompt(70 + i, 7 + i % 5) for i in range(4)]
+        outs = {}
+        for fused in (True, False):
+            cb = ContinuousBatcher(params, CFG, slots=2, max_len=20,
+                                   block_size=4, prefill_chunk=4,
+                                   fused_prefill=fused,
+                                   quantized_kv=True)
+            assert cb.fused_prefill is fused
+            for rid, p in enumerate(prompts):
+                cb.submit(Request(rid=rid, prompt=list(p), max_new=5))
+            outs[fused] = {r.rid: r.out for r in cb.run()}
+        assert outs[True] == outs[False]
+
+    def test_fallback_launch_accounting_counts_per_token(self):
+        """Auto-fallback paths (recurrent/hybrid here; enc-dec and
+        batch>1 share the same init-time downgrade) must count one
+        launch per *token*, not per chunk — the fused-vs-scan gate in
+        benchmarks/serving_cache.py divides by this."""
+        hp = init_lm(jax.random.PRNGKey(3), HYBRID)
+        cb = ContinuousBatcher(hp, HYBRID, slots=1, max_len=20,
+                               fused_prefill=True, prefill_chunk=8)
+        assert cb.fused_prefill is False         # silently downgraded
+        cb.submit(Request(rid=0, prompt=_prompt(4, 11), max_new=2))
+        cb.run()
+        assert cb.prefill_launches == 11         # 1 per prompt token
+        assert cb.prefill_quanta == 2            # ceil(11 / 8) chunks
+
+    def test_cost_model_keys_match_executed_path(self, params):
+        """Satellite: estimate keys must be keyed on the path actually
+        executed, so calibrate() seeds what production quanta observe."""
+        from repro.engine.costmodel import CostModel
+        cm = CostModel()
+        hp = init_lm(jax.random.PRNGKey(3), HYBRID)
+        cases = [
+            (ContinuousBatcher(params, CFG, slots=1, max_len=20,
+                               quantized_kv=True), True),
+            (ContinuousBatcher(params, CFG, slots=1, max_len=20,
+                               fused_prefill=False), False),
+            (ContinuousBatcher(hp, HYBRID, slots=1, max_len=20), False),
+        ]
+        for cb, want_fused in cases:
+            kp, kd = cm.lm_keys(cb)
+            assert kp[3] is cb.fused_prefill is want_fused
+            assert kp[4] is cb.quantized_kv and kd[3] is cb.quantized_kv
+            assert kp[5] is None and kd[4] is None  # no weight quant
+            # The key's fused dim predicts the launch pattern exactly.
+            cb.submit(Request(rid=0, prompt=_prompt(6, 9), max_new=2))
+            cb.run()
+            expect = cb.prefill_quanta if kp[3] else 9
+            assert cb.prefill_launches == expect
+
+    def test_fused_downgrades_for_hybrid_but_not_quantized(self, params):
         hp = init_lm(jax.random.PRNGKey(3), HYBRID)
         assert not ContinuousBatcher(hp, HYBRID, slots=1,
                                      max_len=8).fused_prefill
-        assert not ContinuousBatcher(params, CFG, slots=1, max_len=8,
-                                     quantized_kv=True).fused_prefill
+        # Quantized KV no longer downgrades: the q8 sibling kernel
+        # keeps admission on the 1-launch-per-chunk path.
+        assert ContinuousBatcher(params, CFG, slots=1, max_len=8,
+                                 quantized_kv=True).fused_prefill
         assert ContinuousBatcher(params, CFG, slots=1,
                                  max_len=8).fused_prefill
 

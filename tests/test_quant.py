@@ -4,12 +4,32 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # not in the minimal CPU image
-from hypothesis import given, settings, strategies as st
+# hypothesis is not in the minimal CPU image; only the property tests at
+# the bottom need it — the unit/regression classes must still run.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in the minimal image
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **kw):  # noqa: D103 - no-op decorator stand-ins
+        return lambda fn: pytest.mark.skip("hypothesis not installed")(fn)
+
+    def settings(*a, **kw):
+        return lambda fn: fn
+
+    class st:  # type: ignore[no-redef]
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+        @staticmethod
+        def floats(*a, **kw):
+            return None
 
 from repro.core import quant
 
-SETTINGS = dict(max_examples=20, deadline=None)
+SETTINGS = dict(max_examples=20, deadline=None) if HAVE_HYPOTHESIS else {}
 
 
 def _rand(shape, seed=0, scale=1.0):
@@ -40,9 +60,85 @@ class TestQ80:
         t = quant.quantize_q8_0(x)
         assert t.nbytes() * 8 / x.size == pytest.approx(8.5)
 
-    def test_bad_block(self):
+    def test_kquant_ragged_still_raises(self):
+        # K-quants keep GGML's hard divisibility requirement.
         with pytest.raises(ValueError):
-            quant.quantize_q8_0(jnp.zeros((2, 33)))
+            quant.quantize_q3_k(jnp.zeros((2, 255)))
+        with pytest.raises(ValueError):
+            quant.quantize_q8_k(jnp.zeros((2, 255)))
+
+
+class TestBlockEdgeCases:
+    """Regression tests for degenerate Q8_0/Q4_0 blocks (ISSUE 8)."""
+
+    @pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+    def test_all_zero_block(self, fmt):
+        t = quant.quantize(jnp.zeros((2, 64)), fmt)
+        assert np.all(np.asarray(t.d) == 0)
+        assert np.all(np.asarray(quant.dequantize(t)) == 0)
+
+    @pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+    def test_all_equal_block(self, fmt):
+        x = jnp.full((2, 32), 3.25)
+        y = np.asarray(quant.dequantize(quant.quantize(x, fmt)))
+        np.testing.assert_allclose(y, 3.25, rtol=1e-2)
+
+    @pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+    def test_huge_block_does_not_nan(self, fmt):
+        # amax/q_max overflows fp16 without saturation: d = inf, all
+        # codes 0, dequant 0 * inf = NaN.  Must stay finite instead.
+        x = jnp.array([[1e9, -5e8] + [0.0] * 30])
+        y = np.asarray(quant.dequantize(quant.quantize(x, fmt)))
+        assert np.all(np.isfinite(y)), y
+        assert np.sign(y[0, 0]) == 1 and np.sign(y[0, 1]) == -1
+
+    @pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+    def test_tiny_block_not_flushed_to_zero(self, fmt):
+        # amax/q_max underflows fp16's subnormal range without the
+        # floor: d = 0 and a representable block silently zeroes.
+        x = jnp.full((1, 32), 2.0 ** -24)
+        t = quant.quantize(x, fmt)
+        assert np.all(np.asarray(t.d, np.float32) > 0)
+        assert np.any(np.asarray(quant.dequantize(t)) != 0)
+
+    def test_max_negative_no_int8_wrap(self):
+        # fp16 rounding of d can push round(x / d) past -127; the cast
+        # to int8 must clip, not wrap to +positive via -128.
+        x = -_rand((8, 256), seed=5, scale=100.0).__abs__()
+        t = quant.quantize_q8_0(x)
+        q = np.asarray(t.qs, np.int32)
+        assert q.min() >= -127
+        assert np.all(np.asarray(quant.dequantize_q8_0(t)) <= 0)
+
+    def test_max_negative_no_nibble_wrap_q4(self):
+        x = -jnp.abs(_rand((8, 256), seed=6, scale=100.0))
+        t = quant.quantize_q4_0(x)
+        q = np.asarray(quant.unpack_q4(t.qs), np.int32)
+        assert q.min() >= -8 and q.max() <= 7
+        assert np.all(np.asarray(quant.dequantize_q4_0(t)) <= 0)
+
+    @pytest.mark.parametrize("fmt", ["q8_0", "q4_0"])
+    @pytest.mark.parametrize("k", [1, 31, 33, 63])
+    def test_tail_block_roundtrip(self, fmt, k):
+        x = _rand((3, k), seed=k)
+        t = quant.quantize(x, fmt)
+        assert t.shape == x.shape
+        y = np.asarray(quant.dequantize(t))
+        assert y.shape == x.shape
+        tol = {"q8_0": 0.02, "q4_0": 0.25}[fmt]
+        rel = np.linalg.norm(y - np.asarray(x)) / np.linalg.norm(
+            np.asarray(x))
+        assert rel < tol, rel
+
+    def test_tail_survives_pytree_roundtrip(self):
+        t = quant.quantize_q8_0(_rand((2, 40)))
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert t2.logical == 40 and t2.shape == (2, 40)
+
+    def test_aligned_has_no_logical(self):
+        assert quant.quantize_q8_0(_rand((2, 64))).logical is None
+        assert quant.quantize_q4_0(_rand((2, 64))).logical is None
 
 
 class TestQ3K:

@@ -457,10 +457,11 @@ class TestRejectedLifecycle:
 
     def test_diffusion_reject_at_submit(self, sd_params):
         cm = CostModel()
-        cm.seed(("diff", TINY_SD.name, "clip", False, 1), 0.01)
-        cm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1),
+        cm.seed(("diff", TINY_SD.name, "clip", False, 1, None), 0.01)
+        cm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1,
+                 None),
                 0.02)
-        cm.seed(("diff", TINY_SD.name, "vae", 8, 1), 0.01)
+        cm.seed(("diff", TINY_SD.name, "vae", 8, 1, None), 0.01)
         eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
                               cost_model=cm)
         toks = [1] * TINY_SD.text_len
@@ -663,10 +664,11 @@ class TestRouter:
         LM request that needs almost no time."""
         toks = [1] * TINY_SD.text_len
         dcm = CostModel()
-        dcm.seed(("diff", TINY_SD.name, "clip", False, 1), 0.01)
-        dcm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1),
+        dcm.seed(("diff", TINY_SD.name, "clip", False, 1, None), 0.01)
+        dcm.seed(("diff", TINY_SD.name, "unet_step", "ddim", 8, False, 1,
+                 None),
                  0.5)
-        dcm.seed(("diff", TINY_SD.name, "vae", 8, 1), 0.01)
+        dcm.seed(("diff", TINY_SD.name, "vae", 8, 1, None), 0.01)
         lcm = CostModel()
         diff = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
                                cost_model=dcm)

@@ -1,0 +1,160 @@
+"""Opt-in quantized-weight serving (``weight_quant=``) for both engines.
+
+The gating contract (ISSUE 8 tentpole (b)): on CPU the quantized matmul
+routes through the dequant reference (``ref.q8_matmul_ref``), which is
+*the same arithmetic* as the dense path applied to pre-dequantized bf16
+weights — so a ``weight_quant="q8_0"`` batcher must emit tokens
+bit-identical to a plain batcher given the dequantized weights.  That
+pins the quantized path's correctness at dequant-reference precision;
+kernel-vs-reference precision is covered by the quantized-matmul kernel
+suites.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.qlinear import Linear
+from repro.engine import (TINY_SD, DiffusionEngine, GenerateRequest,
+                          init_pipeline)
+from repro.engine.costmodel import CostModel
+from repro.models.transformer import init_lm
+from repro.serving import ContinuousBatcher, Request
+
+pytestmark = pytest.mark.serving
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                  head_dim=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def _prompt(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(1, 90, n)]
+
+
+def _dequantize_linears(params):
+    """The dequant reference weights: every quantized Linear replaced
+    by its bf16-dequantized dense twin (what ref.q8_matmul_ref and
+    layers.apply_embedding decode on the fly)."""
+    def deq(node):
+        if isinstance(node, Linear) and not hasattr(node.w, "dtype"):
+            return Linear(quant.dequantize(node.w, jnp.bfloat16),
+                          node.b, node.role)
+        return node
+    return jax.tree.map(deq, params,
+                        is_leaf=lambda x: isinstance(x, Linear))
+
+
+def _run(params_or_none, cfg, prompts, **kw):
+    cb = ContinuousBatcher(params_or_none, cfg, slots=2, max_len=24,
+                           prefill_chunk=4, block_size=4, **kw)
+    for rid, p in enumerate(prompts):
+        cb.submit(Request(rid=rid, prompt=list(p), max_new=6))
+    return cb, {r.rid: r.out for r in cb.run()}
+
+
+class TestLMWeightQuant:
+    def test_matches_dequant_reference_bit_exact(self, params):
+        """weight_quant="q8_0" on CPU == dense decode on the
+        dequantized weights, token for token."""
+        prompts = [_prompt(30 + i, 6 + i % 4) for i in range(4)]
+        cb_q, out_q = _run(params, CFG, prompts, weight_quant="q8_0")
+        ref_params = _dequantize_linears(cb_q.params)
+        _, out_d = _run(ref_params, CFG, prompts)
+        assert out_q == out_d
+
+    def test_combined_with_quantized_kv_stays_fused(self, params):
+        """The largest quantized config — Q8 weights AND Q8 KV — takes
+        the fused prefill path and matches its own dequant reference."""
+        prompts = [_prompt(40 + i, 7) for i in range(3)]
+        cb_q, out_q = _run(params, CFG, prompts, weight_quant="q8_0",
+                           quantized_kv=True)
+        assert cb_q.fused_prefill is True
+        assert cb_q.prefill_launches == cb_q.prefill_quanta
+        ref_params = _dequantize_linears(cb_q.params)
+        _, out_d = _run(ref_params, CFG, prompts, quantized_kv=True)
+        assert out_q == out_d
+
+    def test_unknown_policy_raises(self, params):
+        with pytest.raises(KeyError):
+            ContinuousBatcher(params, CFG, slots=1, max_len=8,
+                              weight_quant="q9_9")
+
+    def test_cost_keys_carry_weight_quant(self, params):
+        cm = CostModel()
+        cb = ContinuousBatcher(params, CFG, slots=1, max_len=8,
+                               weight_quant="q8_0", quantized_kv=True)
+        kp, kd = cm.lm_keys(cb)
+        assert kp == ("lm", "t", "prefill", True, True, "q8_0")
+        assert kd == ("lm", "t", "decode", True, "q8_0")
+        plain = ContinuousBatcher(params, CFG, slots=1, max_len=8)
+        assert cm.lm_keys(plain)[0] == ("lm", "t", "prefill", True,
+                                        False, None)
+
+    def test_weights_actually_quantized(self, params):
+        cb = ContinuousBatcher(params, CFG, slots=1, max_len=8,
+                               weight_quant="q8_0")
+        quantized = [l for l in jax.tree.leaves(
+            cb.params, is_leaf=lambda x: isinstance(x, Linear))
+            if isinstance(l, Linear)
+            and isinstance(l.w, quant.Q8_0Tensor)]
+        assert quantized, "no Linear was quantized by the policy"
+
+
+class TestDiffusionWeightQuant:
+    @pytest.fixture(scope="class")
+    def sd_params(self):
+        return init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+
+    def test_engine_runs_and_keys_carry_weight_quant(self, sd_params):
+        eng = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                              weight_quant="q8_0",
+                              cost_model=CostModel())
+        toks = [int(t) for t in np.random.default_rng(0).integers(
+            0, 256, 77)]
+        eng.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
+                                   steps=1))
+        res = eng.run()
+        assert len(res) == 1 and res[0].rid == 0
+        assert np.isfinite(np.asarray(res[0].image,
+                                      np.float32)).all()
+        # The observed fused-program key carries the policy name.
+        keys = list(eng.cost_model._counts) or list(
+            eng.cost_model._costs)
+        assert all(k[-1] == "q8_0" for k in keys if k[0] == "diff")
+
+    def test_matches_dequant_reference(self, sd_params):
+        """Quantized engine vs dense engine on dequantized weights.
+
+        Not bit-exact like the LM path: the UNet feeds 4-D activations,
+        which the dense path contracts with lead dims in place while
+        ``q8_matmul_ref`` flattens to (M, K) first — XLA's f32
+        accumulation order differs between the two shapes, and the
+        delta compounds through bf16 casts over the whole pipeline.
+        Image-level tolerance is the gate here."""
+        toks = [int(t) for t in np.random.default_rng(1).integers(
+            0, 256, 77)]
+        eng_q = DiffusionEngine(sd_params, TINY_SD, max_batch=1,
+                                weight_quant="q8_0")
+        eng_q.submit(GenerateRequest(rid=0, tokens=list(toks),
+                                     sampler="ddim", steps=1, seed=7))
+        img_q = np.asarray(eng_q.run()[0].image, np.float32)
+        eng_d = DiffusionEngine(_dequantize_linears(eng_q.params),
+                                TINY_SD, max_batch=1)
+        eng_d.submit(GenerateRequest(rid=0, tokens=list(toks),
+                                     sampler="ddim", steps=1, seed=7))
+        img_d = np.asarray(eng_d.run()[0].image, np.float32)
+        np.testing.assert_allclose(img_q, img_d, atol=5e-2)
+        assert float(np.abs(img_q - img_d).mean()) < 1e-2
+
+    def test_unknown_policy_raises(self, sd_params):
+        with pytest.raises(KeyError):
+            DiffusionEngine(sd_params, TINY_SD, weight_quant="nope")
