@@ -16,6 +16,10 @@ promises:
 * **Event-ordering invariants survive the fleet** — the per-rid
   lifecycle invariants asserted by ``streaming_smoke`` hold on the one
   shared bus even across an eviction + migration.
+* **Capacity recovers** — with ``replace_evicted=True`` (PR 9) the
+  same kill respawns a fresh replica from the evicted spec's build:
+  the fleet ends the run at full replica strength, the replacement
+  absorbs real quanta, and every transcript stays bit-exact.
 * **Throughput scales** — on a mixed LM workload, the 3-replica
   parallel makespan (the max over replicas of quanta each ran — wall
   time in a real deployment where replicas step concurrently) is
@@ -144,6 +148,54 @@ def smoke_failover_bit_exact() -> list[str]:
     return rows
 
 
+def smoke_capacity_recovery() -> list[str]:
+    """Replacement (PR 9): with ``replace_evicted=True`` an injected
+    kill respawns a fresh replica from the evicted spec's build — the
+    fleet ends the run at full strength, the replacement absorbs real
+    work, and every request still finishes bit-exact."""
+    _, lm_params = _params()
+    n_replicas, n_req = 3, 18
+
+    def build():
+        return ContinuousBatcher(lm_params, LM_CFG, slots=2, max_len=16,
+                                 fused_prefill=False)
+
+    def reqs():
+        rng = np.random.RandomState(11)
+        return [Request(rid=i, prompt=rng.randint(1, 90, size=4).tolist(),
+                        max_new=5)
+                for i in range(n_req)]
+
+    ref = FleetManager([ReplicaSpec("solo", build)],
+                       watchdog_threshold=NO_WATCHDOG)
+    for r in reqs():
+        ref.submit(r)
+    ref_out = _outputs(ref.stream())
+
+    fleet = FleetManager(
+        [ReplicaSpec(f"c{i}", build) for i in range(n_replicas)],
+        injector=FaultInjector().kill("c1", 2),
+        watchdog_threshold=NO_WATCHDOG, replace_evicted=True)
+    for r in reqs():
+        fleet.submit(r)
+    out = _outputs(fleet.stream())
+    stats = fleet.stats()
+
+    assert out == ref_out, "replacement run diverged from reference"
+    assert not stats["lost"], f"lost requests: {stats['lost']}"
+    assert ("c1", "c1~0") in stats["replacements"], stats["replacements"]
+    live = [r for r in stats["replicas"] if r["state"] != "EVICTED"]
+    assert len(live) == n_replicas, \
+        f"capacity not recovered: {len(live)}/{n_replicas} live replicas"
+    repl = next(r for r in stats["replicas"] if r["name"] == "c1~0")
+    assert repl["steps"] > 0, "replacement replica absorbed no work"
+    rows = [f"fleet_smoke/capacity_recovery,{len(live)}/{n_replicas} "
+            f"replicas live after kill,replacement c1~0 ran "
+            f"{repl['steps']} quanta; {n_req}/{n_req} bit-exact"]
+    print(rows[0])
+    return rows
+
+
 def smoke_throughput_scaling() -> list[str]:
     """Parallel makespan (max per-replica quanta — wall time when
     replicas step concurrently) must strictly drop from 1 to 3
@@ -189,7 +241,8 @@ if __name__ == "__main__":
                          "perf-trajectory record (benchmarks/common.py "
                          "schema)")
     a = ap.parse_args()
-    all_rows = smoke_failover_bit_exact() + smoke_throughput_scaling()
+    all_rows = (smoke_failover_bit_exact() + smoke_capacity_recovery()
+                + smoke_throughput_scaling())
     if a.json:
         try:
             from benchmarks.common import write_bench_json

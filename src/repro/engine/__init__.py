@@ -1,7 +1,8 @@
-"""Unified request-based serving engine (diffusion + LM decode):
+"""Unified request-based serving engine (diffusion + LM decode + ASR):
 typed requests, streaming event lifecycle, SLO-aware multiplexing."""
 from repro.engine.api import (Engine, GenerateRequest, GenerateResult,
-                              default_sampler, uses_cfg)
+                              TranscribeRequest, default_sampler, uses_cfg)
+from repro.engine.asr_engine import AsrEngine, audio_fingerprint
 from repro.engine.diffusion_engine import (SD_TURBO, TINY_SD, DiffusionEngine,
                                            SDConfig, build_denoise,
                                            build_denoise_step, build_encode,
@@ -19,8 +20,9 @@ from repro.engine.samplers import (get_sampler, list_samplers,
                                    register_sampler)
 
 __all__ = [
-    "Engine", "GenerateRequest", "GenerateResult", "default_sampler",
-    "uses_cfg",
+    "Engine", "GenerateRequest", "GenerateResult", "TranscribeRequest",
+    "default_sampler", "uses_cfg",
+    "AsrEngine", "audio_fingerprint",
     "DiffusionEngine", "SDConfig", "SD_TURBO", "TINY_SD",
     "build_denoise", "build_denoise_step", "build_encode",
     "build_finalize_decode", "init_pipeline", "quantize_pipeline",

@@ -90,6 +90,7 @@ class GenerateRequest:
     seed: int = 0
     latent_hw: int | None = None    # None -> engine config default
     preview_every: int = 0          # 0 -> no previews (fused scan path)
+    preview_decode: bool = False    # previews carry VAE-decoded pixels
     deadline_ms: float | None = None  # SLO budget from submission
     priority: int = 0               # higher wins EDF ties
     # Absolute deadline on the engine's clock, set at submission.  A
@@ -97,6 +98,49 @@ class GenerateRequest:
     # migrated across replicas keeps its original budget instead of
     # restarting it at adoption.
     _deadline: float = dataclasses.field(default=float("inf"), repr=False)
+
+
+@dataclasses.dataclass
+class TranscribeRequest:
+    """One streaming speech-transcription request (ASR modality).
+
+    ``audio`` is the pre-extracted frame-embedding tensor
+    ``(cfg.encoder_seq, cfg.d_model)`` the stub conv frontend would
+    produce (``models.frontend``); the engine ingests it in
+    ``audio_chunk``-frame quanta (streaming audio admission, mirroring
+    chunked prompt prefill) and encodes incrementally.  ``prompt`` is
+    the decoder's token prefix (language/task tags for Whisper); the
+    transcript accumulates in ``out`` and the request object doubles as
+    its own ``Finished`` result, like the LM path's
+    ``serving.scheduler.Request``.
+
+    ``group`` co-schedules requests round-robin;
+    ``deadline_ms``/``priority`` feed the same EDF + cost-model
+    admission as the other modalities.  ``encode_steps`` /
+    ``prefill_steps`` / ``decode_steps`` bill the scheduling quanta the
+    request consumed, per phase.
+    """
+    rid: int
+    audio: Any                       # (encoder_seq, d_model) array
+    prompt: Sequence[int] = ()
+    max_new: int = 16
+    eos: int | None = None
+    group: int = 0
+    deadline_ms: float | None = None
+    priority: int = 0
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    encode_steps: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    _seq: int = dataclasses.field(default=0, repr=False)
+    _deadline: float = dataclasses.field(default=float("inf"), repr=False)
+    # Tokens still to ingest (prompt at first admission; prompt + out
+    # after a preemption resume) — mirrors serving.Request._feed.
+    _feed: list = dataclasses.field(default_factory=list, repr=False)
+    # Per-frame content fingerprints of ``audio`` (computed once at
+    # submit) — the cross-pool prefix-cache key chain.
+    _audio_key: list = dataclasses.field(default_factory=list, repr=False)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,669 @@
+"""Streaming ASR engine: encoder-decoder serving over two paged pools.
+
+The paper positions the CGLA as a *general-purpose* on-device AI
+platform; its companion Whisper study (PAPERS.md) serves streaming
+encoder-decoder speech recognition on the same hardware.  This module
+is the third modality behind :class:`repro.engine.router.EngineRouter`
+— a :class:`repro.engine.api.Engine`-protocol scheduler for
+Whisper-style transcription, structurally mirroring the LM
+``serving.ContinuousBatcher`` with one extra phase and one extra pool:
+
+* **Streaming audio ingestion** — a
+  :class:`~repro.engine.api.TranscribeRequest` carries pre-extracted
+  frame embeddings ``(encoder_seq, d_model)``; admission feeds them in
+  ``audio_chunk``-frame *encode quanta* (mirroring chunked prompt
+  prefill).  Each quantum is ONE jitted program: the chunk lands in
+  the slot's row of a persistent frame buffer, the full (non-causal)
+  encoder re-runs over that row, and every layer's K/V projections are
+  scattered into the slot's **cross-attention blocks** — so the final
+  chunk's program leaves exactly the one-shot encoder KV
+  (chunked == one-shot, oracle-gated in tests).
+* **Paged cross-attention pool** — encoder KV lives in a second
+  refcounted block pool on :class:`repro.serving.kvcache.PagedKVRuntime`
+  (``cross_len=encoder_seq``).  With ``audio_share=True`` a finished
+  encode publishes its chain to the audio prefix cache (keyed on
+  per-frame content fingerprints); a later request with the *same*
+  audio adopts every block read-only and skips the encode entirely.
+  Adoption is all-or-nothing: the encoder is non-causal, so a partial
+  frame prefix has no reusable KV.
+* **Fused enc-dec decoder prefill** — decoder self-attention rides the
+  ordinary paged pool, and whisper's pure-attention decoder is
+  fused-prefill eligible (``prefill_path``): each prompt chunk is one
+  fused paged flash-prefill program per layer plus one chunk-at-once
+  paged cross-attention read per layer, instead of a per-token
+  decode-step scan (``prefill_launches`` counts the difference; the
+  scan path remains the retained bit-exactness oracle).
+* **Decoder-pool prefix sharing stays OFF** — decoder self-attention
+  KV depends on the audio through the cross-attention residuals, so a
+  token-keyed prefix adoption across requests with different audio
+  would be wrong.  Audio sharing (above) is the sound ASR analogue.
+* **Lifecycle / SLO parity** — EDF-within-fairness-groups admission,
+  cost-model feasibility rejection at submit (``encode-chunk`` /
+  ``prefill`` / ``decode-token`` phase keys, plus the queueing-delay
+  term shared with the other engines), per-quantum EWMA observations,
+  ``TokenDelta`` transcript streaming, cancellation and preemption
+  releasing BOTH pools, and ``evacuate``/``adopt`` fleet hooks
+  (re-admission re-adopts a published audio chain, so migration skips
+  the re-encode and resumes bit-exactly via chunked re-prefill).
+
+``step()`` runs one quantum, encode-prioritized: pending audio chunks
+first, then pending prompt chunks, else one batched decode step.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import get_policy
+from repro.core.qlinear import quantize_params
+from repro.engine import events as ev
+from repro.engine.api import TranscribeRequest
+from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
+                                      cache_slot_view, encoder_forward,
+                                      init_cache, lm_decode_step,
+                                      lm_prefill_chunk, prefill_path,
+                                      write_cross_kv)
+from repro.serving.kvcache import PagedKVRuntime, cdiv
+
+DEFAULT_BLOCK = 16
+DEFAULT_AUDIO_CHUNK = 16
+
+
+def audio_fingerprint(audio: Any) -> list[int]:
+    """Per-frame content fingerprints of an audio embedding tensor —
+    the cross-pool prefix-cache key chain (host-side, hashed row
+    bytes; stable within a process, which is the cache's lifetime)."""
+    a = np.asarray(audio)
+    return [hash(a[f].tobytes()) for f in range(a.shape[0])]
+
+
+def make_asr_encode(cfg: ModelConfig):
+    """One streaming encode quantum as a single jitted program:
+    scatter the frame chunk into the slot's row of the persistent
+    frame buffer, re-run the full non-causal encoder over that row,
+    and write every layer's cross K/V into the slot's cross blocks.
+    The final chunk therefore leaves exactly the one-shot encoder KV;
+    intermediate chunks' writes are transient (overwritten by the next
+    quantum).  Compiled once per distinct chunk length."""
+    def encode(params, frames, f0, slot, cross_row, frame_buf, cache):
+        frame_buf = jax.lax.dynamic_update_slice(
+            frame_buf, frames.astype(frame_buf.dtype),
+            (slot, f0, jnp.int32(0)))
+        buf = jax.lax.dynamic_slice_in_dim(frame_buf, slot, 1, axis=0)
+        enc_out = encoder_forward(params, cfg, buf)
+        cache = write_cross_kv(params, cfg, enc_out, cross_row, cache)
+        return frame_buf, cache
+    return jax.jit(encode, donate_argnums=(5, 6))
+
+
+def make_asr_prefill(cfg: ModelConfig, *, fused: bool = True):
+    """Batch-1 chunked decoder prefill for one slot: slot view with the
+    cross pools passed through (``paged_cross``), self-attention KV via
+    the slot's block-table row, cross attention via its cross-table
+    row.  Fused (one paged flash-prefill program + one paged cross
+    read per layer per chunk) or the reference decode-step scan."""
+    def prefill(params, tokens, pos0, slot, block_row, cross_row, cache):
+        local = cache_slot_view(cache, slot, paged_cross=True)
+        logits, local = lm_prefill_chunk(params, cfg, tokens, pos0, local,
+                                         block_tables=block_row,
+                                         cross_tables=cross_row,
+                                         fused=fused)
+        cache = cache_slot_merge(cache, local, slot)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+    return jax.jit(prefill, donate_argnums=(6,))
+
+
+def make_asr_decode(cfg: ModelConfig):
+    """Greedy decode step at the fixed slot-batch shape: paged
+    self-attention KV plus a paged cross-attention read per layer."""
+    def step(params, tokens, positions, block_tables, cross_tables, cache):
+        logits, cache = lm_decode_step(params, cfg, tokens, positions,
+                                       cache, block_tables=block_tables,
+                                       cross_tables=cross_tables)
+        return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+    return jax.jit(step, donate_argnums=(5,))
+
+
+class AsrEngine(ev.EventStreamMixin):
+    """Whisper-style encoder-decoder transcription engine.
+
+    ``max_len`` is the per-request *decoder* capacity (prompt +
+    max_new - 1, like the LM batcher); the encoder span is fixed at
+    ``cfg.encoder_seq`` frames per request.  ``audio_share=True``
+    (default) enables the audio prefix cache: identical audio across
+    requests shares cross blocks read-only and skips re-encoding.
+    ``decode_fn`` must follow :func:`make_asr_decode`'s signature.
+    ``clock`` is the SLO/event timebase (injectable for deterministic
+    tests and virtual-time benchmarks)."""
+
+    def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
+                 max_len: int, decode_fn: Callable | None = None,
+                 quantized_kv: bool = False,
+                 weight_quant: str | None = None,
+                 block_size: int = DEFAULT_BLOCK,
+                 cross_block_size: int | None = None,
+                 audio_chunk: int = DEFAULT_AUDIO_CHUNK,
+                 prefill_chunk: int = 8,
+                 audio_share: bool = True,
+                 extra_blocks: int = 0,
+                 fused_prefill: bool = True,
+                 bus: ev.EventBus | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 edf: bool = True,
+                 cost_model=None, metrics=None):
+        if not cfg.is_enc_dec:
+            raise ValueError(
+                f"AsrEngine needs an encoder-decoder config, got "
+                f"{cfg.name} (is_enc_dec=False)")
+        if weight_quant is not None:
+            params = quantize_params(params, get_policy(weight_quant))
+        self.weight_quant = weight_quant
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.audio_chunk = max(1, audio_chunk)
+        self.audio_share = audio_share
+        self.metrics = metrics
+        cbs = cross_block_size or block_size
+        cross_bps = cdiv(cfg.encoder_seq, cbs)
+        self.runtime = PagedKVRuntime(
+            slots, max_len, block_size, extra_blocks=extra_blocks,
+            cross_len=cfg.encoder_seq, cross_block_size=cbs,
+            # Headroom so published audio chains survive slot turnover
+            # without blocking fresh admissions.
+            cross_extra_blocks=(slots * cross_bps if audio_share else 0),
+            cross_prefix_share=audio_share, metrics=metrics)
+        self.cache = init_cache(
+            params, cfg, slots, max_len, quantized_kv=quantized_kv,
+            block_size=block_size, num_blocks=self.runtime.num_blocks,
+            cross_block_size=cbs,
+            cross_num_blocks=self.runtime.cross_num_blocks)
+        # Per-slot streaming frame buffer: chunks accumulate here so
+        # every encode quantum sees all frames ingested so far.
+        self._frame_buf = jnp.zeros(
+            (slots, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        # Same single source of truth as the LM batcher: launch
+        # accounting and cost-model keys describe the executed path.
+        self.fused_prefill = prefill_path(
+            cfg, quantized_kv=quantized_kv, fused=fused_prefill) == "fused"
+        self.step_fn = decode_fn or make_asr_decode(cfg)
+        self._prefill_raw = make_asr_prefill(cfg, fused=self.fused_prefill)
+        self._encode_fn = make_asr_encode(cfg)
+        self._reset_fn = jax.jit(cache_slot_reset, donate_argnums=(0,))
+        self.slots: list[TranscribeRequest | None] = [None] * slots
+        self._pending: list[list[int]] = [[] for _ in range(slots)]
+        self._audio_left = [0] * slots    # frames still to ingest
+        self._next_tok = np.zeros(slots, np.int32)
+        self.finished: list[TranscribeRequest] = []
+        self._groups: "OrderedDict[int, list]" = OrderedDict()
+        self._rr: deque[int] = deque()
+        self.bus = bus if bus is not None else ev.EventBus(clock)
+        self.edf = edf
+        self.quantized_kv = quantized_kv
+        self.cost_model = cost_model
+        self.rejections = 0
+        self._cm_warm: set = set()
+        self.preemptions = 0
+        self._subseq = 0
+        self.encode_quanta = 0
+        self.prefill_quanta = 0
+        self.decode_quanta = 0
+        self.audio_hits = 0               # requests that skipped encode
+        # Admission cost in kernel launches (same acceptance metric as
+        # the LM batcher: fused admission is strictly fewer launches).
+        self.prefill_launches = 0
+        self.last_quantum: tuple[str, int] | None = None
+
+    # ------------------------------------------------------------ sizing
+    @staticmethod
+    def required_len(prompt_len: int, max_new: int) -> int:
+        """Per-request decoder capacity: positions
+        ``0 .. prompt_len + max_new - 2`` (the final token is emitted,
+        never cached)."""
+        return prompt_len + max_new - 1
+
+    # --------------------------------------------------------------- API
+    def submit(self, req: TranscribeRequest) -> ev.RequestHandle:
+        if not req.prompt:
+            raise ValueError(
+                "TranscribeRequest needs a non-empty decoder prompt "
+                "(Whisper task/language tags)")
+        need = len(req.prompt) + req.max_new - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt {len(req.prompt)} + max_new {req.max_new} needs "
+                f"capacity {need} > per-request max_len={self.max_len}")
+        a = np.asarray(req.audio)
+        want = (self.cfg.encoder_seq, self.cfg.d_model)
+        if a.shape != want:
+            raise ValueError(f"audio shape {a.shape} != {want} "
+                             f"(encoder_seq, d_model)")
+        if (self.bus.terminal(req.rid) is not None
+                or self.bus.admitted(req.rid)
+                or any(r.rid == req.rid
+                       for q in self._groups.values() for r in q)):
+            raise ValueError(f"duplicate rid {req.rid}")
+        req._seq = self._subseq
+        self._subseq += 1
+        req._deadline = (float("inf") if req.deadline_ms is None
+                         else self.bus.clock() + req.deadline_ms / 1e3)
+        if not req._feed:
+            req._feed = list(req.prompt)
+        if not req._audio_key:
+            req._audio_key = audio_fingerprint(a)
+        if self.metrics is not None:
+            self.metrics.request_submitted(req.rid, "asr",
+                                           self.bus.clock())
+        if self.cost_model is not None and req.deadline_ms is not None:
+            est = self.cost_model.estimate_asr(self, req)
+            if est is not None:
+                # Queueing-delay-aware admission: a feasible-in-
+                # isolation request behind a deep queue is rejected up
+                # front instead of expiring while it waits.
+                est += self.cost_model.queue_wait(self)
+            budget = req.deadline_ms / 1e3
+            if est is not None and est > budget:
+                self.rejections += 1
+                self.bus.emit(ev.Rejected, req.rid, estimated_s=est,
+                              budget_s=budget, reason="infeasible")
+                return self.handle(req.rid)
+        self._enqueue(req)
+        return self.handle(req.rid)
+
+    def _enqueue(self, req: TranscribeRequest) -> None:
+        if req.group not in self._groups:
+            self._groups[req.group] = []
+            self._rr.append(req.group)
+        self._groups[req.group].append(req)
+
+    @property
+    def queue_len(self) -> int:
+        return sum(len(q) for q in self._groups.values())
+
+    def has_work(self) -> bool:
+        return bool(self.queue_len) or any(s is not None
+                                           for s in self.slots)
+
+    def next_deadline(self) -> float:
+        cands = [r._deadline for q in self._groups.values() for r in q]
+        cands += [r._deadline for r in self.slots if r is not None]
+        return min(cands, default=float("inf"))
+
+    def next_slack(self) -> float:
+        """Minimum estimated slack (deadline - now - estimated
+        remaining service) over queued + running requests; +inf when
+        none declares a deadline (router multiplex key)."""
+        cm = self.cost_model
+        now = self.bus.clock()
+        best = float("inf")
+        for q in self._groups.values():
+            for r in q:
+                if r._deadline == float("inf"):
+                    continue
+                est = cm.estimate_asr(self, r) if cm else None
+                best = min(best, r._deadline - now - (est or 0.0))
+        for i, r in enumerate(self.slots):
+            if r is None or r._deadline == float("inf"):
+                continue
+            est = cm.remaining_asr(self, i) if cm else None
+            best = min(best, r._deadline - now - (est or 0.0))
+        return best
+
+    # ------------------------------------------- feasibility admission
+    def _infeasible(self, req: TranscribeRequest,
+                    now: float) -> tuple[bool, Any]:
+        if req._deadline == float("inf"):
+            return False, None
+        est = self.cost_model.estimate_asr(self, req)
+        if req._deadline < now:
+            return True, est
+        return (est is not None and now + est > req._deadline), est
+
+    def _reject(self, req: TranscribeRequest, est, now: float) -> None:
+        self.rejections += 1
+        self.bus.emit(ev.Rejected, req.rid, estimated_s=est or 0.0,
+                      budget_s=req._deadline - now,
+                      reason="expired" if req._deadline < now
+                      else "infeasible")
+
+    def _sweep_infeasible(self) -> None:
+        now = self.bus.clock()
+        for q in self._groups.values():
+            keep = []
+            for r in q:
+                hopeless, est = self._infeasible(r, now)
+                if hopeless:
+                    self._reject(r, est, now)
+                else:
+                    keep.append(r)
+            q[:] = keep
+
+    def _edf_key(self, req: TranscribeRequest) -> tuple:
+        if not self.edf:
+            return (req._seq,)
+        expired = req._deadline < self.bus.clock()
+        return (expired, req._deadline, -req.priority, req._seq)
+
+    def _pop_round_robin(self) -> TranscribeRequest | None:
+        while self._rr:
+            gid = self._rr[0]
+            if not self._groups[gid]:
+                self._rr.popleft()
+                del self._groups[gid]
+                continue
+            self._rr.rotate(-1)
+            q = self._groups[gid]
+            best = min(range(len(q)), key=lambda i: self._edf_key(q[i]))
+            return q.pop(best)
+        return None
+
+    def _requeue_front(self, req: TranscribeRequest) -> None:
+        self._groups[req.group].insert(0, req)
+        self._rr.rotate(1)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue_len:
+                continue
+            while True:
+                req = self._pop_round_robin()
+                if req is None or self.cost_model is None:
+                    break
+                now = self.bus.clock()
+                hopeless, est = self._infeasible(req, now)
+                if not hopeless:
+                    break
+                self._reject(req, est, now)
+            if req is None:
+                break
+            remaining = req.max_new - len(req.out)
+            reused = self.runtime.admit(i, req._feed, remaining)
+            if reused is None:           # decoder pool pressure
+                self._requeue_front(req)
+                break
+            adopted = self.runtime.admit_cross(i, req._audio_key)
+            if adopted is None:          # cross pool pressure: full
+                self.runtime.release(i)  # rollback, try again later
+                self._requeue_front(req)
+                break
+            self.slots[i] = req
+            self._pending[i] = list(req._feed[reused:])
+            if adopted:
+                self._audio_left[i] = 0  # whole chain shared: no encode
+                self.audio_hits += 1
+            else:
+                self._audio_left[i] = self.cfg.encoder_seq
+            self.cache = self._reset_fn(self.cache, jnp.int32(i))
+            if self.bus.admitted(req.rid):   # back from preemption
+                self.bus.emit(ev.Progress, req.rid, phase="resume",
+                              step=len(req.out), total=req.max_new)
+            else:
+                self.bus.emit(ev.Admitted, req.rid, slot=i)
+
+    def _preempt_slot(self, i: int, reason: str) -> None:
+        req = self.slots[i]
+        self.runtime.release(i)
+        self.runtime.release_cross(i)
+        self.slots[i] = None
+        self._pending[i] = []
+        self._audio_left[i] = 0
+        # Resume re-ingests prompt + generated-so-far; the audio chain,
+        # if published, is re-adopted at re-admission (encode skipped).
+        req._feed = list(req.prompt) + list(req.out)
+        self.preemptions += 1
+        self.bus.emit(ev.Preempted, req.rid, reason=reason)
+        self._enqueue(req)
+
+    def preempt(self, rid: int, reason: str = "explicit") -> bool:
+        """Evict a running request back to the wait queue (both pools
+        released, resume via re-adopt + re-prefill); True if ``rid``
+        held a slot."""
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                self._preempt_slot(i, reason)
+                return True
+        return False
+
+    # ------------------------------------------- fleet migration hooks
+    def evacuate(self, reason: str = "evacuate") -> list:
+        """Drain hook for fleet migration: preempt every running
+        request and pop every queued one; returns them in arrival
+        order with no terminal events, for a surviving replica to
+        ``adopt()``."""
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                self._preempt_slot(i, reason)
+        out = [r for q in self._groups.values() for r in q]
+        self._groups.clear()
+        self._rr.clear()
+        out.sort(key=lambda r: r._seq)
+        return out
+
+    def adopt(self, req: TranscribeRequest) -> ev.RequestHandle:
+        """Admit a request evacuated from another engine on the same
+        shared bus: no duplicate-rid guard, no submit-time rejection,
+        and the original absolute deadline is kept.  The adopting
+        engine re-encodes the audio from scratch (its own cross pool
+        has no published chain for it), which is bit-exact — the
+        encode is a pure function of the audio."""
+        need = len(req.prompt) + req.max_new - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"adopted rid {req.rid} needs capacity {need} > "
+                f"per-request max_len={self.max_len}")
+        req._feed = list(req.prompt) + list(req.out)
+        if not req._audio_key:
+            req._audio_key = audio_fingerprint(req.audio)
+        req._seq = self._subseq
+        self._subseq += 1
+        self._enqueue(req)
+        return self.handle(req.rid)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request wherever it is; a running request frees its
+        slot AND both pools' blocks immediately (decoder self-KV and
+        encoder cross-KV); emits terminal ``Cancelled``."""
+        for gid, q in self._groups.items():
+            for r in q:
+                if r.rid == rid:
+                    q.remove(r)
+                    self.bus.emit(ev.Cancelled, rid)
+                    return True
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                self.runtime.release(i)
+                self.runtime.release_cross(i)
+                self.slots[i] = None
+                self._pending[i] = []
+                self._audio_left[i] = 0
+                self.runtime.check_consistency()
+                self.bus.emit(ev.Cancelled, rid)
+                return True
+        return False
+
+    # ------------------------------------------------------- scheduling
+    def step(self) -> int:
+        """One scheduling quantum, encode-prioritized: pending audio
+        chunks first, then pending prompt chunks, else one batched
+        decode step; returns the number of requests progressed."""
+        if self.cost_model is not None and self.queue_len:
+            self._sweep_infeasible()
+        self._admit()
+        self._obs_sched()
+        for i, req in enumerate(self.slots):
+            if req is not None and self._audio_left[i]:
+                return self._encode_quantum(i)
+        for i, req in enumerate(self.slots):
+            if req is not None and self._pending[i]:
+                return self._prefill_quantum(i)
+        return self._decode_quantum()
+
+    def _obs_quantum(self, kind: str, t0: float, out, rids: list,
+                     args: dict | None = None) -> None:
+        if self.metrics is None:
+            return
+        jax.block_until_ready(out)
+        self.metrics.phase("asr", kind, t0, self.bus.clock(),
+                           rids=rids, args=args)
+
+    def _obs_sched(self) -> None:
+        if self.metrics is None:
+            return
+        self.metrics.gauge(
+            "engine_queue_depth", "queued requests by engine",
+            labels=("engine",)).set(self.queue_len, engine="asr")
+        self.metrics.gauge(
+            "asr_slots_active", "occupied transcription slots").set(
+            sum(1 for s in self.slots if s is not None))
+
+    def _observe_quantum(self, key: tuple, shape: tuple,
+                         t0: float, out) -> None:
+        if self.cost_model is None:
+            return
+        if shape not in self._cm_warm:
+            self._cm_warm.add(shape)
+            return
+        jax.block_until_ready(out)
+        self.cost_model.observe(key, self.bus.clock() - t0)
+
+    def _encode_quantum(self, i: int) -> int:
+        t0 = self.bus.clock()
+        req = self.slots[i]
+        se = self.cfg.encoder_seq
+        cursor = se - self._audio_left[i]
+        n = min(self.audio_chunk, self._audio_left[i])
+        frames = jnp.asarray(
+            np.asarray(req.audio)[None, cursor:cursor + n])
+        self._frame_buf, self.cache = self._encode_fn(
+            self.params, frames, jnp.int32(cursor), jnp.int32(i),
+            jnp.asarray(self.runtime.cross_tables[i], jnp.int32),
+            self._frame_buf, self.cache)
+        self._audio_left[i] -= n
+        req.encode_steps += 1
+        self.encode_quanta += 1
+        self.last_quantum = ("encode", 1)
+        if self.cost_model is not None:
+            self._observe_quantum(self.cost_model.asr_keys(self)[0],
+                                  ("encode", n), t0, self._frame_buf)
+        self._obs_quantum("encode", t0, self._frame_buf, [req.rid],
+                          args={"frames": n, "slot": i,
+                                "weight_quant": self.weight_quant})
+        self.bus.emit(ev.Progress, req.rid, phase="encode",
+                      step=cursor + n, total=se)
+        if self._audio_left[i] == 0 and self.audio_share:
+            # Publish at encode completion (not retirement): concurrent
+            # requests with the same audio share immediately.
+            self.runtime.publish_cross(i, req._audio_key)
+        return 1
+
+    def _prefill_quantum(self, i: int) -> int:
+        t0 = self.bus.clock()
+        req = self.slots[i]
+        chunk = self._pending[i][:self.prefill_chunk]
+        del self._pending[i][:len(chunk)]
+        pos = self.runtime.pos[i]
+        bs = self.runtime.block_size
+        for bi in range(pos // bs, cdiv(pos + len(chunk), bs)):
+            self.runtime.ensure_writable(i, bi * bs)
+        nxt, self.cache = self._prefill_raw(
+            self.params,
+            jnp.asarray([chunk], jnp.int32),
+            jnp.full((1,), pos, jnp.int32),
+            jnp.int32(i),
+            jnp.asarray([self.runtime.tables[i]], jnp.int32),
+            jnp.asarray([self.runtime.cross_tables[i]], jnp.int32),
+            self.cache)
+        self.runtime.pos[i] = pos + len(chunk)
+        req.prefill_steps += 1
+        self.prefill_quanta += 1
+        self.prefill_launches += 1 if self.fused_prefill else len(chunk)
+        self.last_quantum = ("prefill", 1)
+        if self.cost_model is not None:
+            self._observe_quantum(self.cost_model.asr_keys(self)[1],
+                                  ("prefill", len(chunk)), t0, nxt)
+        self._obs_quantum("prefill", t0, nxt, [req.rid],
+                          args={"tokens": len(chunk), "slot": i,
+                                "fused": self.fused_prefill,
+                                "quantized_kv": self.quantized_kv,
+                                "weight_quant": self.weight_quant})
+        self.bus.emit(ev.Progress, req.rid, phase="prefill",
+                      step=len(req._feed) - len(self._pending[i]),
+                      total=len(req._feed))
+        if not self._pending[i]:        # feed done: next token is out
+            tok = int(jax.device_get(nxt)[0])
+            req.out.append(tok)
+            self.bus.emit(ev.TokenDelta, req.rid, token=tok,
+                          pos=len(req.out) - 1)
+            self._next_tok[i] = tok
+            self._maybe_retire(i)
+        return 1
+
+    def _decode_quantum(self) -> int:
+        t0 = self.bus.clock()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            self.last_quantum = None
+            return 0
+        for i in active:
+            self.runtime.ensure_writable(i, self.runtime.pos[i])
+        positions = np.asarray(self.runtime.pos, np.int32)
+        tables = np.asarray(self.runtime.tables, np.int32)
+        ctables = np.asarray(self.runtime.cross_tables, np.int32)
+        nxt, self.cache = self.step_fn(
+            self.params, jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray(positions), jnp.asarray(tables),
+            jnp.asarray(ctables), self.cache)
+        self.decode_quanta += 1
+        self.last_quantum = ("decode", len(active))
+        nxt_host = jax.device_get(nxt)
+        if self.cost_model is not None:
+            self._observe_quantum(self.cost_model.asr_keys(self)[2],
+                                  ("decode",), t0, nxt)
+        self._obs_quantum("decode", t0, nxt,
+                          [self.slots[i].rid for i in active],
+                          args={"batch": len(active),
+                                "quantized_kv": self.quantized_kv,
+                                "weight_quant": self.weight_quant})
+        for i in active:
+            req = self.slots[i]
+            self.runtime.pos[i] += 1
+            tok = int(nxt_host[i])
+            req.out.append(tok)
+            req.decode_steps += 1
+            self.bus.emit(ev.TokenDelta, req.rid, token=tok,
+                          pos=len(req.out) - 1)
+            self._next_tok[i] = tok
+            self._maybe_retire(i)
+        return len(active)
+
+    def _maybe_retire(self, i: int) -> None:
+        req = self.slots[i]
+        over = len(req.out) >= req.max_new
+        hit_eos = req.eos is not None and req.out \
+            and req.out[-1] == req.eos
+        trunc = self.runtime.pos[i] >= self.max_len
+        if over or hit_eos or trunc:
+            req.done = True
+            self.finished.append(req)
+            # No decoder-prompt donation (prefix sharing is off: the
+            # decoder KV depends on the audio); the audio chain, if
+            # shared, already lives in the cross prefix cache.
+            self.runtime.release(i)
+            self.runtime.release_cross(i)
+            self.slots[i] = None
+            self._pending[i] = []
+            self.bus.emit(ev.Finished, req.rid, result=req)
+
+    def run(self, max_steps: int = 10_000) -> list[TranscribeRequest]:
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            self.step()
+        return list(self.finished)

@@ -30,6 +30,13 @@ keyed on a path the quantum doesn't take)::
     ("lm", model, "prefill", fused, quantized_kv, wq)   one prompt chunk
     ("lm", model, "decode",  quantized_kv, wq)          one batched token
 
+ASR (per ``AsrEngine`` scheduling quantum — the encoder-decoder
+modality adds an ingestion phase in front of the LM pair)::
+
+    ("asr", model, "encode-chunk", wq)                  one audio chunk
+    ("asr", model, "prefill", fused, quantized_kv, wq)  one prompt chunk
+    ("asr", model, "decode-token", quantized_kv, wq)    one batched token
+
 Seeding and refinement
 ----------------------
 
@@ -61,9 +68,16 @@ Consumers
   *predicted* to overrun (now + remaining tokens × decode cost past
   the deadline) instead of waiting for the overrun to happen.
 
-Estimates are intentionally simple: they ignore queueing delay and
-return ``None`` — "admit optimistically" — whenever a needed phase has
-never been observed.  Diffusion estimates DO apply a co-batching
+Estimates are intentionally simple: they return ``None`` — "admit
+optimistically" — whenever a needed phase has never been observed.
+Submit-time feasibility additionally charges :meth:`CostModel.queue_wait`
+— the summed estimates of already-queued work amortized over the
+engine's parallelism — so a request that is feasible in isolation but
+sits behind a deep queue is correctly ``Rejected`` up front.  The
+queue-wait term applies ONLY at submission: expiry sweeps and pop-time
+checks re-test against the service estimate alone (the wait already
+elapsed on the wall clock by then; charging it again would
+double-count).  Diffusion estimates DO apply a co-batching
 discount (queued requests sharing a group key ride one compiled
 program, so each one's expected cost is the program cost over the
 occupancy); the table itself persists across restarts via
@@ -75,7 +89,7 @@ from __future__ import annotations
 import json
 from typing import Any, Iterable
 
-from repro.engine.api import GenerateRequest, uses_cfg
+from repro.engine.api import GenerateRequest, TranscribeRequest, uses_cfg
 from repro.engine.diffusion_engine import steps_bucket
 from repro.engine.samplers import get_sampler
 
@@ -300,13 +314,87 @@ class CostModel:
         ndec = max(0, req.max_new - len(req.out) - (1 if pending else 0))
         return chunks * cp + ndec * cd
 
+    # ----------------------------------------------------- ASR phases
+    def asr_keys(self, eng: Any) -> tuple[tuple, tuple, tuple]:
+        """(encode key, prefill key, decode key) for an ``AsrEngine``.
+
+        Encode cost is per audio chunk: each quantum re-runs the full
+        encoder over the slot's frame buffer, so its cost is set by
+        ``cfg.encoder_seq``, not by how many frames the chunk added —
+        one key covers every chunk size."""
+        m = eng.cfg.name
+        wq = getattr(eng, "weight_quant", None)
+        return (("asr", m, "encode-chunk", wq),
+                ("asr", m, "prefill", eng.fused_prefill, eng.quantized_kv,
+                 wq),
+                ("asr", m, "decode-token", eng.quantized_kv, wq))
+
+    def estimate_asr(self, eng: Any, req: Any) -> float | None:
+        """Whole-request (or, after a preemption, remaining) service
+        time for a ``TranscribeRequest``: encode quanta for the full
+        audio span, chunked-prefill quanta for the decoder feed, one
+        batched decode quantum per token still to generate.  The
+        encode term is conservative — an audio prefix-cache adoption
+        would skip it, but admission can't know the cache state at the
+        request's eventual admit time.  ``None`` if any needed phase
+        was never observed."""
+        ke, kp, kd = self.asr_keys(eng)
+        ce, cp, cd = self.cost(ke), self.cost(kp), self.cost(kd)
+        if ce is None or cp is None or cd is None:
+            return None
+        enc = _cdiv(eng.cfg.encoder_seq, eng.audio_chunk)
+        feed = req._feed if req._feed else list(req.prompt)
+        chunks = _cdiv(max(1, len(feed)), eng.prefill_chunk)
+        ndec = max(0, req.max_new - len(req.out) - 1)
+        return enc * ce + chunks * cp + ndec * cd
+
+    def remaining_asr(self, eng: Any, slot: int) -> float | None:
+        """Remaining service time for the request running in ``slot``:
+        audio frames still to ingest, pending prefill chunks, then the
+        remaining decode tokens."""
+        req = eng.slots[slot]
+        if req is None:
+            return None
+        ke, kp, kd = self.asr_keys(eng)
+        ce, cp, cd = self.cost(ke), self.cost(kp), self.cost(kd)
+        if ce is None or cp is None or cd is None:
+            return None
+        left = eng._audio_left[slot]
+        enc = _cdiv(left, eng.audio_chunk) if left else 0
+        pending = len(eng._pending[slot])
+        chunks = _cdiv(pending, eng.prefill_chunk) if pending else 0
+        ndec = max(0, req.max_new - len(req.out) - (1 if pending else 0))
+        return enc * ce + chunks * cp + ndec * cd
+
     # ------------------------------------------------------- generic
     def estimate(self, engine: Any, request: Any) -> float | None:
         """Dispatch on request type: ``GenerateRequest`` -> diffusion,
-        anything else -> LM."""
+        ``TranscribeRequest`` -> ASR, anything else -> LM."""
         if isinstance(request, GenerateRequest):
             return self.estimate_diffusion(engine, request)
+        if isinstance(request, TranscribeRequest):
+            return self.estimate_asr(engine, request)
         return self.estimate_lm(engine, request)
+
+    def queue_wait(self, engine: Any) -> float:
+        """Expected queueing delay a newly submitted request inherits:
+        the summed service estimates of everything already queued,
+        amortized over the engine's admission parallelism (slot count
+        for the slotted engines; 1 for diffusion, whose queue drains
+        one program at a time — co-batching is already priced into the
+        per-request diffusion estimates).  Unobserved phases contribute
+        0 (optimistic, matching the ``None`` admission convention)."""
+        groups = getattr(engine, "_groups", None)
+        if groups is not None:
+            queued = [r for q in groups.values() for r in q]
+        else:
+            queued = list(getattr(engine, "queue", ()) or ())
+        total = 0.0
+        for r in queued:
+            total += self.estimate(engine, r) or 0.0
+        slots = getattr(engine, "slots", None)
+        par = len(slots) if isinstance(slots, list) and slots else 1
+        return total / par
 
 
 def calibrate(engine: Any, requests: Iterable[Any],

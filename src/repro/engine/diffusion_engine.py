@@ -298,6 +298,12 @@ class DiffusionEngine(ev.EventStreamMixin):
                                            self.bus.clock())
         if self.cost_model is not None and request.deadline_ms is not None:
             est = self.cost_model.estimate_diffusion(self, request)
+            if est is not None:
+                # Queueing-delay-aware admission: charge the expected
+                # wait behind already-queued work, so a feasible-in-
+                # isolation request behind a deep queue is rejected up
+                # front instead of expiring in the sweep later.
+                est += self.cost_model.queue_wait(self)
             budget = request.deadline_ms / 1e3
             if est is not None and est > budget:
                 self.rejections += 1
@@ -446,7 +452,7 @@ class DiffusionEngine(ev.EventStreamMixin):
                               step=0, total=gkey[1])
             else:
                 self.bus.emit(ev.Admitted, r.rid, slot=i)
-        if gkey[-1]:                     # preview_every > 0: segmented
+        if gkey[4]:                      # preview_every > 0: segmented
             self._start_segmented(batch, gkey)
             return self._segment_quantum()
         self._run_batch(batch, gkey)
@@ -537,9 +543,13 @@ class DiffusionEngine(ev.EventStreamMixin):
 
     def _group_key(self, req: GenerateRequest) -> tuple:
         fixed = samplers_mod.get_sampler(req.sampler).fixed_steps
+        # preview_decode joins the key only when previews actually
+        # stream (it is inert on the fused path), so plain requests
+        # never split batches over it.
         return (req.sampler, fixed or req.steps,
                 req.latent_hw or self.cfg.latent_hw, self._use_cfg(req),
-                req.preview_every)
+                req.preview_every,
+                bool(req.preview_every and req.preview_decode))
 
     def _counted_jit(self, key: tuple, inner: Callable) -> Callable:
         """Compile-cache lookup; wraps ``inner`` so ``self.traces``
@@ -583,7 +593,7 @@ class DiffusionEngine(ev.EventStreamMixin):
 
     # ------------------------------------------------- fused scan path
     def _run_batch(self, reqs: list[GenerateRequest], gkey: tuple) -> None:
-        sampler_name, steps, hw, use_cfg, _ = gkey
+        sampler_name, steps, hw, use_cfg = gkey[:4]
         toks, negs, scales, noises = self._pack(reqs, hw)
         sbucket = steps_bucket(steps)
         sampler = samplers_mod.get_sampler(sampler_name)
@@ -607,7 +617,7 @@ class DiffusionEngine(ev.EventStreamMixin):
     # ------------------------------------------------- segmented path
     def _start_segmented(self, reqs: list[GenerateRequest],
                          gkey: tuple) -> None:
-        sampler_name, steps, hw, use_cfg, _ = gkey
+        sampler_name, steps, hw, use_cfg = gkey[:4]
         toks, negs, scales, noises = self._pack(reqs, hw)
         enc = self._counted_jit(("enc", use_cfg, self.max_batch),
                                 build_encode(self.cfg, use_cfg))
@@ -652,10 +662,36 @@ class DiffusionEngine(ev.EventStreamMixin):
                               "weight_quant": self.weight_quant})
         st["i"] = i + 1
         sampler = samplers_mod.get_sampler(sampler_name)
+        at_stride = [(row, r) for row, r in live
+                     if st["i"] % r.preview_every == 0 or st["i"] == steps]
+        pv_imgs = None
+        if any(r.preview_decode for _row, r in at_stride):
+            # Pixel-space previews: run the (cached) finalize+VAE
+            # program on the current latent.  Same compiled program as
+            # the final decode — co-batched rows share one launch, and
+            # preview_decode is in the group key so every row opted in.
+            dec = self._counted_jit(("dec", sampler_name, hw,
+                                     self.max_batch),
+                                    build_finalize_decode(self.cfg,
+                                                          sampler_name))
+            t0, tr0 = self.bus.clock(), self.traces
+            pv_imgs = dec(self.params, st["x"])
+            self._observe(("diff", self.cfg.name, "vae", hw,
+                           self.max_batch, self.weight_quant), t0, tr0,
+                          pv_imgs)
+            self._obs_phase("vae", t0, pv_imgs,
+                            [r.rid for _row, r in at_stride],
+                            args={"preview": True,
+                                  "weight_quant": self.weight_quant})
         for row, r in live:
             self.bus.emit(ev.Progress, r.rid, step=st["i"], total=steps,
                           phase="denoise")
-            if st["i"] % r.preview_every == 0 or st["i"] == steps:
+        for row, r in at_stride:
+            if r.preview_decode and pv_imgs is not None:
+                self.bus.emit(ev.PreviewLatent, r.rid, step=st["i"],
+                              total=steps, latent=pv_imgs[row],
+                              decoded=True)
+            else:
                 self.bus.emit(ev.PreviewLatent, r.rid, step=st["i"],
                               total=steps,
                               latent=sampler.finalize(st["x"][row]))

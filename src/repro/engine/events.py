@@ -86,17 +86,21 @@ class TokenDelta(Event):
 @dataclasses.dataclass(frozen=True)
 class PreviewLatent(Event):
     """Diffusion x0-space working latent after ``step`` of ``total``
-    denoise steps (decode it with the VAE for a visual preview)."""
+    denoise steps.  ``decoded`` marks requests submitted with
+    ``preview_decode=True``: ``latent`` then already carries the
+    VAE-decoded (H, W, 3) pixel image; otherwise decode it with the
+    VAE for a visual preview."""
     step: int = 0
     total: int = 0
     latent: Any = None
+    decoded: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
 class Progress(Event):
     """Phase heartbeat: ``phase`` is ``"prefill"`` (one prompt chunk),
-    ``"denoise"`` (one diffusion step), or ``"resume"`` (re-admission
-    after preemption)."""
+    ``"denoise"`` (one diffusion step), ``"encode"`` (one ASR audio
+    chunk), or ``"resume"`` (re-admission after preemption)."""
     step: int = 0
     total: int = 0
     phase: str = "decode"

@@ -5,8 +5,10 @@ workloads, and its companion LLM-on-CGLA study evaluates exactly the
 multi-unit scale-out axis: many identical accelerator units behind one
 host.  :class:`FleetManager` is that host role — it fronts N
 data-parallel engine replicas (each a ``DiffusionEngine``, an LM
-``ContinuousBatcher``, or an :class:`~repro.engine.router.EngineRouter`
-over both, instantiated in-process from a :class:`ReplicaSpec`) behind
+``ContinuousBatcher``, an ASR
+:class:`~repro.engine.asr_engine.AsrEngine`, or an
+:class:`~repro.engine.router.EngineRouter` over any mix,
+instantiated in-process from a :class:`ReplicaSpec`) behind
 the same ``submit()``/``step()``/``stream()``/``cancel()`` ``Engine``
 protocol on ONE shared :class:`~repro.engine.events.EventBus`, so hosts
 and benchmarks are replica-count-agnostic: a handle from a fleet pumps
@@ -45,6 +47,15 @@ determines the initial latent, so a restart is bit-identical to an
 uninterrupted run).  Re-admission emits ``Progress(phase="resume")``,
 never a second ``Admitted``, and never double-runs a request.
 
+**Replacement (opt-in)**: with ``replace_evicted=True`` an eviction
+(except a planned ``drain``) immediately rebuilds a fresh replica from
+the evicted slot's :class:`ReplicaSpec` — new engine, new health state
+machine, a ``~N``-suffixed name for uniqueness — *before* migration,
+so the evacuated requests can land on the replacement and fleet
+capacity recovers instead of decaying toward zero across faults
+(``stats()["replacements"]`` records each respawn; the gating
+``fleet_smoke`` asserts post-kill capacity recovery).
+
 **Fault injection** is deterministic and test-facing:
 :class:`FaultInjector` kills (raise at the replica's K-th quantum),
 hangs (infinite observed step time from quantum K on), or slows
@@ -62,7 +73,8 @@ from typing import Any, Callable, Iterator
 from repro.distributed.fault_tolerance import (DRAINING, EVICTED,
                                                ReplicaHealth, Watchdog)
 from repro.engine import events as ev
-from repro.engine.api import GenerateRequest
+from repro.engine.api import GenerateRequest, TranscribeRequest
+from repro.engine.asr_engine import AsrEngine
 from repro.engine.diffusion_engine import DiffusionEngine
 from repro.engine.router import EngineRouter
 
@@ -147,6 +159,7 @@ class FleetManager(ev.EventStreamMixin):
                  watchdog_threshold: float = 3.0,
                  watchdog_alpha: float = 0.2,
                  suspect_limit: int = 2,
+                 replace_evicted: bool = False,
                  metrics=None):
         if not specs:
             raise ValueError("fleet needs at least one replica")
@@ -155,23 +168,35 @@ class FleetManager(ev.EventStreamMixin):
         self.bus = ev.EventBus(clock)
         self.injector = injector
         self.metrics = metrics          # None -> no instrumentation
+        self.replace_evicted = replace_evicted
+        self._wd_params = (watchdog_threshold, watchdog_alpha,
+                           suspect_limit)
         self.replicas: list[_Replica] = []
         for spec in specs:
-            engine = spec.build()
-            self._rebind(engine)
-            self.replicas.append(_Replica(
-                spec, engine,
-                ReplicaHealth(Watchdog(threshold=watchdog_threshold,
-                                       alpha=watchdog_alpha),
-                              suspect_limit=suspect_limit,
-                              name=spec.name, metrics=metrics)))
+            self._spawn(spec)
         self._owner: dict[int, _Replica] = {}     # rid -> replica
         self._est: dict[int, float] = {}          # rid -> placed estimate
         self._rr_place = 0                        # placement tie rotation
         self._rr_step = 0                         # urgency tie rotation
         self.migrations = 0
         self.evictions: list[tuple[str, str]] = []
+        self.replacements: list[tuple[str, str]] = []  # evicted -> fresh
+        self._respawns = 0
         self.lost: list[int] = []     # rids with no survivor to adopt them
+
+    def _spawn(self, spec: ReplicaSpec) -> _Replica:
+        """Build one replica from its spec, rebind it onto the shared
+        bus, and register it with a fresh health state machine."""
+        threshold, alpha, suspect_limit = self._wd_params
+        engine = spec.build()
+        self._rebind(engine)
+        rep = _Replica(
+            spec, engine,
+            ReplicaHealth(Watchdog(threshold=threshold, alpha=alpha),
+                          suspect_limit=suspect_limit,
+                          name=spec.name, metrics=self.metrics))
+        self.replicas.append(rep)
+        return rep
 
     def _rebind(self, engine: Any) -> None:
         """Move a replica (and, for a router, the engines behind it)
@@ -189,11 +214,17 @@ class FleetManager(ev.EventStreamMixin):
         """The concrete engine inside ``engine`` that would serve
         ``request`` (None if the replica cannot take this type)."""
         if isinstance(engine, EngineRouter):
-            return (engine.diffusion if isinstance(request, GenerateRequest)
-                    else engine.lm)
+            if isinstance(request, GenerateRequest):
+                return engine.diffusion
+            if isinstance(request, TranscribeRequest):
+                return engine.asr
+            return engine.lm
         if isinstance(request, GenerateRequest):
             return engine if isinstance(engine, DiffusionEngine) else None
-        return None if isinstance(engine, DiffusionEngine) else engine
+        if isinstance(request, TranscribeRequest):
+            return engine if isinstance(engine, AsrEngine) else None
+        return (None if isinstance(engine, (DiffusionEngine, AsrEngine))
+                else engine)
 
     def _estimate(self, rep: _Replica, request: Any) -> float | None:
         sub = self._serving_engine(rep.engine, request)
@@ -353,6 +384,22 @@ class FleetManager(ev.EventStreamMixin):
             self.metrics.counter(
                 "fleet_evictions_total", "replica evictions",
                 labels=("replica",)).inc(replica=rep.spec.name)
+        if self.replace_evicted and reason != "drained":
+            # Capacity self-healing: rebuild a fresh replica from the
+            # evicted slot's spec (new params/cache/health, suffixed
+            # name for uniqueness) BEFORE migrating, so the evacuated
+            # requests can land on the replacement too.  Drained
+            # replicas are deliberate removals and are not replaced.
+            fresh = ReplicaSpec(f"{rep.spec.name}~{self._respawns}",
+                                rep.spec.build)
+            self._respawns += 1
+            self._spawn(fresh)
+            self.replacements.append((rep.spec.name, fresh.name))
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "fleet_replacements_total",
+                    "fresh replicas spawned after evictions",
+                    labels=("replica",)).inc(replica=fresh.name)
         moved = rep.engine.evacuate("replica-evicted")
         for req in moved:
             cands = self._dispatchable(req)
@@ -405,5 +452,6 @@ class FleetManager(ev.EventStreamMixin):
             } for r in self.replicas],
             "migrations": self.migrations,
             "evictions": list(self.evictions),
+            "replacements": list(self.replacements),
             "lost": list(self.lost),
         }

@@ -1,20 +1,23 @@
-"""SLO-aware multiplexer: one streaming surface over both engines.
+"""SLO-aware multiplexer: one streaming surface over every engine.
 
 The paper serves Stable Diffusion and LM decode on the same
-general-purpose platform; :class:`EngineRouter` is the host-side
-counterpart — a single ``submit()/step()/stream()/cancel()`` surface
-multiplexing a :class:`repro.engine.DiffusionEngine` and an LM
-``serving.ContinuousBatcher`` (any object with the structural
-``Engine`` protocol plus ``has_work()``/``next_deadline()``/``bus``)
-in one host loop:
+general-purpose platform (and its companion Whisper study adds speech
+recognition); :class:`EngineRouter` is the host-side counterpart — a
+single ``submit()/step()/stream()/cancel()`` surface multiplexing a
+:class:`repro.engine.DiffusionEngine`, an LM
+``serving.ContinuousBatcher``, and an encoder-decoder
+:class:`repro.engine.asr_engine.AsrEngine` (any object with the
+structural ``Engine`` protocol plus
+``has_work()``/``next_deadline()``/``bus``) in one host loop:
 
 * **Dispatch** — :class:`repro.engine.api.GenerateRequest` goes to the
-  diffusion engine, everything else (``serving.Request``) to the LM
-  engine; rids must be globally unique across the router.
-* **One event bus** — at construction the router rebinds both engines
+  diffusion engine, :class:`repro.engine.api.TranscribeRequest` to the
+  ASR engine, everything else (``serving.Request``) to the LM engine;
+  rids must be globally unique across the router.
+* **One event bus** — at construction the router rebinds all engines
   onto a single :class:`~repro.engine.events.EventBus` (they must not
   have emitted yet), so ``stream()`` yields a totally-ordered merge of
-  diffusion and LM events with no cross-bus reconciliation, and the
+  every modality's events with no cross-bus reconciliation, and the
   handles it returns pump the *router* (all multiplexed work keeps
   moving while a consumer waits on one request).
 * **SLO-aware scheduling** — each ``step()`` advances the engine whose
@@ -40,21 +43,23 @@ from __future__ import annotations
 from typing import Any, Iterator
 
 from repro.engine import events as ev
-from repro.engine.api import GenerateRequest
+from repro.engine.api import GenerateRequest, TranscribeRequest
 
 
 class EngineRouter(ev.EventStreamMixin):
-    """Multiplexes a diffusion engine and an LM engine behind one
-    streaming Engine surface (either may be ``None``)."""
+    """Multiplexes diffusion, LM, and ASR engines behind one streaming
+    Engine surface (any may be ``None``, at least one required)."""
 
     def __init__(self, diffusion: Any = None, lm: Any = None,
-                 metrics=None):
-        if diffusion is None and lm is None:
+                 asr: Any = None, metrics=None):
+        if diffusion is None and lm is None and asr is None:
             raise ValueError("router needs at least one engine")
         self.diffusion = diffusion
         self.lm = lm
+        self.asr = asr
         self.metrics = metrics          # None -> no instrumentation
-        self.engines = [e for e in (diffusion, lm) if e is not None]
+        self.engines = [e for e in (diffusion, lm, asr)
+                        if e is not None]
         # Rebind every engine onto one shared bus (single clock, one
         # total event order).  Refuse once events exist: merging
         # populated buses would reorder history.
@@ -69,15 +74,22 @@ class EngineRouter(ev.EventStreamMixin):
         self._owner: dict[int, Any] = {}      # rid -> engine
         self._rr = 0                          # deadline-tie rotation
 
+    def _dispatch(self, request: Any) -> Any:
+        if isinstance(request, GenerateRequest):
+            return self.diffusion
+        if isinstance(request, TranscribeRequest):
+            return self.asr
+        return self.lm
+
     # --------------------------------------------------------------- API
     def submit(self, request: Any) -> ev.RequestHandle:
-        engine = (self.diffusion if isinstance(request, GenerateRequest)
-                  else self.lm)
+        engine = self._dispatch(request)
         if engine is None:
             raise ValueError(
                 f"no engine for {type(request).__name__} "
                 f"(router has diffusion={self.diffusion is not None}, "
-                f"lm={self.lm is not None})")
+                f"lm={self.lm is not None}, "
+                f"asr={self.asr is not None})")
         if request.rid in self._owner:
             raise ValueError(f"duplicate rid {request.rid} across router")
         engine.submit(request)
@@ -132,8 +144,7 @@ class EngineRouter(ev.EventStreamMixin):
         engines' ``adopt()``): dispatched by type like ``submit()`` but
         without the duplicate-rid guard — the rid's prior admission
         lives on the shared bus."""
-        engine = (self.diffusion if isinstance(request, GenerateRequest)
-                  else self.lm)
+        engine = self._dispatch(request)
         if engine is None:
             raise ValueError(
                 f"no engine for adopted {type(request).__name__}")
@@ -166,17 +177,18 @@ class EngineRouter(ev.EventStreamMixin):
                 "scheduling quanta granted by the router, per engine",
                 labels=("engine",)).inc(
                 engine="diffusion" if engine is self.diffusion
-                else "lm")
+                else ("asr" if engine is self.asr else "lm"))
         return engine.step()
 
     def run(self, max_steps: int = 100_000) -> list:
         """Drain-the-stream compatibility wrapper: returns every
         ``Finished`` payload in completion order (mixed types:
-        ``GenerateResult`` and LM ``Request`` objects)."""
+        ``GenerateResult``, LM ``Request``, and ``TranscribeRequest``
+        objects)."""
         return [e.result for e in self.stream(max_steps)
                 if isinstance(e, ev.Finished)]
 
     def stream(self, max_steps: int = 100_000) -> Iterator[ev.Event]:
-        """Merged event stream over both engines (see
+        """Merged event stream over every engine (see
         :class:`~repro.engine.events.EventStreamMixin`)."""
         return super().stream(max_steps)

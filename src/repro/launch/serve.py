@@ -25,6 +25,12 @@ refined table is written back after the run.  ``--replicas N`` fronts
 N data-parallel engine replicas with a ``FleetManager`` (shared event
 bus, cost-balanced dispatch, watchdog-driven health) instead of one
 engine — the rest of the host loop is unchanged, which is the point.
+``--asr`` (with an encoder-decoder ``--arch`` such as
+``whisper-large-v3``) serves streaming transcription through the
+``AsrEngine`` instead: synthetic audio-frame embeddings are ingested
+in encode quanta into the paged cross-attention pool, and the same
+event loop reports transcripts, audio-prefix-cache hits, and
+per-phase (encode/prefill/decode) quanta.
 Runs reduced configs on CPU; on TPU the same path serves full configs
 with TP-only weight sharding (no FSDP — see DESIGN.md) and the Pallas
 fused-dequant kernels.
@@ -41,8 +47,10 @@ import numpy as np
 from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
-from repro.engine import (CostModel, Finished, FleetManager, Rejected,
-                          ReplicaSpec, TokenDelta, calibrate)
+from repro.engine import (AsrEngine, CostModel, Finished, FleetManager,
+                          Rejected, ReplicaSpec, TokenDelta,
+                          TranscribeRequest, calibrate)
+from repro.models.frontend import synthetic_audio
 from repro.models.transformer import init_lm
 from repro.serving import ContinuousBatcher, Request
 
@@ -58,6 +66,13 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request SLO budget (EDF admission)")
+    ap.add_argument("--asr", action="store_true",
+                    help="serve streaming transcription through the "
+                         "AsrEngine instead of LM decode (requires an "
+                         "encoder-decoder --arch, e.g. "
+                         "whisper-large-v3); audio embeddings are "
+                         "synthetic frontend stubs, repeated across "
+                         "slots so the audio prefix cache shows hits")
     ap.add_argument("--admission", action="store_true",
                     help="attach a phase-aware cost model: reject "
                          "requests whose estimated service time "
@@ -91,11 +106,19 @@ def main() -> None:
     qp = quantize_params(params, policy)
     print(f"{cfg.name} [{policy.name}]: {param_bytes(qp)/1e6:.1f} MB")
 
+    if args.asr and not cfg.is_enc_dec:
+        raise SystemExit(f"--asr needs an encoder-decoder arch; "
+                         f"{cfg.name} is decoder-only")
     n_requests = args.requests or args.slots
     inp = smoke_inputs(jax.random.PRNGKey(1), cfg, batch=args.slots,
                        seq=args.prompt_len)
-    max_len = ContinuousBatcher.required_len(n_requests, args.slots,
-                                             args.prompt_len, args.gen)
+    if args.asr:
+        max_len = AsrEngine.required_len(args.prompt_len, args.gen)
+        audios = [synthetic_audio(jax.random.PRNGKey(100 + i), cfg)
+                  for i in range(args.slots)]
+    else:
+        max_len = ContinuousBatcher.required_len(n_requests, args.slots,
+                                                 args.prompt_len, args.gen)
     tele = None
     if args.metrics_out or args.trace_out:
         from repro.obs import Telemetry, TraceRecorder
@@ -116,6 +139,9 @@ def main() -> None:
     def build_engine():
         # One shared CostModel instance across replicas: any replica's
         # observed quanta refine every replica's estimates.
+        if args.asr:
+            return AsrEngine(qp, cfg, slots=args.slots, max_len=max_len,
+                             cost_model=cm, metrics=tele)
         return ContinuousBatcher(qp, cfg, slots=args.slots,
                                  max_len=max_len,
                                  enc_embeds=inp.get("enc_embeds"),
@@ -135,20 +161,32 @@ def main() -> None:
         # the bus object itself.
         tele.attach(engine.bus)
     prompts = np.asarray(inp["tokens"])
+
+    def make_req(rid, i, deadline_ms=None):
+        if args.asr:
+            return TranscribeRequest(
+                rid=rid, audio=audios[i % args.slots],
+                prompt=prompts[i % args.slots].tolist(),
+                max_new=args.gen, deadline_ms=deadline_ms)
+        return Request(rid=rid, prompt=prompts[i % args.slots].tolist(),
+                       max_new=args.gen, deadline_ms=deadline_ms)
+
     if cm is not None and not restored:
         # Calibration micro-run: one deadline-free request per compiled
         # shape seeds the per-phase cost table (and pre-compiles, so
         # workload estimates don't include trace time).
-        calibrate(engine, [Request(rid=-1 - w,
-                                   prompt=prompts[0].tolist(),
-                                   max_new=args.gen)
+        calibrate(engine, [make_req(-1 - w, 0)
                            for w in range(2 * args.replicas)])
     if cm is not None:
-        kp, kd = cm.lm_keys(batchers[0])
-        print(f"calibrated: prefill chunk "
-              f"{(cm.cost(kp) or 0) * 1e3:.1f} ms, "
-              f"decode token "
-              f"{(cm.cost(kd) or 0) * 1e3:.1f} ms")
+        if args.asr:
+            ke, kp, kd = cm.asr_keys(batchers[0])
+            print(f"calibrated: encode chunk "
+                  f"{(cm.cost(ke) or 0) * 1e3:.1f} ms, ", end="")
+        else:
+            kp, kd = cm.lm_keys(batchers[0])
+            print("calibrated: ", end="")
+        print(f"prefill chunk {(cm.cost(kp) or 0) * 1e3:.1f} ms, "
+              f"decode token {(cm.cost(kd) or 0) * 1e3:.1f} ms")
     # Counter baselines so the summary reports workload quanta only
     # (the calibration micro-run above consumed some already).
     q0p = sum(b.prefill_quanta for b in batchers)
@@ -156,10 +194,7 @@ def main() -> None:
     submit_ts = {}
     for r in range(n_requests):
         submit_ts[r] = engine.bus.clock()
-        engine.submit(Request(rid=r,
-                              prompt=prompts[r % args.slots].tolist(),
-                              max_new=args.gen,
-                              deadline_ms=args.deadline_ms))
+        engine.submit(make_req(r, r, deadline_ms=args.deadline_ms))
     t0 = time.time()
     done, ttft, rejected = [], {}, []
     for e in engine.stream():
@@ -172,9 +207,14 @@ def main() -> None:
             rejected.append(e)
     dt = time.time() - t0
     n_tok = sum(len(d.prompt) + len(d.out) for d in done)
+    enc = (f"{sum(b.encode_quanta for b in batchers)} encode + "
+           if args.asr else "")
+    hits = (f", {sum(b.audio_hits for b in batchers)} audio-cache hits"
+            if args.asr else "")
     print(f"served {len(done)} requests / {n_tok} tokens in {dt:.2f}s "
-          f"({sum(b.prefill_quanta for b in batchers) - q0p} prefill + "
-          f"{sum(b.decode_quanta for b in batchers) - q0d} decode quanta)")
+          f"({enc}{sum(b.prefill_quanta for b in batchers) - q0p} prefill"
+          f" + {sum(b.decode_quanta for b in batchers) - q0d} decode "
+          f"quanta{hits})")
     if args.replicas > 1:
         for rs in engine.stats()["replicas"]:
             print(f"  {rs['name']}: {rs['state']}, {rs['steps']} quanta")

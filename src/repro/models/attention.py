@@ -388,20 +388,70 @@ def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     return apply_linear(p["wo"], out), new
 
 
-def cross_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
-                           enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
-    """Decode-time cross attention against precomputed encoder KV.
+def _cross_attend(p: dict, cfg: ModelConfig, x: jax.Array,
+                  keys: jax.Array, vals: jax.Array,
+                  valid: jax.Array | None) -> jax.Array:
+    """Shared cross-attention core: (B, T, d) queries against fixed
+    encoder keys/vals (B, Hkv, C, hd), optional validity mask (B, C).
 
-    enc_k/enc_v: (B, Hkv, S_enc, hd)."""
-    b = x.shape[0]
-    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
+    Cross attention is non-causal over a *fixed* KV set, so every query
+    position is independent — chunk-at-once is bit-identical in
+    structure to per-token, which is what lets enc-dec prefill ride the
+    fused path.  NaN bytes in masked positions (recycled paged blocks)
+    are neutralized the same way as ``_update_read_paged``: -inf on the
+    logits kills the probability, an explicit zero kills the value
+    (0 * NaN = NaN otherwise).
+    """
+    b, t, _ = x.shape
     g = cfg.num_heads // cfg.num_kv_heads
-    qg = q.reshape(b, cfg.num_kv_heads, g, cfg.hd)
-    logits = jnp.einsum("bhgd,bhcd->bhgc", qg.astype(enc_k.dtype), enc_k,
+    q = _split_heads(apply_linear(p["wq"], x), cfg.num_heads)
+    # (B, Hq, T, hd) -> (B, Hkv, G, T, hd); head order kv*G + g matches
+    # attention_decode's grouping.
+    qg = q.reshape(b, cfg.num_kv_heads, g, t, cfg.hd)
+    logits = jnp.einsum("bhgtd,bhcd->bhgtc", qg.astype(keys.dtype), keys,
                         preferred_element_type=jnp.float32) \
         * (cfg.hd ** -0.5)
+    if valid is not None:
+        vals = jnp.where(valid[:, None, :, None], vals, 0)
+        logits = jnp.where(valid[:, None, None, None, :], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgc,bhcd->bhgd", probs.astype(enc_v.dtype), enc_v,
+    out = jnp.einsum("bhgtc,bhcd->bhgtd", probs.astype(vals.dtype), vals,
                      preferred_element_type=jnp.float32)
-    out = out.reshape(b, 1, cfg.num_heads * cfg.hd).astype(x.dtype)
-    return apply_linear(p["wo"], out)
+    out = out.reshape(b, cfg.num_heads, t, cfg.hd)
+    return apply_linear(p["wo"], _merge_heads(out).astype(x.dtype))
+
+
+def cross_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                           enc_k: jax.Array, enc_v: jax.Array,
+                           enc_valid: jax.Array | None = None) -> jax.Array:
+    """Cross attention against precomputed contiguous encoder KV.
+
+    x: (B, T, d) — T == 1 for decode, T > 1 for fused chunk prefill.
+    enc_k/enc_v: (B, Hkv, S_enc, hd); ``enc_valid`` (B, S_enc) masks a
+    ragged encoder tail when present."""
+    return _cross_attend(p, cfg, x, enc_k, enc_v, enc_valid)
+
+
+def cross_attention_paged(p: dict, cfg: ModelConfig, x: jax.Array,
+                          cross_tables: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, *, enc_len: int) -> jax.Array:
+    """Cross attention reading encoder KV from the paged cross pool.
+
+    x: (B, T, d) queries; cross_tables: (B, MBc) int32 rows into the
+    bf16 pools (NBc, Hkv, cbs, hd) written once per request by
+    ``write_cross_kv``.  ``enc_len`` (static) masks the partial tail
+    block — positions >= enc_len in the gathered window are recycled
+    bytes, not encoder states.
+    """
+    b = x.shape[0]
+    cbs = k_pool.shape[2]
+    mb = cross_tables.shape[1]
+
+    def gather(pool):
+        g = pool[cross_tables]                   # (B, MBc, Hkv, cbs, hd)
+        g = g.transpose(0, 2, 1, 3, 4)
+        return g.reshape(b, g.shape[1], mb * cbs, g.shape[-1])
+
+    valid = jnp.broadcast_to(jnp.arange(mb * cbs)[None, :] < enc_len,
+                             (b, mb * cbs))
+    return _cross_attend(p, cfg, x, gather(k_pool), gather(v_pool), valid)

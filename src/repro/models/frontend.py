@@ -27,3 +27,10 @@ def vision_frontend_shape(cfg: ModelConfig, batch: int) -> tuple:
 
 def synthetic_frontend(key: jax.Array, shape: tuple) -> jax.Array:
     return jax.random.normal(key, shape, jnp.bfloat16) * 0.02
+
+
+def synthetic_audio(key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """One request's worth of synthetic audio-frame embeddings —
+    ``(encoder_seq, d_model)``, the tensor a ``TranscribeRequest``
+    carries (unbatched: the ASR engine streams it per slot)."""
+    return synthetic_frontend(key, audio_frontend_shape(cfg, 1))[0]

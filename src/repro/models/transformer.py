@@ -280,23 +280,40 @@ def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
                *, quantized_kv: bool = False,
                enc_embeds: jax.Array | None = None,
                block_size: int | None = None,
-               num_blocks: int | None = None) -> Any:
+               num_blocks: int | None = None,
+               cross_block_size: int | None = None,
+               cross_num_blocks: int | None = None) -> Any:
     """Stacked per-period cache pytree (+ precomputed cross KV).
 
     With ``block_size``/``num_blocks`` set, self-attention KV uses the
     *paged* block-pool layout (one (num_blocks, Hkv, block_size, hd)
     pool per attn layer; slot -> block mapping lives host-side in
-    ``serving.kvcache``).  Recurrent (SSM / xLSTM) states and the
-    precomputed cross KV stay slot-indexed either way.
+    ``serving.kvcache``).  Recurrent (SSM / xLSTM) states stay
+    slot-indexed either way.
+
+    Enc-dec cross KV has two layouts: by default it is precomputed
+    *here* from ``enc_embeds`` (contiguous (B, Hkv, S_enc, hd) rows —
+    the legacy/serving-scheduler path).  With ``cross_block_size`` /
+    ``cross_num_blocks`` set the cross KV becomes a *paged* bf16 pool
+    (cross_num_blocks, Hkv, cross_block_size, hd) per attn layer,
+    initialized empty — the ASR engine encodes audio incrementally and
+    scatters projections in later via :func:`write_cross_kv`, so no
+    ``enc_embeds`` are consumed here.
     """
     kinds = _period_kinds(cfg)
     plen = len(kinds)
     n_periods = cfg.num_layers // plen
     if (block_size is None) != (num_blocks is None):
         raise ValueError("paged cache needs both block_size and num_blocks")
+    if (cross_block_size is None) != (cross_num_blocks is None):
+        raise ValueError("paged cross cache needs both cross_block_size "
+                         "and cross_num_blocks")
+    paged_cross = cross_block_size is not None
+    if paged_cross and not cfg.is_enc_dec:
+        raise ValueError("cross pool requested for a non-enc-dec config")
 
     enc_out = None
-    if cfg.is_enc_dec:
+    if cfg.is_enc_dec and not paged_cross:
         enc_out = encoder_forward(params, cfg, enc_embeds)
 
     def one_layer(j: int, period: int):
@@ -316,7 +333,12 @@ def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
             mlstm = ssm_mod.init_mlstm_state(batch, cfg)
         elif kind == "slstm":
             slstm = ssm_mod.init_slstm_state(batch, cfg)
-        if cfg.is_enc_dec:
+        if cfg.is_enc_dec and paged_cross:
+            cshape = (cross_num_blocks, cfg.num_kv_heads,
+                      cross_block_size, cfg.hd)
+            ck = jnp.zeros(cshape, jnp.bfloat16)
+            cv = jnp.zeros(cshape, jnp.bfloat16)
+        elif cfg.is_enc_dec:
             layer_p = jax.tree.map(lambda a: a[period],
                                    params["layers"][j]["cross"])
             src = enc_out
@@ -336,8 +358,59 @@ def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
     return jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
 
 
+def write_cross_kv(params: dict, cfg: ModelConfig, enc_out: jax.Array,
+                   cross_table: jax.Array, cache: Any) -> Any:
+    """Project finished encoder output into one slot's cross blocks.
+
+    enc_out: (1, S_enc, d) — the encoder states for ONE request;
+    cross_table: (MBc,) int32 — the slot's cross-block row.  For every
+    decoder layer, K/V projections are computed once here and scattered
+    into that layer's paged bf16 cross pool; the partial tail block is
+    zero-padded (readers mask ``idx < enc_len``).  Runs once per
+    request, at encode completion.  Returns the updated cache.
+    """
+    kinds = _period_kinds(cfg)
+    se = enc_out.shape[1]
+    cbs = cache[0].cross_k.shape[3]      # (P, NBc, Hkv, cbs, hd)
+    mb = cross_table.shape[0]
+    pad = mb * cbs - se
+
+    def write_one(layer_p, ck, cv):
+        # layer_p: one period's cross params; ck/cv: (NBc, Hkv, cbs, hd)
+        def to_blocks(t):
+            t = t[0].reshape(se, cfg.num_kv_heads, cfg.hd).transpose(1, 0, 2)
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+            t = t.reshape(cfg.num_kv_heads, mb, cbs, cfg.hd)
+            return t.transpose(1, 0, 2, 3).astype(ck.dtype)
+        return (ck.at[cross_table].set(to_blocks(
+                    apply_linear(layer_p["wk"], enc_out))),
+                cv.at[cross_table].set(to_blocks(
+                    apply_linear(layer_p["wv"], enc_out))))
+
+    new = []
+    for j in range(len(kinds)):
+        ck, cv = jax.vmap(write_one)(params["layers"][j]["cross"],
+                                     cache[j].cross_k, cache[j].cross_v)
+        new.append(cache[j]._replace(cross_k=ck, cross_v=cv))
+    return new
+
+
+def _block_cross(p: dict, cfg: ModelConfig, x, cache: LayerCache,
+                 cross_tables):
+    """Cross-attention residual shared by decode and fused prefill:
+    paged pool read when ``cross_tables`` is given, contiguous
+    precomputed rows otherwise."""
+    h = _apply_norm(cfg, p["norm_x"], x)
+    if cross_tables is not None:
+        return x + attn_mod.cross_attention_paged(
+            p["cross"], cfg, h, cross_tables, cache.cross_k, cache.cross_v,
+            enc_len=cfg.encoder_seq)
+    return x + attn_mod.cross_attention_decode(p["cross"], cfg, h,
+                                               cache.cross_k, cache.cross_v)
+
+
 def _block_decode(p: dict, cfg: ModelConfig, kind: str, x, pos,
-                  cache: LayerCache, block_tables=None):
+                  cache: LayerCache, block_tables=None, cross_tables=None):
     h = _apply_norm(cfg, p["norm1"], x)
     rope = cfg.pos_embed == "rope"
     if kind == "attn":
@@ -358,21 +431,23 @@ def _block_decode(p: dict, cfg: ModelConfig, kind: str, x, pos,
         raise ValueError(kind)
     x = x + y
     if cfg.is_enc_dec and "cross" in p:
-        h = _apply_norm(cfg, p["norm_x"], x)
-        x = x + attn_mod.cross_attention_decode(p["cross"], cfg, h,
-                                                cache.cross_k, cache.cross_v)
+        x = _block_cross(p, cfg, x, cache, cross_tables)
     return x, cache
 
 
 def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                    pos: jax.Array, cache: Any, *,
-                   block_tables: jax.Array | None = None
+                   block_tables: jax.Array | None = None,
+                   cross_tables: jax.Array | None = None
                    ) -> tuple[jax.Array, Any]:
     """token: (B, 1) int32; pos: scalar int32 shared by all rows, or
     (B,) int32 per-slot positions -> (logits (B,1,V), cache).
 
     ``block_tables`` (B, MB) int32 selects the paged KV layout (see
     :func:`init_cache`); it requires per-slot positions.
+    ``cross_tables`` (B, MBc) int32 likewise selects the paged cross
+    pool for enc-dec models (ASR serving); without it cross KV is read
+    from the cache's contiguous precomputed rows.
     """
     kinds = _period_kinds(cfg)
     x = L.apply_embedding(params["embed"], token)
@@ -389,7 +464,8 @@ def lm_decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
         for j, kind in enumerate(kinds):
             x, c = _block_decode(period_params[j], cfg, kind, x, pos,
                                  period_cache[j],
-                                 block_tables=block_tables)
+                                 block_tables=block_tables,
+                                 cross_tables=cross_tables)
             new_caches.append(c)
             x, _ = _apply_ffn(period_params[j], cfg, j, x)
         return x, new_caches
@@ -409,14 +485,21 @@ def prefill_fused_eligible(cfg: ModelConfig, *,
     """True when a prompt chunk can go through a fused paged
     flash-prefill kernel instead of the decode-step scan: every layer
     must be plain self-attention (recurrent/hybrid state has no fused
-    multi-token update) and no encoder-decoder cross attention.
+    multi-token update).
 
     ``quantized_kv`` no longer disqualifies: Q8_0 pools dispatch the
     ``flash_prefill_paged_q8`` sibling, which requantizes the chunk's
     KV in-kernel (the kwarg is kept so callers can state the pool
-    dtype; both pool dtypes are now fused-eligible)."""
+    dtype; both pool dtypes are now fused-eligible).
+
+    Enc-dec decoders no longer disqualify either: cross attention is
+    non-causal over a *fixed*, fully-precomputed encoder KV set, so
+    every chunk position is independent — the fused path adds one
+    cross-attention read per layer (contiguous or paged) after the
+    fused self-attention program, mathematically identical to the
+    per-token scan (oracle-gated in tests)."""
     del quantized_kv  # Q8_0 pools take the fused q8 sibling kernel
-    return set(_period_kinds(cfg)) == {"attn"} and not cfg.is_enc_dec
+    return set(_period_kinds(cfg)) == {"attn"}
 
 
 def prefill_path(cfg: ModelConfig, *, quantized_kv: bool = False,
@@ -435,14 +518,18 @@ def prefill_path(cfg: ModelConfig, *, quantized_kv: bool = False,
 
 def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
                             tokens: jax.Array, pos0: jax.Array, cache: Any,
-                            block_tables: jax.Array
+                            block_tables: jax.Array,
+                            cross_tables: jax.Array | None = None
                             ) -> tuple[jax.Array, Any]:
     """Fused prefill: the whole chunk runs as ONE forward over the
     paged pool per layer (``attention_prefill_paged``) instead of a
     T-step scan of :func:`lm_decode_step` — one kernel launch per
     layer per chunk.  Pure-attention decoders only (see
     :func:`prefill_fused_eligible`); FFN / MoE are position-wise, so
-    the chunk-at-once result matches the scan to fp32 allclose."""
+    the chunk-at-once result matches the scan to fp32 allclose.
+    Enc-dec decoders add one chunk-at-once cross-attention read per
+    layer (non-causal over fixed encoder KV, so per-position
+    independent — identical to the scan's per-token reads)."""
     kinds = _period_kinds(cfg)
     t = tokens.shape[1]
     x = L.apply_embedding(params["embed"], tokens)
@@ -462,6 +549,8 @@ def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
                 p["attn"], cfg, h, pos0, period_cache[j].kv,
                 block_tables, rope=rope)
             x = x + y
+            if cfg.is_enc_dec and "cross" in p:
+                x = _block_cross(p, cfg, x, period_cache[j], cross_tables)
             new_caches.append(period_cache[j]._replace(kv=kv))
             x, _ = _apply_ffn(p, cfg, j, x)
         return x, new_caches
@@ -478,6 +567,7 @@ def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
 def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
                      pos0: jax.Array, cache: Any, *,
                      block_tables: jax.Array | None = None,
+                     cross_tables: jax.Array | None = None,
                      fused: bool = True) -> tuple[jax.Array, Any]:
     """Prefill of one chunk: tokens (B, C) at positions
     ``pos0 .. pos0+C-1``; returns the logits of the *last* position and
@@ -491,13 +581,15 @@ def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
       position-masked against history, KV written in-kernel.
     * **decode-step scan** (the reference oracle) — a ``lax.scan`` of
       :func:`lm_decode_step`, bit-identical to feeding the chunk
-      through single-token decode; recurrent (SSM / xLSTM) states,
-      encoder-decoder models, and batch > 1 always take this path (the
-      fused kernel is batch-1, one slot per admission), and tests pin
-      ``fused=False`` to it as the ground truth.  Quantized (Q8_0) KV
-      is fused-eligible: it dispatches the q8 sibling kernel, which
-      requantizes the chunk in-kernel; the scan remains its
-      dequant-reference oracle at tolerance (see ``kernels/README.md``).
+      through single-token decode; recurrent (SSM / xLSTM) states and
+      batch > 1 always take this path (the fused kernel is batch-1,
+      one slot per admission), and tests pin ``fused=False`` to it as
+      the ground truth.  Quantized (Q8_0) KV is fused-eligible: it
+      dispatches the q8 sibling kernel, which requantizes the chunk
+      in-kernel; the scan remains its dequant-reference oracle at
+      tolerance (see ``kernels/README.md``).  Enc-dec decoders are
+      fused-eligible too — cross attention (``cross_tables`` paged, or
+      contiguous precomputed rows) runs chunk-at-once per layer.
     """
     if block_tables is not None:
         quantized = any(
@@ -506,12 +598,14 @@ def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
         if prefill_path(cfg, quantized_kv=quantized,
                         batch=tokens.shape[0], fused=fused) == "fused":
             return _lm_prefill_chunk_fused(params, cfg, tokens, pos0,
-                                           cache, block_tables)
+                                           cache, block_tables,
+                                           cross_tables)
 
     def body(carry, tok_col):
         pos, cache = carry
         logits, cache = lm_decode_step(params, cfg, tok_col[:, None], pos,
-                                       cache, block_tables=block_tables)
+                                       cache, block_tables=block_tables,
+                                       cross_tables=cross_tables)
         return (pos + 1, cache), logits
 
     (_, cache), logits = jax.lax.scan(body, (pos0, cache), tokens.T)
@@ -529,22 +623,30 @@ def _slot_rows(sub, fn):
     return jax.tree.map(fn, sub)
 
 
-def cache_slot_view(cache: Any, slot: jax.Array) -> Any:
-    """Batch-1 view of ``slot``'s rows (paged KV pools pass through)."""
+def cache_slot_view(cache: Any, slot: jax.Array, *,
+                    paged_cross: bool = False) -> Any:
+    """Batch-1 view of ``slot``'s rows (paged KV pools pass through).
+
+    ``paged_cross`` passes the cross KV through unsliced too — with the
+    paged cross layout it is a shared block pool, not slot rows (the
+    slot's cross-table row does the isolation)."""
     def take(x):
         return jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1)
+    def take_cross(x):
+        return x if paged_cross else _slot_rows(x, take)
     return [c._replace(mamba=_slot_rows(c.mamba, take),
                        mlstm=_slot_rows(c.mlstm, take),
                        slstm=_slot_rows(c.slstm, take),
-                       cross_k=_slot_rows(c.cross_k, take),
-                       cross_v=_slot_rows(c.cross_v, take))
+                       cross_k=take_cross(c.cross_k),
+                       cross_v=take_cross(c.cross_v))
             for c in cache]
 
 
 def cache_slot_merge(cache: Any, local: Any, slot: jax.Array) -> Any:
     """Fold a batch-1 view back: KV pools are taken from ``local``
     (updated in place by paged writes), recurrent rows are scattered
-    back at ``slot``; cross KV is read-only during decode."""
+    back at ``slot``; cross KV is read-only during decode (both
+    layouts), so the full cache's copy is kept as-is."""
     def put(full, sub):
         return jax.tree.map(
             lambda f, s: jax.lax.dynamic_update_slice_in_dim(f, s, slot,

@@ -23,6 +23,18 @@ a vLLM-style paged allocator scaled to this repo:
   tables, admission (``admit``), retirement (``release``), and a
   copy-on-write guard (``ensure_writable``) so a slot never mutates a
   block another holder can still read.
+* **Cross-attention pool (opt-in)** — encoder-decoder serving
+  (``repro.engine.asr_engine``) stores each request's precomputed
+  encoder KV in a *second* refcounted block pool (``cross_len > 0``):
+  per-slot ``cross_tables`` over a dedicated :class:`BlockAllocator`,
+  with its own hash-chained :class:`PrefixCache` keyed on per-frame
+  audio fingerprints.  Unlike prompt-prefix sharing, audio adoption is
+  **all-or-nothing** (``admit_cross``): the encoder is non-causal, so
+  a partial frame prefix has no reusable KV — either the whole chain
+  matches (every block adopted read-only, the encode skipped entirely)
+  or the slot gets fresh blocks and encodes from scratch.  Cross
+  blocks are read-only after the encode (``publish_cross`` donates the
+  chain to the prefix cache), so they need no CoW guard.
 
 The runtime is pure host Python over integer state — device arrays
 only appear through the ``copy_block`` callback a scheduler installs
@@ -184,6 +196,9 @@ class PagedKVRuntime:
     def __init__(self, slots: int, max_len: int, block_size: int = 16, *,
                  num_blocks: int | None = None, extra_blocks: int = 0,
                  prefix_share: bool = False,
+                 cross_len: int = 0, cross_block_size: int | None = None,
+                 cross_extra_blocks: int = 0,
+                 cross_prefix_share: bool = False,
                  copy_block: Callable[[int, int], None] | None = None,
                  metrics=None):
         self.slots = slots
@@ -202,6 +217,28 @@ class PagedKVRuntime:
                        for _ in range(slots)]
         self._owned = [0] * slots         # blocks in use (incl. shared)
         self.cow_copies = 0
+        # Optional cross-attention pool: one fixed-length span of
+        # encoder KV per slot, refcounted + prefix-shareable like the
+        # self-attention pool but adopted all-or-nothing.
+        self.cross_len = cross_len
+        self.cross_block_size = cross_block_size or block_size
+        self.cross_blocks_per_slot = (
+            cdiv(cross_len, self.cross_block_size) if cross_len else 0)
+        self.cross_num_blocks = (
+            slots * self.cross_blocks_per_slot + 1 + cross_extra_blocks
+            if cross_len else 0)
+        self.cross_alloc: BlockAllocator | None = (
+            BlockAllocator(self.cross_num_blocks) if cross_len else None)
+        self.cross_prefix: PrefixCache | None = (
+            PrefixCache(self.cross_alloc, self.cross_block_size)
+            if cross_len and cross_prefix_share else None)
+        self.cross_tables = [[NULL_BLOCK] * self.cross_blocks_per_slot
+                             for _ in range(slots)]
+        self._cross_owned = [0] * slots
+        # True while the slot's cross blocks were adopted from the
+        # prefix cache (read-only: the engine must not encode into
+        # them).
+        self.cross_adopted = [False] * slots
         self.metrics = metrics            # None -> no instrumentation
         self._obs_pool()
 
@@ -227,6 +264,19 @@ class PagedKVRuntime:
             m.gauge("kv_prefix_hits",
                     "cumulative prefix blocks adopted").set(
                 self.prefix.hits)
+        if self.cross_alloc is not None:
+            gc = m.gauge("kv_cross_pool_blocks",
+                         "cross-attention (encoder KV) blocks by state "
+                         "(null block excluded)", labels=("state",))
+            gc.set(self.allocated_cross_blocks, state="allocated")
+            gc.set(self.cross_alloc.num_free, state="free")
+            if self.cross_prefix is not None:
+                m.gauge("kv_cross_prefix_entries",
+                        "retained audio-prefix blocks").set(
+                    len(self.cross_prefix))
+                m.gauge("kv_cross_prefix_hits",
+                        "cumulative audio blocks adopted").set(
+                    self.cross_prefix.hits)
 
     # ------------------------------------------------------- invariants
     def check_consistency(self) -> None:
@@ -245,6 +295,13 @@ class PagedKVRuntime:
                     f"block {bid} is in slot {slot}'s table AND free"
                 assert self.alloc.refcount(bid) >= 1, \
                     f"block {bid} is in slot {slot}'s table unrefcounted"
+            for bid in self.cross_tables[slot][:self._cross_owned[slot]]:
+                assert bid != NULL_BLOCK, \
+                    f"slot {slot} owns the null cross block"
+                assert not self.cross_alloc.is_free(bid), \
+                    f"cross block {bid} is in slot {slot}'s table AND free"
+                assert self.cross_alloc.refcount(bid) >= 1, \
+                    f"cross block {bid} in slot {slot}'s table unrefcounted"
 
     # -------------------------------------------------------- admission
     def _alloc_with_eviction(self, n: int) -> list[int] | None:
@@ -329,12 +386,108 @@ class PagedKVRuntime:
         self.check_consistency()
         self._obs_pool()
 
+    # ---------------------------------------------- cross-attention pool
+    def _require_cross(self) -> BlockAllocator:
+        if self.cross_alloc is None:
+            raise RuntimeError("runtime built without a cross pool "
+                               "(pass cross_len > 0)")
+        return self.cross_alloc
+
+    def _cross_padded(self, keys: Sequence[int]) -> list[int]:
+        """Pad the per-frame fingerprint chain to whole blocks with a
+        fixed sentinel, so match/insert/publish all hash identical
+        chains even when ``cross_len % cross_block_size != 0``."""
+        want = self.cross_blocks_per_slot * self.cross_block_size
+        return list(keys) + [0] * (want - len(keys))
+
+    def _alloc_cross_with_eviction(self, n: int) -> list[int] | None:
+        alloc = self._require_cross()
+        while alloc.num_free < n:
+            if self.cross_prefix is None or not self.cross_prefix.evict_lru():
+                return None
+        return alloc.alloc(n)
+
+    def admit_cross(self, slot: int, keys: Sequence[int]) -> bool | None:
+        """Reserve the slot's encoder-KV span.  ``keys`` are per-frame
+        content fingerprints (len == ``cross_len``).  Adoption is
+        all-or-nothing — the encoder is non-causal, so a partial frame
+        prefix has no reusable KV:
+
+        * ``True`` — the *whole* chain was in the audio prefix cache;
+          every block adopted read-only, the caller skips the encode.
+        * ``False`` — fresh blocks allocated; the caller must encode.
+        * ``None`` — pool pressure (caller requeues; nothing held).
+        """
+        alloc = self._require_cross()
+        if self._cross_owned[slot]:
+            raise RuntimeError(f"slot {slot} already holds cross blocks")
+        if len(keys) != self.cross_len:
+            raise ValueError(f"need {self.cross_len} frame keys, "
+                             f"got {len(keys)}")
+        need = self.cross_blocks_per_slot
+        padded = self._cross_padded(keys)
+        if self.cross_prefix is not None:
+            shared = self.cross_prefix.match(padded, need)
+            if len(shared) == need:          # full chain: adopt as-is
+                self.cross_tables[slot] = list(shared)
+                self._cross_owned[slot] = need
+                self.cross_adopted[slot] = True
+                self.check_consistency()
+                self._obs_pool()
+                return True
+            for bid in shared:               # partial: useless, roll back
+                alloc.release(bid)
+            self.cross_prefix.hits -= len(shared)
+        fresh = self._alloc_cross_with_eviction(need)
+        if fresh is None:
+            return None
+        self.cross_tables[slot] = list(fresh)
+        self._cross_owned[slot] = need
+        self.cross_adopted[slot] = False
+        self.check_consistency()
+        self._obs_pool()
+        return False
+
+    def publish_cross(self, slot: int, keys: Sequence[int]) -> None:
+        """Donate the slot's (fully encoded) cross chain to the audio
+        prefix cache so later requests with the same audio adopt it.
+        No-op without sharing or for an adopted (already published)
+        chain; blocks stay read-only from here on."""
+        if self.cross_prefix is None or self.cross_adopted[slot]:
+            return
+        table = self.cross_tables[slot][:self._cross_owned[slot]]
+        self.cross_prefix.insert(self._cross_padded(keys), table)
+        self._obs_pool()
+
+    def release_cross(self, slot: int) -> None:
+        """Drop the slot's cross-block references (published chains
+        survive in the prefix cache, which holds its own reference)."""
+        alloc = self._require_cross()
+        for bid in self.cross_tables[slot][:self._cross_owned[slot]]:
+            alloc.release(bid)
+        self.cross_tables[slot] = [NULL_BLOCK] * self.cross_blocks_per_slot
+        self._cross_owned[slot] = 0
+        self.cross_adopted[slot] = False
+        self.check_consistency()
+        self._obs_pool()
+
     # ------------------------------------------------------------ stats
     @property
     def allocated_blocks(self) -> int:
         return self.num_blocks - 1 - self.alloc.num_free
 
+    @property
+    def allocated_cross_blocks(self) -> int:
+        if self.cross_alloc is None:
+            return 0
+        return self.cross_num_blocks - 1 - self.cross_alloc.num_free
+
     def free_block_ids(self) -> list[int]:
         """Snapshot of currently free physical blocks (tests poison
         these to prove no stale reads)."""
         return list(self.alloc._free)
+
+    def free_cross_block_ids(self) -> list[int]:
+        """Free cross-pool blocks (same poisoning contract as
+        :meth:`free_block_ids`, for the encoder-KV pool)."""
+        return list(self._require_cross()._free)

@@ -333,6 +333,12 @@ class ContinuousBatcher(ev.EventStreamMixin):
                                            self.bus.clock())
         if self.cost_model is not None and req.deadline_ms is not None:
             est = self.cost_model.estimate_lm(self, req)
+            if est is not None:
+                # Queueing-delay-aware admission: charge the expected
+                # wait behind already-queued work, so a feasible-in-
+                # isolation request behind a deep queue is rejected up
+                # front instead of expiring in the sweep later.
+                est += self.cost_model.queue_wait(self)
             budget = req.deadline_ms / 1e3
             if est is not None and est > budget:
                 self.rejections += 1

@@ -1,0 +1,294 @@
+"""ASR engine oracles: the cross-attention pool and enc-dec serving.
+
+Five pool/path invariants from the PR 9 issue, plus router/SLO
+integration:
+
+* chunked streaming encode == one-shot encode (bit-equal transcripts);
+* a second request with identical audio adopts the published cross
+  chain (no re-encode), reads it **read-only**, and decodes
+  bit-identically;
+* NaN-poisoned recycled cross blocks never leak into a fresh request
+  (table-driven reads only touch owned blocks);
+* fused enc-dec decoder prefill is bit-exact vs the retained
+  decode-step scan, with strictly fewer launches;
+* cancel/preempt mid-transcribe frees BOTH pools (decoder self-KV and
+  encoder cross-KV).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced
+from repro.configs.whisper_large_v3 import config as WHISPER
+from repro.engine import (Admitted, AsrEngine, Cancelled, CostModel,
+                          EngineRouter, Finished, Preempted, Progress,
+                          Rejected, TokenDelta, TranscribeRequest)
+from repro.models.frontend import synthetic_audio
+from repro.models.transformer import init_lm, prefill_path
+from repro.serving import ContinuousBatcher, Request
+
+pytestmark = pytest.mark.serving
+
+CFG = reduced(WHISPER, d_model=64, head_dim=16, d_ff=128,
+              vocab_size=96, encoder_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def _audio(seed):
+    return synthetic_audio(jax.random.PRNGKey(seed), CFG)
+
+
+def _req(rid, seed=1, prompt=(1, 2, 3, 4, 5), max_new=6, **kw):
+    return TranscribeRequest(rid=rid, audio=_audio(seed),
+                             prompt=list(prompt), max_new=max_new, **kw)
+
+
+def _mk(params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("audio_chunk", 16)
+    kw.setdefault("prefill_chunk", 4)
+    return AsrEngine(params, CFG, **kw)
+
+
+def _solo(params, req_seed, prompt=(1, 2, 3, 4, 5), max_new=6):
+    """Reference transcript: fresh single-slot engine, scan prefill,
+    no sharing."""
+    eng = AsrEngine(params, CFG, slots=1, max_len=32, audio_chunk=32,
+                    prefill_chunk=4, audio_share=False,
+                    fused_prefill=False)
+    r = _req(0, seed=req_seed, prompt=prompt, max_new=max_new)
+    eng.submit(r)
+    eng.run()
+    return r.out
+
+
+class TestEncodeOracles:
+    def test_chunked_encode_matches_one_shot(self, params):
+        """Streaming ingestion in 8-frame chunks must leave exactly the
+        one-shot encoder KV: bit-equal transcripts."""
+        outs = []
+        for chunk in (8, 32):
+            eng = _mk(params, slots=1, audio_chunk=chunk,
+                      audio_share=False)
+            r = _req(0)
+            eng.submit(r)
+            eng.run()
+            outs.append(list(r.out))
+            assert r.encode_steps == -(-CFG.encoder_seq // chunk)
+        assert outs[0] == outs[1]
+
+    def test_audio_adoption_skips_encode(self, params):
+        """Identical audio published by a finished encode is adopted
+        whole: no encode quanta, prefix-cache hits, bit-equal
+        transcript, and no extra cross blocks allocated."""
+        eng = _mk(params, slots=1)
+        r0 = _req(0)
+        eng.submit(r0)
+        eng.run()
+        enc_q = eng.encode_quanta
+        cross_after_first = eng.runtime.allocated_cross_blocks
+        r1 = _req(1)
+        eng.submit(r1)
+        eng.run()
+        assert eng.audio_hits == 1
+        assert eng.encode_quanta == enc_q          # no re-encode
+        assert r1.encode_steps == 0
+        assert eng.runtime.cross_prefix.hits > 0
+        assert r1.out == r0.out
+        # The adopted run borrowed the cached chain; retirement returns
+        # the pool to exactly the cache-retained baseline.
+        assert eng.runtime.allocated_cross_blocks == cross_after_first
+
+    def test_adopted_audio_blocks_read_only(self, params):
+        """An adopting request must never write the shared cross
+        blocks: the pool bytes holding the published chain are
+        bit-identical before and after the adopted run."""
+        eng = _mk(params, slots=1)
+        eng.submit(_req(0))
+        eng.run()
+        snap = [(np.asarray(c.cross_k), np.asarray(c.cross_v))
+                for c in eng.cache]
+        r1 = _req(1)
+        eng.submit(r1)
+        eng.run()
+        assert eng.audio_hits == 1
+        for c, (k0, v0) in zip(eng.cache, snap):
+            np.testing.assert_array_equal(np.asarray(c.cross_k), k0)
+            np.testing.assert_array_equal(np.asarray(c.cross_v), v0)
+        assert r1.out == _solo(params, 1)
+
+    def test_nan_poisoned_recycled_cross_blocks(self, params):
+        """A fresh request re-using recycled cross blocks never reads
+        its predecessor's bytes: poison every free cross block with
+        NaN after wave 1; wave 2 (different audio) must still match
+        its solo reference."""
+        eng = _mk(params, slots=1, audio_share=False)
+        eng.submit(_req(0, seed=1))
+        eng.run()
+        free = eng.runtime.free_cross_block_ids()
+        assert free                       # wave 1's blocks came back
+        idx = jnp.asarray(free, jnp.int32)
+        eng.cache = [c._replace(
+            cross_k=c.cross_k.at[:, idx].set(jnp.nan),
+            cross_v=c.cross_v.at[:, idx].set(jnp.nan))
+            for c in eng.cache]
+        r1 = _req(1, seed=2)
+        eng.submit(r1)
+        eng.run()
+        assert r1.out == _solo(params, 2)
+        assert not any(np.isnan(np.asarray(t)).all()
+                       for t in [r1.out])  # sanity: tokens are ints
+
+
+class TestFusedEncDecPrefill:
+    def test_enc_dec_attn_only_is_fused_eligible(self):
+        """PR 9 eligibility change: a pure-attention enc-dec decoder
+        takes the fused paged prefill path (cross attention is
+        non-causal over fixed encoder KV, so chunk-at-once equals
+        per-token)."""
+        assert prefill_path(CFG) == "fused"
+        assert prefill_path(CFG, quantized_kv=True) == "fused"
+        assert prefill_path(CFG, fused=False) == "scan"
+        assert prefill_path(CFG, batch=2) == "scan"
+
+    def test_fused_matches_scan_fewer_launches(self, params):
+        """The fused enc-dec prefill path must emit bit-identical
+        tokens to the retained decode-step scan, at strictly fewer
+        kernel launches per admission."""
+        outs, launches = [], []
+        for fused in (True, False):
+            eng = _mk(params, slots=1, audio_share=False,
+                      fused_prefill=fused)
+            assert eng.fused_prefill is fused
+            r = _req(0, prompt=(1, 2, 3, 4, 5, 6, 7), max_new=5)
+            eng.submit(r)
+            eng.run()
+            outs.append(list(r.out))
+            launches.append(eng.prefill_launches)
+        assert outs[0] == outs[1]
+        assert launches[0] < launches[1]
+
+
+class TestLifecycle:
+    def test_cancel_mid_transcribe_frees_both_pools(self, params):
+        """Cancel during the encode phase AND during decode: both the
+        decoder self-KV pool and the cross pool drop to zero allocated
+        blocks (no sharing: nothing should be retained)."""
+        for steps_before_cancel in (2, 8):
+            eng = _mk(params, slots=1, audio_share=False)
+            eng.submit(_req(0))
+            for _ in range(steps_before_cancel):
+                eng.step()
+            assert eng.runtime.allocated_blocks > 0
+            assert eng.runtime.allocated_cross_blocks > 0
+            assert eng.cancel(0)
+            assert eng.runtime.allocated_blocks == 0
+            assert eng.runtime.allocated_cross_blocks == 0
+            evs = [e for e in eng.bus.log if e.rid == 0]
+            assert isinstance(evs[-1], Cancelled)
+
+    def test_preempt_resume_bit_exact_reuses_published_audio(self, params):
+        """A preempted transcription resumes bit-exactly; because its
+        encode already published, re-admission re-adopts the chain and
+        skips the re-encode."""
+        eng = _mk(params, slots=1)
+        r = _req(0, max_new=8)
+        eng.submit(r)
+        while len(r.out) < 2:             # into decode
+            eng.step()
+        enc_q = eng.encode_quanta
+        assert eng.preempt(0)
+        assert eng.runtime.allocated_blocks == 0
+        eng.run()
+        assert r.out == _solo(params, 1, max_new=8)
+        assert eng.encode_quanta == enc_q     # resumed via adoption
+        assert eng.audio_hits == 1
+        evs = [e for e in eng.bus.log if e.rid == 0]
+        assert sum(isinstance(e, Admitted) for e in evs) == 1
+        assert any(isinstance(e, Preempted) for e in evs)
+        assert any(isinstance(e, Progress) and e.phase == "resume"
+                   for e in evs)
+
+    def test_progress_phases_and_token_stream(self, params):
+        """Events: encode Progress up to encoder_seq, prefill Progress,
+        one TokenDelta per output token, terminal Finished carrying the
+        request."""
+        eng = _mk(params, slots=1, audio_share=False)
+        r = _req(0)
+        eng.submit(r)
+        eng.run()
+        evs = [e for e in eng.bus.log if e.rid == 0]
+        enc = [e for e in evs
+               if isinstance(e, Progress) and e.phase == "encode"]
+        assert [e.step for e in enc] == [16, 32]
+        toks = [e.token for e in evs if isinstance(e, TokenDelta)]
+        assert toks == r.out
+        assert isinstance(evs[-1], Finished)
+        assert evs[-1].result is r
+
+
+class TestAdmission:
+    def test_queue_wait_rejects_behind_deep_queue(self, params):
+        """Satellite: a request feasible in isolation but behind a deep
+        queue is Rejected at submit once the expected queue wait is
+        charged."""
+        cm = CostModel()
+        eng = _mk(params, slots=1, cost_model=cm, audio_share=False)
+        ke, kp, kd = cm.asr_keys(eng)
+        cm.seed(ke, 0.05)
+        cm.seed(kp, 0.05)
+        cm.seed(kd, 0.05)
+        est_one = cm.estimate_asr(eng, _req(99))
+        # Occupy the slot + stack a queue without stepping.
+        for rid in range(3):
+            eng.submit(_req(rid, deadline_ms=60_000))
+        assert eng.rejections == 0
+        # Feasible alone (budget > single estimate) but not behind the
+        # queue (budget < estimate + queue wait).
+        budget_s = est_one * 1.5
+        h = eng.submit(_req(50, deadline_ms=budget_s * 1e3))
+        assert h.state == "REJECTED"
+        ev = eng.bus.terminal(50)
+        assert isinstance(ev, Rejected) and ev.reason == "infeasible"
+        assert ev.estimated_s > est_one      # wait was charged
+
+    def test_capacity_and_shape_validation(self, params):
+        eng = _mk(params, slots=1)
+        with pytest.raises(ValueError, match="non-empty decoder prompt"):
+            eng.submit(TranscribeRequest(rid=0, audio=_audio(1)))
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(_req(1, max_new=64))
+        with pytest.raises(ValueError, match="audio shape"):
+            eng.submit(TranscribeRequest(
+                rid=2, audio=np.zeros((4, 4)), prompt=[1]))
+        eng.submit(_req(3))
+        with pytest.raises(ValueError, match="duplicate"):
+            eng.submit(_req(3))
+
+
+class TestRouterIntegration:
+    def test_three_way_dispatch_and_shared_bus(self, params):
+        """TranscribeRequest routes to the ASR engine, LM Requests to
+        the batcher, on one shared bus with intact per-rid lifecycle
+        invariants."""
+        lm_cfg = reduced(WHISPER, d_model=64, head_dim=16, d_ff=128,
+                         vocab_size=96, encoder_layers=0,
+                         encoder_seq=0)
+        lm_params = init_lm(jax.random.PRNGKey(3), lm_cfg)
+        lm = ContinuousBatcher(lm_params, lm_cfg, slots=2, max_len=16)
+        asr = _mk(params, slots=1)
+        router = EngineRouter(lm=lm, asr=asr)
+        router.submit(_req(0))
+        router.submit(Request(rid=1, prompt=[3, 1, 4, 1, 5], max_new=4))
+        done = {e.rid: e.result for e in router.stream()
+                if isinstance(e, Finished)}
+        assert set(done) == {0, 1}
+        assert isinstance(done[0], TranscribeRequest)
+        assert done[0].out == _solo(params, 1)
+        assert router.asr is asr and lm.bus is asr.bus

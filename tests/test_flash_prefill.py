@@ -404,6 +404,17 @@ class TestModelOracle:
         assert prefill_fused_eligible(CFG, quantized_kv=True)
         assert not prefill_fused_eligible(HYBRID)
         assert not prefill_fused_eligible(HYBRID, quantized_kv=True)
+        # PR 9: a pure-attention enc-dec decoder is fused-eligible —
+        # cross attention is non-causal over FIXED encoder KV, so
+        # chunk-at-once equals per-token (oracle: test_asr_serving).
+        enc_dec = ModelConfig(
+            name="ed", family="audio", num_layers=2, d_model=64,
+            num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+            head_dim=32, encoder_layers=2, encoder_seq=16,
+            pos_embed="sinusoidal")
+        assert enc_dec.is_enc_dec
+        assert prefill_fused_eligible(enc_dec)
+        assert prefill_fused_eligible(enc_dec, quantized_kv=True)
 
     def test_prefill_path_single_source_of_truth(self):
         """prefill_path backs both lm_prefill_chunk's dispatch and the

@@ -227,6 +227,41 @@ class TestMigration:
         preempted = {e.rid for e in log if isinstance(e, Preempted)}
         assert preempted and preempted <= resumed
 
+    def test_replace_evicted_respawns_capacity(self, params):
+        """``replace_evicted=True``: a kill respawns a fresh replica
+        from the evicted spec's build before migration, so capacity
+        recovers and the replacement can absorb evacuated work."""
+        reqs = lambda: [Request(rid=i, prompt=_prompt(i, 4), max_new=5)
+                        for i in range(8)]
+        want = _reference_tokens(params, reqs())
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)],
+                             injector=FaultInjector().kill("a", 2),
+                             replace_evicted=True, **NO_WD)
+        for r in reqs():
+            fleet.submit(r)
+        log = list(fleet.stream())
+        stats = fleet.stats()
+        assert _tokens_by_rid(log) == want and not stats["lost"]
+        assert stats["replacements"] == [("a", "a~0")]
+        live = [r for r in stats["replicas"] if r["state"] != EVICTED]
+        assert sorted(r["name"] for r in live) == ["a~0", "b"]
+        assert next(r for r in stats["replicas"]
+                    if r["name"] == "a~0")["steps"] > 0
+
+    def test_drained_replica_not_replaced(self, params):
+        """Draining is the operator shrinking the fleet on purpose:
+        no respawn even with ``replace_evicted=True``."""
+        fleet = FleetManager([_lm_spec("a", params),
+                              _lm_spec("b", params)],
+                             replace_evicted=True, **NO_WD)
+        fleet.submit(Request(rid=0, prompt=_prompt(0, 4), max_new=4))
+        fleet.drain("a")
+        fleet.run()
+        stats = fleet.stats()
+        assert stats["replacements"] == []
+        assert not stats["lost"]
+
     def test_mid_prefill_eviction_resumes_bit_exact(self, params):
         """Kill a replica after exactly one prefill chunk of a
         multi-chunk prompt: the survivor re-prefills from scratch and
