@@ -1,0 +1,166 @@
+"""Speculative-decoding smoke: correctness + launch-economics gates.
+
+Serves identical workloads through the ``ContinuousBatcher`` with and
+without draft-model speculation and gates (CI runs this without
+continue-on-error):
+
+* **bit-exactness** — greedy speculation is a latency transform, not a
+  sampler: the emitted token streams must equal baseline decode
+  bit-exactly, on both arms (self-draft at 100% acceptance and a tiny
+  independently-initialised draft at whatever acceptance it earns);
+* **launch economics** — with a usable acceptance rate, total target
+  ``decode_launches`` must be *strictly below* the baseline's
+  one-launch-per-token (the whole point of the verification launch);
+* **accounting reconciliation** — per-request ``proposed``/``accepted``
+  must sum to the scheduler counters, which must agree with the
+  telemetry counters (``lm_spec_proposed_total`` /
+  ``lm_spec_accepted_total``).
+
+Both arms run the fused verify path (one launch per verification) on a
+tie-stable workload; the scan path's mathematical bit-exactness is
+gated in ``tests/test_spec_decode.py``.
+
+Run:  PYTHONPATH=src python benchmarks/spec_decode_smoke.py \
+          [--slots 2] [--requests 4] [--prompt-len 8] [--gen 10] [--k 3] \
+          [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, LMEngineConfig, SpecDecodeConfig
+from repro.models.transformer import init_lm
+from repro.obs import Telemetry
+from repro.serving import ContinuousBatcher, Request
+
+CFG = ModelConfig(name="bench", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                  head_dim=16)
+DRAFT = ModelConfig(name="draft", family="dense", num_layers=1,
+                    d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                    vocab_size=96, head_dim=16)
+
+
+def _arm(params, prompts, gen, slots, max_len, spec=None, metrics=None):
+    conf = EngineConfig(metrics=metrics, lm=LMEngineConfig(
+        slots=slots, max_len=max_len, fused_prefill=True,
+        spec_decode=spec))
+    cb = ContinuousBatcher(params, CFG, config=conf)
+    reqs = [Request(rid=i, prompt=list(p), max_new=gen)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        cb.submit(r)
+    t0 = time.time()
+    cb.run()
+    return cb, reqs, time.time() - t0
+
+
+def run(slots: int = 2, requests: int = 4, prompt_len: int = 8,
+        gen: int = 10, k: int = 3, verbose: bool = True) -> list[str]:
+    params = init_lm(jax.random.PRNGKey(0), CFG)
+    dparams = init_lm(jax.random.PRNGKey(2), DRAFT)
+    rng = np.random.default_rng(0)
+    prompts = [[int(t) for t in rng.integers(1, 90, prompt_len)]
+               for _ in range(requests)]
+    max_len = ContinuousBatcher.required_len(requests, slots,
+                                             prompt_len, gen)
+
+    base, breqs, bt = _arm(params, prompts, gen, slots, max_len)
+    n_tok = sum(len(r.out) for r in breqs)
+
+    # Arm 1: self-draft — acceptance 1.0 by construction, so the
+    # launch-economics gate is exercised at its design point.
+    tele = Telemetry()
+    sd = SpecDecodeConfig(draft_params=params, draft_cfg=CFG, k=k)
+    spec, sreqs, st = _arm(params, prompts, gen, slots, max_len,
+                           spec=sd, metrics=tele)
+
+    # Gate (a): greedy speculation is token-bit-exact vs baseline.
+    assert [r.out for r in sreqs] == [r.out for r in breqs], (
+        "speculative decode diverged from baseline greedy decode — "
+        "verification/rollback is broken")
+
+    # Gate (b): strictly fewer target launches than 1-per-token.
+    assert spec.decode_launches < base.decode_launches, (
+        f"speculation used {spec.decode_launches} target decode "
+        f"launches vs baseline {base.decode_launches}: the verify "
+        "launch must amortise, not add")
+
+    # Gate (c): counters reconcile end to end — per-request accounting,
+    # scheduler totals, and telemetry counters must all agree.
+    assert sum(r.proposed for r in sreqs) == spec.spec_proposed
+    assert sum(r.accepted for r in sreqs) == spec.spec_accepted
+    assert tele.counter("lm_spec_proposed_total").value() \
+        == spec.spec_proposed, "telemetry lost proposed tokens"
+    assert tele.counter("lm_spec_accepted_total").value() \
+        == spec.spec_accepted, "telemetry lost accepted tokens"
+
+    acc = spec.spec_accepted / max(1, spec.spec_proposed)
+    rows = [
+        f"spec_decode/baseline,{n_tok} tok in "
+        f"{base.decode_launches} launches,"
+        f"{requests} reqs x {gen} new on {slots} slots in {bt:.2f}s",
+        f"spec_decode/self_draft,{n_tok} tok in "
+        f"{spec.decode_launches} launches,"
+        f"acceptance {acc:.0%} k={k} "
+        f"+{spec.draft_launches} draft launches in {st:.2f}s",
+        f"spec_decode/tokens_per_round,"
+        f"{spec.spec_tokens_per_round():.2f},"
+        f"{spec.spec_rounds} rounds for {n_tok} tokens",
+    ]
+
+    # Arm 2: a real (tiny, independently initialised) draft model.
+    # Its acceptance rate is whatever it earns — usually low on random
+    # weights — but correctness must hold at *any* acceptance rate.
+    td = SpecDecodeConfig(draft_params=dparams, draft_cfg=DRAFT, k=k)
+    tiny, treqs, tt = _arm(params, prompts, gen, slots, max_len,
+                           spec=td)
+    assert [r.out for r in treqs] == [r.out for r in breqs], (
+        "speculation with an independent draft diverged from baseline "
+        "— acceptance logic depends on the draft being right")
+    tacc = tiny.spec_accepted / max(1, tiny.spec_proposed)
+    rows.append(
+        f"spec_decode/tiny_draft,{n_tok} tok in "
+        f"{tiny.decode_launches} launches,"
+        f"acceptance {tacc:.0%} ({DRAFT.num_layers}L/{DRAFT.d_model}d "
+        f"draft) in {tt:.2f}s")
+
+    if verbose:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=None)
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI defaults (explicit flags still win)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append machine-readable rows to the suite's "
+                         "perf-trajectory record (benchmarks/common.py "
+                         "schema)")
+    a = ap.parse_args()
+    base = (dict(slots=2, requests=4, prompt_len=8, gen=10, k=3)
+            if a.smoke else
+            dict(slots=2, requests=6, prompt_len=12, gen=16, k=4))
+    for key in base:
+        if getattr(a, key) is not None:
+            base[key] = getattr(a, key)
+    out_rows = run(**base)
+    if a.json:
+        try:                      # package import (python -m ...)
+            from benchmarks.common import write_bench_json
+        except ImportError:       # script run: sys.path[0] is benchmarks/
+            from common import write_bench_json
+        write_bench_json(a.json, "serving", out_rows,
+                         bench="spec_decode")

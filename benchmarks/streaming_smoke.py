@@ -249,8 +249,8 @@ def smoke_admission_feasibility() -> list[str]:
                                        steps=4, seed=1,
                                        deadline_ms=5000.0))
     eng.run()
-    assert tight.state == "REJECTED" and tight.result() is None
-    assert loose.state == "FINISHED" and loose.result() is not None
+    assert tight.state == "REJECTED" and tight.result().outcome == "rejected"
+    assert loose.state == "FINISHED" and loose.result().outcome == "finished"
     assert not eng.bus.admitted(0), "rejected diffusion request admitted"
     rows.append("streaming_smoke/admission_diffusion,"
                 "est 100ms vs 50ms budget rejected,"

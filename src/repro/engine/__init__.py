@@ -3,6 +3,9 @@ typed requests, streaming event lifecycle, SLO-aware multiplexing."""
 from repro.engine.api import (Engine, GenerateRequest, GenerateResult,
                               TranscribeRequest, default_sampler, uses_cfg)
 from repro.engine.asr_engine import AsrEngine, audio_fingerprint
+from repro.engine.config import (AsrEngineConfig, DiffusionEngineConfig,
+                                 EngineConfig, LMEngineConfig,
+                                 SpecDecodeConfig, build_engine)
 from repro.engine.diffusion_engine import (SD_TURBO, TINY_SD, DiffusionEngine,
                                            SDConfig, build_denoise,
                                            build_denoise_step, build_encode,
@@ -15,6 +18,8 @@ from repro.engine.events import (Admitted, Cancelled, Event, EventBus,
                                  Rejected, RequestHandle, TokenDelta)
 from repro.engine.fleet import (FaultInjector, FleetManager, ReplicaFault,
                                 ReplicaSpec)
+from repro.engine.results import (ImageResult, LMResult, RequestStats,
+                                  TerminalResult, TranscriptResult)
 from repro.engine.router import EngineRouter
 from repro.engine.samplers import (get_sampler, list_samplers,
                                    register_sampler)
@@ -23,6 +28,10 @@ __all__ = [
     "Engine", "GenerateRequest", "GenerateResult", "TranscribeRequest",
     "default_sampler", "uses_cfg",
     "AsrEngine", "audio_fingerprint",
+    "EngineConfig", "LMEngineConfig", "AsrEngineConfig",
+    "DiffusionEngineConfig", "SpecDecodeConfig", "build_engine",
+    "TerminalResult", "RequestStats", "LMResult", "TranscriptResult",
+    "ImageResult",
     "DiffusionEngine", "SDConfig", "SD_TURBO", "TINY_SD",
     "build_denoise", "build_denoise_step", "build_encode",
     "build_finalize_decode", "init_pipeline", "quantize_pipeline",

@@ -64,6 +64,7 @@ from repro.core.policy import get_policy
 from repro.core.qlinear import quantize_params
 from repro.engine import events as ev
 from repro.engine.api import TranscribeRequest
+from repro.engine.config import EngineConfig, UNSET, resolve
 from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
                                       cache_slot_view, encoder_forward,
                                       init_cache, lm_decode_step,
@@ -142,21 +143,49 @@ class AsrEngine(ev.EventStreamMixin):
     ``clock`` is the SLO/event timebase (injectable for deterministic
     tests and virtual-time benchmarks)."""
 
-    def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
-                 max_len: int, decode_fn: Callable | None = None,
-                 quantized_kv: bool = False,
-                 weight_quant: str | None = None,
-                 block_size: int = DEFAULT_BLOCK,
-                 cross_block_size: int | None = None,
-                 audio_chunk: int = DEFAULT_AUDIO_CHUNK,
-                 prefill_chunk: int = 8,
-                 audio_share: bool = True,
-                 extra_blocks: int = 0,
-                 fused_prefill: bool = True,
-                 bus: ev.EventBus | None = None,
-                 clock: Callable[[], float] = time.monotonic,
-                 edf: bool = True,
-                 cost_model=None, metrics=None):
+    def __init__(self, params: Any, cfg: ModelConfig, *,
+                 config: EngineConfig | None = None,
+                 slots: int = UNSET, max_len: int = UNSET,
+                 decode_fn: Callable | None = UNSET,
+                 quantized_kv: bool = UNSET,
+                 weight_quant: str | None = UNSET,
+                 block_size: int = UNSET,
+                 cross_block_size: int | None = UNSET,
+                 audio_chunk: int = UNSET,
+                 prefill_chunk: int = UNSET,
+                 audio_share: bool = UNSET,
+                 extra_blocks: int = UNSET,
+                 fused_prefill: bool = UNSET,
+                 bus: ev.EventBus | None = UNSET,
+                 clock: Callable[[], float] = UNSET,
+                 edf: bool = UNSET,
+                 cost_model=UNSET, metrics=UNSET):
+        # Config-first construction (PR 10): the loose kwargs are a
+        # deprecation shim resolved onto config.asr — explicit kwargs
+        # win, gated bit-identical in tests/test_engine_config.py.
+        self.config, asrc = resolve(config, "asr", dict(
+            slots=slots, max_len=max_len, decode_fn=decode_fn,
+            quantized_kv=quantized_kv, weight_quant=weight_quant,
+            block_size=block_size, cross_block_size=cross_block_size,
+            audio_chunk=audio_chunk, prefill_chunk=prefill_chunk,
+            audio_share=audio_share, extra_blocks=extra_blocks,
+            fused_prefill=fused_prefill, bus=bus, clock=clock, edf=edf,
+            cost_model=cost_model, metrics=metrics))
+        if asrc.max_len is None:
+            raise ValueError("max_len is required (pass max_len= or "
+                             "config.asr.max_len)")
+        (slots, max_len, decode_fn, quantized_kv, block_size,
+         cross_block_size, audio_chunk, prefill_chunk, audio_share,
+         extra_blocks, fused_prefill) = (
+            asrc.slots, asrc.max_len, asrc.decode_fn, asrc.quantized_kv,
+            asrc.block_size, asrc.cross_block_size, asrc.audio_chunk,
+            asrc.prefill_chunk, asrc.audio_share, asrc.extra_blocks,
+            asrc.fused_prefill)
+        weight_quant = self.config.weight_quant
+        bus, clock, edf = (self.config.bus, self.config.clock,
+                           self.config.edf)
+        cost_model, metrics = (self.config.cost_model,
+                               self.config.metrics)
         if not cfg.is_enc_dec:
             raise ValueError(
                 f"AsrEngine needs an encoder-decoder config, got "

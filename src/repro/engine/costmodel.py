@@ -29,6 +29,11 @@ keyed on a path the quantum doesn't take)::
 
     ("lm", model, "prefill", fused, quantized_kv, wq)   one prompt chunk
     ("lm", model, "decode",  quantized_kv, wq)          one batched token
+    ("lm", model, "decode-spec", draft, k, quantized_kv, wq)
+                                one speculative round (k draft steps +
+                                one verification launch); estimates
+                                divide by the batcher's observed
+                                tokens-per-round acceptance rate
 
 ASR (per ``AsrEngine`` scheduling quantum — the encoder-decoder
 modality adds an ingestion phase in front of the LM pair)::
@@ -284,35 +289,71 @@ class CostModel:
                  wq),
                 ("lm", m, "decode", cb.quantized_kv, wq))
 
+    def lm_spec_key(self, cb: Any) -> tuple:
+        """Phase key for one speculative decode round on a
+        ``ContinuousBatcher`` running with ``spec_decode``: keyed on
+        (target model, draft model, proposal length K) plus the usual
+        pool/weight quantization discriminators — the round's cost is
+        K draft steps + one verification launch, so a different draft
+        or K compiles (and costs) differently."""
+        m = cb.cfg.name
+        wq = getattr(cb, "weight_quant", None)
+        sp = cb.spec
+        return ("lm", m, "decode-spec", sp.draft_cfg.name, sp.k,
+                cb.quantized_kv, wq)
+
+    def _lm_decode_term(self, cb: Any, ndec: int) -> float | None:
+        """Decode-side service time for ``ndec`` tokens: plain batched
+        quanta, or — with speculation on — ``decode-spec`` rounds at
+        the batcher's observed tokens-per-round rate."""
+        if getattr(cb, "spec", None) is not None:
+            cs = self.cost(self.lm_spec_key(cb))
+            if cs is None:
+                return None
+            return ndec / cb.spec_tokens_per_round() * cs
+        cd = self.cost(self.lm_keys(cb)[1])
+        if cd is None:
+            return None
+        return ndec * cd
+
     def estimate_lm(self, cb: Any, req: Any) -> float | None:
         """Whole-request (or, after a preemption, remaining) service
         time for an LM ``serving.Request``: chunked-prefill quanta for
-        the feed plus one batched decode quantum per token still to
-        generate (the final prefill chunk emits the first token).
-        ``None`` if prefill or decode has never been observed."""
-        kp, kd = self.lm_keys(cb)
-        cp, cd = self.cost(kp), self.cost(kd)
-        if cp is None or cd is None:
+        the feed plus the decode term — one batched decode quantum per
+        token still to generate (the final prefill chunk emits the
+        first token), or speculative rounds at the observed acceptance
+        rate when ``spec_decode`` is on.  ``None`` if prefill or the
+        decode phase actually in use has never been observed."""
+        kp, _ = self.lm_keys(cb)
+        cp = self.cost(kp)
+        if cp is None:
             return None
         feed = req._feed if req._feed else list(req.prompt)
         chunks = _cdiv(max(1, len(feed)), cb.prefill_chunk)
         ndec = max(0, req.max_new - len(req.out) - 1)
-        return chunks * cp + ndec * cd
+        dec = self._lm_decode_term(cb, ndec)
+        if dec is None:
+            return None
+        return chunks * cp + dec
 
     def remaining_lm(self, cb: Any, slot: int) -> float | None:
         """Remaining service time for the request running in ``slot``:
-        its pending prefill chunks plus its remaining decode tokens."""
+        its pending prefill chunks plus its remaining decode tokens
+        (speculation-aware, like :meth:`estimate_lm`)."""
         req = cb.slots[slot]
         if req is None:
             return None
-        kp, kd = self.lm_keys(cb)
-        cp, cd = self.cost(kp), self.cost(kd)
-        if cp is None or cd is None:
+        kp, _ = self.lm_keys(cb)
+        cp = self.cost(kp)
+        if cp is None:
             return None
         pending = len(cb._pending[slot])
         chunks = _cdiv(pending, cb.prefill_chunk) if pending else 0
         ndec = max(0, req.max_new - len(req.out) - (1 if pending else 0))
-        return chunks * cp + ndec * cd
+        dec = self._lm_decode_term(cb, ndec)
+        if dec is None:
+            return None
+        return chunks * cp + dec
 
     # ----------------------------------------------------- ASR phases
     def asr_keys(self, eng: Any) -> tuple[tuple, tuple, tuple]:

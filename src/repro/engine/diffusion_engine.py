@@ -71,6 +71,7 @@ from repro.diffusion import schedule as sched_mod
 from repro.engine import events as ev
 from repro.engine import samplers as samplers_mod
 from repro.engine.api import GenerateRequest, GenerateResult, uses_cfg
+from repro.engine.config import EngineConfig, UNSET, resolve
 from repro.models import clip as clip_mod
 from repro.models import unet as unet_mod
 from repro.models import vae as vae_mod
@@ -246,11 +247,25 @@ class DiffusionEngine(ev.EventStreamMixin):
     counts actual jit traces across all program kinds.
     """
 
-    def __init__(self, params: dict, cfg: SDConfig, *, max_batch: int = 1,
-                 bus: ev.EventBus | None = None,
-                 clock: Callable[[], float] = time.monotonic,
-                 cost_model=None, metrics=None,
-                 weight_quant: str | None = None):
+    def __init__(self, params: dict, cfg: SDConfig, *,
+                 config: EngineConfig | None = None,
+                 max_batch: int = UNSET,
+                 bus: ev.EventBus | None = UNSET,
+                 clock: Callable[[], float] = UNSET,
+                 cost_model=UNSET, metrics=UNSET,
+                 weight_quant: str | None = UNSET):
+        # Config-first construction (PR 10): loose kwargs are a
+        # deprecation shim resolved onto config.diffusion — explicit
+        # kwargs win, gated bit-identical in tests.
+        self.config, diffc = resolve(config, "diffusion", dict(
+            max_batch=max_batch, bus=bus, clock=clock,
+            cost_model=cost_model, metrics=metrics,
+            weight_quant=weight_quant))
+        max_batch = diffc.max_batch
+        weight_quant = self.config.weight_quant
+        bus, clock = self.config.bus, self.config.clock
+        cost_model, metrics = (self.config.cost_model,
+                               self.config.metrics)
         if weight_quant is not None:
             # Opt-in quantized weights (GGML model-file semantics):
             # CLIP/UNet/VAE linears move to blocked storage and route

@@ -37,8 +37,9 @@ lifecycle vocabulary that makes the request observable:
 * **:class:`RequestHandle`** — what ``submit()`` returns.  Iterating
   ``handle.events()`` *drives* the engine (each exhausted buffer pumps
   one ``step()``) until the request reaches a terminal event;
-  ``handle.result()`` drains and returns the ``Finished`` payload
-  (``None`` if cancelled); ``handle.cancel()`` routes back to the
+  ``handle.result()`` drains and returns a typed
+  :class:`repro.engine.results.TerminalResult` with a common
+  ``outcome``/``stats`` shape; ``handle.cancel()`` routes back to the
   engine.  ``handle.state`` exposes the lifecycle state machine
   (``QUEUED -> ADMITTED/RUNNING -> PREEMPTED -> ... -> FINISHED |
   CANCELLED``, or straight to ``REJECTED`` when the engine's cost
@@ -128,7 +129,8 @@ class Rejected(Event):
     slot, batch row, or KV block; the one admitted-then-rejected path
     is a preempted over-budget decode that can no longer meet its
     deadline (``Preempted`` precedes ``Rejected`` in that log).
-    ``handle.result()`` returns ``None``."""
+    ``handle.result()`` returns a ``TerminalResult`` with
+    ``outcome == "rejected"`` carrying this ``reason``."""
     estimated_s: float = 0.0
     budget_s: float = 0.0
     reason: str = "infeasible"
@@ -310,13 +312,28 @@ class RequestHandle:
                     "finished (submitted to a different engine?)")
 
     def result(self) -> Any:
-        """Drive to completion; the ``Finished`` payload, or ``None``
-        if the request was cancelled."""
+        """Drive to completion and return the typed terminal result.
+
+        Every observable terminal maps to a
+        :class:`repro.engine.results.TerminalResult` subclass with a
+        common ``outcome``/``stats`` shape (``LMResult`` /
+        ``TranscriptResult`` / ``ImageResult`` for finished requests, a
+        bare ``TerminalResult`` for cancellations and rejections).
+        ``None`` only when no terminal event can be observed at all
+        (evicted by ``bus.compact()`` before the handle saw it)."""
+        from repro.engine.results import from_terminal
         term = self.bus.terminal(self.rid)
         if term is None:
             for term in self.events():
                 pass
-        return term.result if isinstance(term, Finished) else None
+        if term is None or not isinstance(term, TERMINAL_EVENTS):
+            return None
+        if isinstance(term, Finished):
+            return from_terminal(self.rid, "finished", term.result)
+        if isinstance(term, Rejected):
+            return from_terminal(self.rid, "rejected",
+                                 reason=term.reason)
+        return from_terminal(self.rid, "cancelled")
 
 
 class EventStreamMixin:

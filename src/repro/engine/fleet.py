@@ -86,11 +86,38 @@ class ReplicaFault(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaSpec:
-    """Recipe for one in-process replica: ``build()`` returns a fresh
-    engine (own params/cache/bus; the fleet rebinds the bus before any
-    event is emitted).  ``name`` keys health, stats, and fault plans."""
+    """Recipe for one in-process replica.  ``name`` keys health, stats,
+    and fault plans.
+
+    Since PR 10 a spec is declarative: (name, params source, one
+    :class:`~repro.engine.config.EngineConfig`) — ``params`` is the
+    weight pytree or a zero-arg callable returning one (lazy load per
+    replica), ``model_cfg`` the model config, ``engine`` the kind
+    (``"lm"`` | ``"asr"`` | ``"diffusion"``), and ``config`` the shared
+    engine config (a single instance may back every replica: replicas
+    then share its cost model / metrics registry, while each still owns
+    its cache and bus — the fleet rebinds the bus before any event is
+    emitted).  The legacy ``build`` closure is still honoured and wins
+    when set."""
     name: str
-    build: Callable[[], Any]
+    build: Callable[[], Any] | None = None
+    params: Any = None
+    model_cfg: Any = None
+    engine: str = "lm"
+    config: Any = None          # engine.config.EngineConfig | None
+
+    def make(self) -> Any:
+        """Construct this replica's engine."""
+        if self.build is not None:
+            return self.build()
+        if self.params is None or self.model_cfg is None:
+            raise ValueError(
+                f"replica {self.name!r} needs either build= or "
+                "(params, model_cfg[, config])")
+        from repro.engine.config import build_engine
+        params = self.params() if callable(self.params) else self.params
+        return build_engine(self.engine, params, self.model_cfg,
+                            self.config)
 
 
 class FaultInjector:
@@ -188,7 +215,7 @@ class FleetManager(ev.EventStreamMixin):
         """Build one replica from its spec, rebind it onto the shared
         bus, and register it with a fresh health state machine."""
         threshold, alpha, suspect_limit = self._wd_params
-        engine = spec.build()
+        engine = spec.make()
         self._rebind(engine)
         rep = _Replica(
             spec, engine,

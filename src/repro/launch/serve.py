@@ -47,8 +47,10 @@ import numpy as np
 from repro.configs import get_config, reduced as reduce_cfg, smoke_inputs
 from repro.core.policy import get_policy
 from repro.core.qlinear import param_bytes, quantize_params
-from repro.engine import (AsrEngine, CostModel, Finished, FleetManager,
-                          Rejected, ReplicaSpec, TokenDelta,
+from repro.engine import (AsrEngine, AsrEngineConfig, CostModel,
+                          EngineConfig, Finished, FleetManager,
+                          LMEngineConfig, Rejected, ReplicaSpec,
+                          SpecDecodeConfig, TokenDelta,
                           TranscribeRequest, calibrate)
 from repro.models.frontend import synthetic_audio
 from repro.models.transformer import init_lm
@@ -73,6 +75,16 @@ def main() -> None:
                          "whisper-large-v3); audio embeddings are "
                          "synthetic frontend stubs, repeated across "
                          "slots so the audio prefix cache shows hits")
+    ap.add_argument("--spec-draft", default=None, metavar="ARCH",
+                    help="enable draft-model speculative decoding: the "
+                         "named arch (reduced on CPU like --arch) "
+                         "proposes tokens that the target verifies in "
+                         "one fused paged-prefill launch per round; "
+                         "needs a decoder-only --arch sharing the "
+                         "target's vocabulary, incompatible with --asr")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative round "
+                         "(default 4)")
     ap.add_argument("--admission", action="store_true",
                     help="attach a phase-aware cost model: reject "
                          "requests whose estimated service time "
@@ -136,24 +148,46 @@ def main() -> None:
             cm = CostModel()
         cm.metrics = tele   # estimate-vs-actual error histograms
 
-    def build_engine():
-        # One shared CostModel instance across replicas: any replica's
-        # observed quanta refine every replica's estimates.
+    spec_decode = None
+    if args.spec_draft:
         if args.asr:
-            return AsrEngine(qp, cfg, slots=args.slots, max_len=max_len,
-                             cost_model=cm, metrics=tele)
-        return ContinuousBatcher(qp, cfg, slots=args.slots,
-                                 max_len=max_len,
-                                 enc_embeds=inp.get("enc_embeds"),
-                                 cost_model=cm, metrics=tele)
+            raise SystemExit("--spec-draft is decoder-only LM serving; "
+                             "it cannot combine with --asr")
+        dcfg = get_config(args.spec_draft)
+        if jax.default_backend() == "cpu":
+            dcfg = reduce_cfg(dcfg)
+        if dcfg.vocab_size != cfg.vocab_size:
+            raise SystemExit(
+                f"--spec-draft {dcfg.name} vocab {dcfg.vocab_size} != "
+                f"target vocab {cfg.vocab_size}")
+        dparams = init_lm(jax.random.PRNGKey(2), dcfg)
+        print(f"speculative draft {dcfg.name}: k={args.spec_k}")
+        spec_decode = SpecDecodeConfig(draft_params=dparams,
+                                       draft_cfg=dcfg, k=args.spec_k)
+
+    # One EngineConfig describes every replica: shared knobs (cost
+    # model, telemetry — any replica's observed quanta refine every
+    # replica's estimates) at the top level, per-engine sections below.
+    econf = EngineConfig(
+        cost_model=cm, metrics=tele,
+        lm=LMEngineConfig(slots=args.slots, max_len=max_len,
+                          enc_embeds=(None if args.asr
+                                      else inp.get("enc_embeds")),
+                          spec_decode=spec_decode),
+        asr=AsrEngineConfig(slots=args.slots, max_len=max_len))
+    kind = "asr" if args.asr else "lm"
+
+    def make_spec(name):
+        return ReplicaSpec(name, params=qp, model_cfg=cfg, engine=kind,
+                           config=econf)
 
     if args.replicas > 1:
-        engine = FleetManager([ReplicaSpec(f"replica{i}", build_engine)
+        engine = FleetManager([make_spec(f"replica{i}")
                                for i in range(args.replicas)],
                               metrics=tele)
         batchers = [r.engine for r in engine.replicas]
     else:
-        engine = build_engine()
+        engine = make_spec("solo").make()
         batchers = [engine]
     if tele is not None:
         # Attach AFTER fleet/engine construction: the fleet rebinds
@@ -215,6 +249,14 @@ def main() -> None:
           f"({enc}{sum(b.prefill_quanta for b in batchers) - q0p} prefill"
           f" + {sum(b.decode_quanta for b in batchers) - q0d} decode "
           f"quanta{hits})")
+    if spec_decode is not None:
+        prop = sum(b.spec_proposed for b in batchers)
+        acc = sum(b.spec_accepted for b in batchers)
+        print(f"speculation: {acc}/{prop} draft tokens accepted "
+              f"({acc / max(1, prop):.0%}), "
+              f"{sum(b.decode_launches for b in batchers)} target decode"
+              f" launches, {sum(b.draft_launches for b in batchers)} "
+              "draft launches")
     if args.replicas > 1:
         for rs in engine.stats()["replicas"]:
             print(f"  {rs['name']}: {rs['state']}, {rs['steps']} quanta")

@@ -519,7 +519,8 @@ def prefill_path(cfg: ModelConfig, *, quantized_kv: bool = False,
 def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
                             tokens: jax.Array, pos0: jax.Array, cache: Any,
                             block_tables: jax.Array,
-                            cross_tables: jax.Array | None = None
+                            cross_tables: jax.Array | None = None,
+                            last_only: bool = True
                             ) -> tuple[jax.Array, Any]:
     """Fused prefill: the whole chunk runs as ONE forward over the
     paged pool per layer (``attention_prefill_paged``) instead of a
@@ -558,7 +559,11 @@ def _lm_prefill_chunk_fused(params: dict, cfg: ModelConfig,
     x, new_cache = jax.lax.scan(period_body, x,
                                 (params["layers"], cache),
                                 unroll=True if cfg.scan_unroll else 1)
-    x = _apply_norm(cfg, params["final_norm"], x[:, -1:])
+    # Prompt prefill only needs the next-token logits; verification
+    # (speculative decoding) needs the target's logits at EVERY chunk
+    # position, so the unembed is the one place the two differ.
+    x = _apply_norm(cfg, params["final_norm"],
+                    x[:, -1:] if last_only else x)
     head = params.get("lm_head") or Linear(params["embed"].w,
                                            role="lm_head")
     return L.apply_unembed(head, x), new_cache
@@ -610,6 +615,47 @@ def lm_prefill_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
     (_, cache), logits = jax.lax.scan(body, (pos0, cache), tokens.T)
     return logits[-1], cache
+
+
+def lm_verify_chunk(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                    pos0: jax.Array, cache: Any, *,
+                    block_tables: jax.Array | None = None,
+                    cross_tables: jax.Array | None = None,
+                    fused: bool = True) -> tuple[jax.Array, Any]:
+    """Verification launch for speculative decoding: tokens (B, C) at
+    positions ``pos0 .. pos0+C-1`` -> (logits (B, C, V), cache).
+
+    Identical transformer math to :func:`lm_prefill_chunk` — same fused
+    chunk-at-once path when eligible, same decode-step scan otherwise —
+    but the unembed covers *every* chunk position instead of only the
+    last one, because the verifier needs the target's greedy choice
+    after each proposed draft token.  Position ``j``'s logits condition
+    on ``tokens[:, :j+1]`` plus cached history (causal within the
+    chunk), exactly what feeding the chunk token-by-token through
+    :func:`lm_decode_step` produces; the scan path IS that feeding, so
+    scan-verified speculation is bit-exact against plain decode by
+    construction.
+    """
+    if block_tables is not None:
+        quantized = any(
+            isinstance(c.kv, attn_mod.KVCache) and c.kv.k_scale is not None
+            for c in cache)
+        if prefill_path(cfg, quantized_kv=quantized,
+                        batch=tokens.shape[0], fused=fused) == "fused":
+            return _lm_prefill_chunk_fused(params, cfg, tokens, pos0,
+                                           cache, block_tables,
+                                           cross_tables, last_only=False)
+
+    def body(carry, tok_col):
+        pos, cache = carry
+        logits, cache = lm_decode_step(params, cfg, tok_col[:, None], pos,
+                                       cache, block_tables=block_tables,
+                                       cross_tables=cross_tables)
+        return (pos + 1, cache), logits
+
+    (_, cache), logits = jax.lax.scan(body, (pos0, cache), tokens.T)
+    # scanned logits stack as (C, B, 1, V); callers want (B, C, V)
+    return jnp.moveaxis(logits[:, :, 0], 0, 1), cache
 
 
 # ---------------------------------------------------- slot cache surgery

@@ -368,6 +368,37 @@ class PagedKVRuntime:
         self._obs_pool()
         return fresh[0]
 
+    # --------------------------------------------------------- rollback
+    def truncate(self, slot: int, new_pos: int) -> None:
+        """Roll the slot back to ``new_pos`` cached positions.
+
+        This is the whole of speculative-decoding rollback: a rejected
+        proposal tail is discarded by rewinding the position watermark —
+        no block frees, no device copies.  Blocks were reserved for the
+        request's full horizon at :meth:`admit`, positions at or beyond
+        ``pos`` are unreachable (attention masks against the per-slot
+        position), and the next accepted token simply overwrites the
+        stale rows.  The one safety property worth asserting is that the
+        discarded positions only ever lived in exclusively-owned blocks:
+        the verify launch's write window must have gone through
+        :meth:`ensure_writable` first, so a CoW-shared prefix block can
+        never have been dirtied by a speculation that then failed."""
+        pos = self.pos[slot]
+        if not 0 <= new_pos <= pos:
+            raise ValueError(
+                f"truncate(slot={slot}) to {new_pos} outside [0, {pos}]")
+        if new_pos < pos:
+            for bi in range(new_pos // self.block_size,
+                            cdiv(pos, self.block_size)):
+                bid = self.tables[slot][bi]
+                assert self.alloc.refcount(bid) == 1, \
+                    (f"slot {slot} rolling back positions in shared "
+                     f"block {bid} (refcount "
+                     f"{self.alloc.refcount(bid)}) — a speculative "
+                     "write skipped ensure_writable")
+        self.pos[slot] = new_pos
+        self.check_consistency()
+
     # ------------------------------------------------------- retirement
     def release(self, slot: int, prompt: Sequence[int] | None = None
                 ) -> None:

@@ -104,12 +104,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.engine import events as ev
+from repro.engine.config import EngineConfig, UNSET, resolve
 from repro.core.policy import get_policy
 from repro.core.qlinear import quantize_params
 from repro.models.transformer import (cache_slot_merge, cache_slot_reset,
                                       cache_slot_view, init_cache,
                                       lm_decode_step, lm_prefill_chunk,
-                                      prefill_path)
+                                      lm_verify_chunk, prefill_path)
 from repro.serving.kvcache import PagedKVRuntime, cdiv
 
 DEFAULT_BLOCK = 16
@@ -127,7 +128,13 @@ class Request:
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     prefill_steps: int = 0        # prefill quanta this request consumed
-    decode_steps: int = 0         # decode quanta that emitted for it
+    decode_steps: int = 0        # decode quanta that emitted for it
+    # Speculative-decoding accounting (0 unless the engine runs with a
+    # SpecDecodeConfig): draft tokens offered to the verifier vs. draft
+    # tokens the target accepted.  Declared fields so replayed /
+    # preempted copies keep their history.
+    proposed: int = 0
+    accepted: int = 0
     # Prompt tokens cached so far (prefix reuse + prefill chunks).
     # Observability/compat only — the scheduler's _pending list owns
     # the feed.  A declared field (not injected at admission) so
@@ -172,6 +179,26 @@ def make_prefill_chunk(cfg: ModelConfig, *, fused: bool = True):
     return jax.jit(prefill, donate_argnums=(5,))
 
 
+def make_verify_chunk(cfg: ModelConfig, *, fused: bool = True):
+    """Batch-1 verification launch for speculative decoding: run the
+    whole ``[pending token, draft proposal...]`` chunk through one
+    prefill-path program (fused when eligible, decode-step scan
+    otherwise — the same dispatch as :func:`make_prefill_chunk`) and
+    return the target's greedy token at EVERY chunk position ``(1, C)``
+    plus the updated cache.  The chunk's KV lands in the slot's blocks
+    exactly like prefill; a rejected tail is rolled back afterwards by
+    ``PagedKVRuntime.truncate`` (position rewind, no device work).
+    Compiled once per distinct proposal length."""
+    def verify(params, tokens, pos0, slot, block_row, cache):
+        local = cache_slot_view(cache, slot)
+        logits, local = lm_verify_chunk(params, cfg, tokens, pos0, local,
+                                        block_tables=block_row,
+                                        fused=fused)
+        cache = cache_slot_merge(cache, local, slot)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    return jax.jit(verify, donate_argnums=(5,))
+
+
 def _make_slot_reset():
     return jax.jit(cache_slot_reset, donate_argnums=(0,))
 
@@ -199,23 +226,55 @@ class ContinuousBatcher(ev.EventStreamMixin):
     lets admission evict a decoding request that has outlived its
     deadline when feasible requests are waiting.  ``clock`` is the
     SLO/event timebase (injectable for deterministic tests and
-    virtual-time benchmarks)."""
+    virtual-time benchmarks).
 
-    def __init__(self, params: Any, cfg: ModelConfig, *, slots: int,
-                 max_len: int, enc_embeds=None,
-                 decode_fn: Callable | None = None,
-                 quantized_kv: bool = False,
-                 weight_quant: str | None = None,
-                 block_size: int = DEFAULT_BLOCK,
-                 prefill_chunk: int = 8,
-                 prefix_share: bool = False,
-                 extra_blocks: int = 0,
-                 fused_prefill: bool = True,
-                 bus: ev.EventBus | None = None,
-                 clock: Callable[[], float] = time.monotonic,
-                 edf: bool = True,
-                 preempt_over_budget: bool = False,
-                 cost_model=None, metrics=None):
+    Construction is config-first since PR 10: pass
+    ``config=EngineConfig(lm=LMEngineConfig(...))`` — the loose kwargs
+    remain accepted as a deprecation shim (explicit kwargs win over the
+    matching config field, gated bit-identical in tests) but new knobs
+    such as ``config.lm.spec_decode`` exist only on the config."""
+
+    def __init__(self, params: Any, cfg: ModelConfig, *,
+                 config: EngineConfig | None = None,
+                 slots: int = UNSET, max_len: int = UNSET,
+                 enc_embeds=UNSET,
+                 decode_fn: Callable | None = UNSET,
+                 quantized_kv: bool = UNSET,
+                 weight_quant: str | None = UNSET,
+                 block_size: int = UNSET,
+                 prefill_chunk: int = UNSET,
+                 prefix_share: bool = UNSET,
+                 extra_blocks: int = UNSET,
+                 fused_prefill: bool = UNSET,
+                 bus: ev.EventBus | None = UNSET,
+                 clock: Callable[[], float] = UNSET,
+                 edf: bool = UNSET,
+                 preempt_over_budget: bool = UNSET,
+                 cost_model=UNSET, metrics=UNSET):
+        self.config, lmc = resolve(config, "lm", dict(
+            slots=slots, max_len=max_len, enc_embeds=enc_embeds,
+            decode_fn=decode_fn, quantized_kv=quantized_kv,
+            weight_quant=weight_quant, block_size=block_size,
+            prefill_chunk=prefill_chunk, prefix_share=prefix_share,
+            extra_blocks=extra_blocks, fused_prefill=fused_prefill,
+            bus=bus, clock=clock, edf=edf,
+            preempt_over_budget=preempt_over_budget,
+            cost_model=cost_model, metrics=metrics))
+        if lmc.max_len is None:
+            raise ValueError("max_len is required (pass max_len= or "
+                             "config.lm.max_len; size it with "
+                             "required_len())")
+        (slots, max_len, enc_embeds, decode_fn, quantized_kv,
+         block_size, prefill_chunk, prefix_share, extra_blocks,
+         fused_prefill, preempt_over_budget) = (
+            lmc.slots, lmc.max_len, lmc.enc_embeds, lmc.decode_fn,
+            lmc.quantized_kv, lmc.block_size, lmc.prefill_chunk,
+            lmc.prefix_share, lmc.extra_blocks, lmc.fused_prefill,
+            lmc.preempt_over_budget)
+        weight_quant = self.config.weight_quant
+        bus, clock, edf = (self.config.bus, self.config.clock,
+                           self.config.edf)
+        cost_model, metrics = self.config.cost_model, self.config.metrics
         if prefix_share and (set(cfg.block_pattern) != {"attn"}
                              or cfg.is_enc_dec):
             raise ValueError(
@@ -284,6 +343,59 @@ class ContinuousBatcher(ev.EventStreamMixin):
         # admission is strictly fewer launches on the same workload).
         self.prefill_launches = 0
         self.last_quantum: tuple[str, int] | None = None
+        # Decode cost in *target-model* launches: +1 per batched decode
+        # quantum, +1 per fused verification launch (or +chunk-length on
+        # the scan path).  Speculation's acceptance metric is strictly
+        # fewer target launches than 1-launch-per-token on the same
+        # workload; draft launches are accounted separately.
+        self.decode_launches = 0
+        self.draft_launches = 0
+        self.spec_rounds = 0        # spec quanta executed
+        self.spec_verifies = 0      # per-slot verification launches
+        self.spec_proposed = 0      # draft tokens offered to the target
+        self.spec_accepted = 0      # draft tokens the target accepted
+        self.spec = lmc.spec_decode
+        self._draft_pending: list[list[int]] = [[] for _ in range(slots)]
+        if self.spec is not None:
+            self._init_spec(slots, max_len, block_size)
+
+    def _init_spec(self, slots: int, max_len: int,
+                   block_size: int) -> None:
+        """Build the draft model's private serving state: its own paged
+        runtime + block pool (draft KV never cohabits the target pool,
+        so rollback can never dirty a CoW-shared prefix block) and its
+        own compiled decode/prefill programs at the slot-batch shape."""
+        sp = self.spec
+        dcfg = sp.draft_cfg
+        if set(self.cfg.block_pattern) != {"attn"} or self.cfg.is_enc_dec:
+            raise ValueError(
+                "spec_decode needs a pure-attention decoder-only target:"
+                " rollback is a position truncation, which recurrent or"
+                " encoder-fed state cannot honour")
+        if set(dcfg.block_pattern) != {"attn"} or dcfg.is_enc_dec:
+            raise ValueError(
+                "spec_decode draft must be a pure-attention decoder-only"
+                " model (draft KV rolls back by position truncation too)")
+        if dcfg.vocab_size != self.cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {dcfg.vocab_size} != target vocab "
+                f"{self.cfg.vocab_size}: proposals would not be token-"
+                "compatible")
+        if sp.k < 1:
+            raise ValueError(f"spec_decode.k must be >= 1, got {sp.k}")
+        self.draft_params = sp.draft_params
+        self.draft_runtime = PagedKVRuntime(slots, max_len, block_size)
+        self.draft_cache = init_cache(sp.draft_params, dcfg, slots,
+                                      max_len, block_size=block_size,
+                                      num_blocks=self.draft_runtime
+                                      .num_blocks)
+        self._draft_step = sp.draft_step_fn or make_paged_decode(dcfg)
+        self._draft_fused = prefill_path(
+            dcfg, fused=sp.draft_fused_prefill) == "fused"
+        self._draft_prefill_raw = make_prefill_chunk(
+            dcfg, fused=self._draft_fused)
+        self._verify_raw = make_verify_chunk(self.cfg,
+                                             fused=self.fused_prefill)
 
     # ------------------------------------------------------------ sizing
     @staticmethod
@@ -489,6 +601,13 @@ class ContinuousBatcher(ev.EventStreamMixin):
             req._cursor = reused        # feed tokens already cached
             self._pending[i] = list(req._feed[reused:])
             self.cache = self._reset_fn(self.cache, jnp.int32(i))
+            if self.spec is not None:
+                # Draft pool mirrors the slot's horizon; sized to cover
+                # every slot fully and shares with nobody (no prefix
+                # cache), so admission can never fail here.
+                dre = self.draft_runtime.admit(i, req._feed, remaining)
+                assert dre == 0, "draft pool has no prefix cache"
+                self._draft_pending[i] = list(req._feed)
             if self.bus.admitted(req.rid):   # back from preemption
                 self.bus.emit(ev.Progress, req.rid, phase="resume",
                               step=len(req.out), total=req.max_new)
@@ -527,7 +646,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
             return
         victims = []
         for i, r in enumerate(self.slots):
-            if r is None or self._pending[i] \
+            if r is None or self._pending[i] or self._draft_pending[i] \
                     or r._deadline == float("inf"):
                 continue
             est = (self.cost_model.remaining_lm(self, i)
@@ -548,6 +667,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
             i, cached if self.runtime.prefix is not None else None)
         self.slots[i] = None
         self._pending[i] = []
+        self._release_draft(i)
         # Resume by re-ingesting prompt + everything generated so far:
         # the chunked-prefill path is bit-identical to decode, so the
         # continuation matches an uninterrupted run.
@@ -624,10 +744,17 @@ class ContinuousBatcher(ev.EventStreamMixin):
                 self.runtime.release(i)   # no prefix donation: blocks
                 self.slots[i] = None      # may be half-written
                 self._pending[i] = []
+                self._release_draft(i)
                 self.runtime.check_consistency()
                 self.bus.emit(ev.Cancelled, rid)
                 return True
         return False
+
+    def _release_draft(self, i: int) -> None:
+        """Return the slot's draft-pool blocks (speculation only)."""
+        if self.spec is not None:
+            self.draft_runtime.release(i)
+            self._draft_pending[i] = []
 
     # ------------------------------------------------------- scheduling
     def step(self) -> int:
@@ -639,8 +766,11 @@ class ContinuousBatcher(ev.EventStreamMixin):
         self._admit()
         self._obs_sched()
         for i, req in enumerate(self.slots):
-            if req is not None and self._pending[i]:
+            if req is not None and (self._pending[i]
+                                    or self._draft_pending[i]):
                 return self._prefill_quantum(i)
+        if self.spec is not None:
+            return self._spec_quantum()
         return self._decode_quantum()
 
     def _obs_quantum(self, kind: str, t0: float, out, rids: list,
@@ -680,7 +810,37 @@ class ContinuousBatcher(ev.EventStreamMixin):
         jax.block_until_ready(out)
         self.cost_model.observe(key, self.bus.clock() - t0)
 
+    def _draft_ingest(self, i: int):
+        """One draft-model prefill chunk (speculation only).  The draft
+        keeps a full private copy of the slot's feed — prefix reuse
+        never skips draft chunks, its pool has no prefix cache — so it
+        rides the slot's prefill quanta until caught up."""
+        chunk = self._draft_pending[i][:self.prefill_chunk]
+        del self._draft_pending[i][:len(chunk)]
+        dpos = self.draft_runtime.pos[i]
+        nxt, self.draft_cache = self._draft_prefill_raw(
+            self.draft_params,
+            jnp.asarray([chunk], jnp.int32),
+            jnp.full((1,), dpos, jnp.int32),
+            jnp.int32(i),
+            jnp.asarray([self.draft_runtime.tables[i]], jnp.int32),
+            self.draft_cache)
+        self.draft_runtime.pos[i] = dpos + len(chunk)
+        self.draft_launches += 1 if self._draft_fused else len(chunk)
+        return nxt
+
     def _prefill_quantum(self, i: int) -> int:
+        if not self._pending[i]:
+            # Target feed done but the draft is still catching up (a
+            # prefix hit skipped target chunks the draft must ingest).
+            t0 = self.bus.clock()
+            req = self.slots[i]
+            out = self._draft_ingest(i)
+            self.prefill_quanta += 1
+            self.last_quantum = ("draft-prefill", 1)
+            self._obs_quantum("draft-prefill", t0, out, [req.rid],
+                              args={"slot": i})
+            return 1
         t0 = self.bus.clock()
         req = self.slots[i]
         chunk = self._pending[i][:self.prefill_chunk]
@@ -712,6 +872,9 @@ class ContinuousBatcher(ev.EventStreamMixin):
                                 "weight_quant": self.weight_quant})
         self.bus.emit(ev.Progress, req.rid, phase="prefill",
                       step=req._cursor, total=len(req._feed))
+        if self.spec is not None and self.slots[i] is not None \
+                and self._draft_pending[i]:
+            self._draft_ingest(i)       # ride the same quantum
         if not self._pending[i]:        # feed done: next token is out
             tok = int(jax.device_get(nxt)[0])
             req.out.append(tok)
@@ -735,6 +898,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
             self.params, jnp.asarray(self._next_tok[:, None]),
             jnp.asarray(positions), jnp.asarray(tables), self.cache)
         self.decode_quanta += 1
+        self.decode_launches += 1
         self.last_quantum = ("decode", len(active))
         nxt_host = jax.device_get(nxt)
         if self.cost_model is not None:
@@ -757,6 +921,172 @@ class ContinuousBatcher(ev.EventStreamMixin):
             self._maybe_retire(i)
         return len(active)
 
+    # ------------------------------------------- speculative decoding
+    def _slot_cap(self, req: Request) -> int:
+        """Cacheable positions for this request (the admit-time block
+        reservation): the final token is emitted, never cached."""
+        return min(len(req.prompt) + req.max_new - 1, self.max_len)
+
+    def spec_tokens_per_round(self) -> float:
+        """Observed tokens emitted per verification launch (accepted
+        draft tokens + the bonus token); 1.0 before any speculation has
+        run.  Feeds the ``decode-spec`` cost-model estimate."""
+        if not self.spec_verifies:
+            return 1.0
+        return self.spec_accepted / self.spec_verifies + 1.0
+
+    def _spec_quantum(self) -> int:
+        """One speculative decode quantum.
+
+        Three phases per round:
+
+        1. **Draft proposal** — batched draft decode steps at the slot
+           shape propose up to ``k`` tokens per slot greedily.  Slots
+           whose proposal finished early swing their block-table row to
+           all-null for the remaining steps, so stray writes land in
+           the null block (the established idle-row idiom).
+        2. **Verification** — per slot, the pending token plus the
+           proposal run through ONE fused paged-prefill launch
+           (``make_verify_chunk``); the target's greedy argmax at every
+           chunk position decides the longest accepted prefix, and the
+           position after the last accepted token yields a free
+           "bonus" token.  Greedy acceptance makes the emitted stream
+           token-identical to plain decode by construction.
+        3. **Commit / rollback** — accepted positions keep their KV;
+           the rejected tail rolls back via
+           ``PagedKVRuntime.truncate`` (pure position rewind — the
+           write window was CoW-guarded up front, so a refcount-shared
+           prefix block is never dirtied).  The draft pool rolls back
+           the same way and re-feeds any gap next round.
+
+        Near the request horizon the proposal budget shrinks to the
+        tokens that still fit; when no slot can propose at all the
+        quantum degenerates to one batched baseline decode step.
+        """
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            self.last_quantum = None
+            return 0
+        k: dict[int, int] = {}
+        for i in active:
+            r = self.slots[i]
+            k[i] = max(0, min(self.spec.k, r.max_new - len(r.out) - 1,
+                              self._slot_cap(r) - 1 - self.runtime.pos[i]))
+        if all(k[i] == 0 for i in active):
+            return self._decode_quantum()
+        t0 = self.bus.clock()
+        S = len(self.slots)
+        mb = self.draft_runtime.blocks_per_slot
+        # ---- phase 1: draft proposals (batched across slots) --------
+        stream = {i: list(self.slots[i].prompt) + list(self.slots[i].out)
+                  for i in active}
+        base, feeds, steps, props = {}, {}, {}, {}
+        for i in active:
+            base[i] = self.draft_runtime.pos[i]
+            # catch-up gap (tokens committed since the draft last saw
+            # this slot) + the pending token; ends by feeding the
+            # pending token, whose output is the first proposal.
+            feeds[i] = stream[i][base[i]:self.runtime.pos[i] + 1]
+            steps[i] = len(feeds[i]) + max(k[i] - 1, 0)
+            props[i] = []
+        rounds = max(steps.values())
+        for t in range(rounds):
+            toks = np.zeros(S, np.int32)
+            poss = np.zeros(S, np.int32)
+            tab = np.zeros((S, mb), np.int32)
+            for i in active:
+                if t >= steps[i]:
+                    continue            # null row: writes are harmless
+                tab[i] = self.draft_runtime.tables[i]
+                poss[i] = base[i] + t
+                toks[i] = (feeds[i][t] if t < len(feeds[i])
+                           else props[i][-1])
+            nxt, self.draft_cache = self._draft_step(
+                self.draft_params, jnp.asarray(toks[:, None]),
+                jnp.asarray(poss), jnp.asarray(tab), self.draft_cache)
+            self.draft_launches += 1
+            nxt_host = jax.device_get(nxt)
+            for i in active:
+                if (t < steps[i] and t >= len(feeds[i]) - 1
+                        and len(props[i]) < k[i]):
+                    props[i].append(int(nxt_host[i]))
+        # ---- phases 2+3: verify, commit, roll back (per slot) -------
+        bs = self.runtime.block_size
+        total_prop = total_acc = 0
+        rids = [self.slots[i].rid for i in active]
+        out = None
+        for i in active:
+            req = self.slots[i]
+            pos = self.runtime.pos[i]
+            chunk = [int(self._next_tok[i])] + props[i]
+            length = len(chunk)
+            for bi in range(pos // bs, cdiv(pos + length, bs)):
+                self.runtime.ensure_writable(i, bi * bs)
+            g, self.cache = self._verify_raw(
+                self.params,
+                jnp.asarray([chunk], jnp.int32),
+                jnp.full((1,), pos, jnp.int32),
+                jnp.int32(i),
+                jnp.asarray([self.runtime.tables[i]], jnp.int32),
+                self.cache)
+            out = g
+            greedy = jax.device_get(g)[0]
+            self.decode_launches += 1 if self.fused_prefill else length
+            self.spec_verifies += 1
+            m = 0
+            while m < k[i] and props[i][m] == int(greedy[m]):
+                m += 1
+            emitted = props[i][:m] + [int(greedy[m])]
+            req.proposed += k[i]
+            req.accepted += m
+            total_prop += k[i]
+            total_acc += m
+            if req.eos is not None and req.eos in emitted:
+                emitted = emitted[:emitted.index(req.eos) + 1]
+            n = len(emitted)
+            # the verify launch cached all `length` fed positions; keep
+            # the pending token + accepted prefix, rewind the rest
+            self.runtime.pos[i] = pos + length
+            self.runtime.truncate(i, pos + n)
+            # draft validity: it was fed the pending token plus
+            # props[:k-1]; of those, positions beyond the accepted
+            # prefix describe a stream that no longer exists
+            self.draft_runtime.pos[i] = min(pos + 1 + m,
+                                            pos + max(k[i], 1))
+            for tok in emitted:
+                req.out.append(tok)
+                self.bus.emit(ev.TokenDelta, req.rid, token=tok,
+                              pos=len(req.out) - 1)
+            req.decode_steps += 1
+            self._next_tok[i] = emitted[-1]
+            self._maybe_retire(i)
+        self.decode_quanta += 1
+        self.spec_rounds += 1
+        self.spec_proposed += total_prop
+        self.spec_accepted += total_acc
+        self.last_quantum = ("decode-spec", len(active))
+        if self.cost_model is not None:
+            self._observe_quantum(self.cost_model.lm_spec_key(self),
+                                  ("decode-spec",), t0, out)
+        self._obs_quantum("decode-spec", t0, out, rids,
+                          args={"batch": len(active),
+                                "proposed": total_prop,
+                                "accepted": total_acc})
+        if self.metrics is not None:
+            self.metrics.counter(
+                "lm_spec_proposed_total",
+                "draft tokens offered to the verifier").inc(total_prop)
+            self.metrics.counter(
+                "lm_spec_accepted_total",
+                "draft tokens the target accepted").inc(total_acc)
+            if total_prop:
+                self.metrics.histogram(
+                    "lm_spec_acceptance", "per-quantum draft "
+                    "acceptance rate (accepted / proposed)",
+                    buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75,
+                             0.875, 1.0)).observe(total_acc / total_prop)
+        return len(active)
+
     def _maybe_retire(self, i: int) -> None:
         req = self.slots[i]
         over = len(req.out) >= req.max_new
@@ -772,6 +1102,7 @@ class ContinuousBatcher(ev.EventStreamMixin):
             self.runtime.release(i, req.prompt)
             self.slots[i] = None        # slot freed -> next admit fills
             self._pending[i] = []
+            self._release_draft(i)
             self.bus.emit(ev.Finished, req.rid, result=req)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:

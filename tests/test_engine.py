@@ -254,7 +254,7 @@ def test_handle_survives_zero_progress_quantum(sd_params, toks):
     assert eng.cancel(0)
     h = eng.submit(GenerateRequest(rid=1, tokens=toks[1], sampler="turbo",
                                    steps=1, seed=2))
-    assert h.result() is not None   # pumps through the dead batch
+    assert h.result().outcome == "finished"   # pumps through the dead batch
     assert h.state == "FINISHED"
 
 
@@ -278,7 +278,7 @@ def test_bus_compaction_drops_terminal_history(sd_params, toks):
     # compacted must terminate cleanly: no events, result intact.
     eng.bus.compact()
     assert list(h.events()) == []
-    assert h.result() is not None and h.state == "FINISHED"
+    assert h.result().finished and h.state == "FINISHED"
 
 
 def test_duplicate_rid_rejected(sd_params, toks):

@@ -1,0 +1,171 @@
+"""EngineConfig surface (PR 10): one config object for all three
+engines, with every pre-existing kwarg kept as a deprecation shim.
+
+Gates:
+
+* old-kwarg construction and ``config=`` construction are bit-identical
+  for the LM batcher, the ASR engine, and the diffusion engine;
+* explicit kwargs win over the config (the shim's migration contract);
+* unknown kwargs still raise ``TypeError`` (the shim must not silently
+  swallow typos);
+* ``max_len`` stays required for the KV-backed engines;
+* ``build_engine`` dispatches on kind and rejects unknown kinds.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, reduced
+from repro.configs.whisper_large_v3 import config as WHISPER
+from repro.engine import (TINY_SD, AsrEngine, AsrEngineConfig, CostModel,
+                          DiffusionEngine, DiffusionEngineConfig,
+                          EngineConfig, EventBus, GenerateRequest,
+                          LMEngineConfig, TranscribeRequest, build_engine,
+                          init_pipeline)
+from repro.models.frontend import synthetic_audio
+from repro.models.transformer import init_lm
+from repro.serving import ContinuousBatcher, Request
+
+pytestmark = pytest.mark.serving
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                  head_dim=16)
+ASR_CFG = reduced(WHISPER, d_model=64, head_dim=16, d_ff=128,
+                  vocab_size=96, encoder_seq=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def asr_params():
+    return init_lm(jax.random.PRNGKey(0), ASR_CFG)
+
+
+@pytest.fixture(scope="module")
+def sd_params():
+    return init_pipeline(jax.random.PRNGKey(0), TINY_SD)
+
+
+def _prompt(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(1, 90, n)]
+
+
+def _lm_tokens(cb):
+    reqs = [Request(rid=i, prompt=_prompt(i, 5), max_new=4)
+            for i in range(3)]
+    for r in reqs:
+        cb.submit(r)
+    cb.run()
+    return [r.out for r in reqs]
+
+
+# ---------------------------------------------------- bit-identical shim
+class TestKwargConfigEquivalence:
+    def test_lm_old_kwargs_vs_config(self, params):
+        old = ContinuousBatcher(params, CFG, slots=2, max_len=32,
+                                block_size=8, prefill_chunk=4,
+                                fused_prefill=False)
+        new = ContinuousBatcher(
+            params, CFG,
+            config=EngineConfig(lm=LMEngineConfig(
+                slots=2, max_len=32, block_size=8, prefill_chunk=4,
+                fused_prefill=False)))
+        assert _lm_tokens(old) == _lm_tokens(new)
+
+    def test_asr_old_kwargs_vs_config(self, asr_params):
+        def run(eng):
+            r = TranscribeRequest(
+                rid=0, audio=synthetic_audio(jax.random.PRNGKey(1),
+                                             ASR_CFG),
+                prompt=[1, 2, 3, 4, 5], max_new=6)
+            eng.submit(r)
+            eng.run()
+            return r.out
+
+        old = AsrEngine(asr_params, ASR_CFG, slots=1, max_len=32,
+                        audio_chunk=16, prefill_chunk=4,
+                        fused_prefill=False)
+        new = AsrEngine(
+            asr_params, ASR_CFG,
+            config=EngineConfig(asr=AsrEngineConfig(
+                slots=1, max_len=32, audio_chunk=16, prefill_chunk=4,
+                fused_prefill=False)))
+        assert run(old) == run(new)
+
+    def test_diffusion_old_kwargs_vs_config(self, sd_params):
+        def run(eng):
+            toks = jax.random.randint(jax.random.PRNGKey(1), (77,),
+                                      0, 512)
+            h = eng.submit(GenerateRequest(rid=0, tokens=toks,
+                                           sampler="turbo", steps=1,
+                                           seed=7))
+            return np.asarray(h.result().image, np.float32)
+
+        old = DiffusionEngine(sd_params, TINY_SD, max_batch=2)
+        new = DiffusionEngine(
+            sd_params, TINY_SD,
+            config=EngineConfig(
+                diffusion=DiffusionEngineConfig(max_batch=2)))
+        np.testing.assert_array_equal(run(old), run(new))
+
+
+# ---------------------------------------------------------- merge rules
+class TestResolutionRules:
+    def test_kwargs_override_config(self, params):
+        conf = EngineConfig(lm=LMEngineConfig(slots=4, max_len=64,
+                                              block_size=16))
+        cb = ContinuousBatcher(params, CFG, config=conf,
+                               slots=1, max_len=32)
+        assert len(cb.slots) == 1
+        assert cb.max_len == 32
+        assert cb.runtime.block_size == 16   # untouched section field
+
+    def test_shared_fields_flow_from_config(self, params):
+        bus = EventBus()
+        cm = CostModel()
+        conf = EngineConfig(bus=bus, cost_model=cm, edf=False,
+                            lm=LMEngineConfig(slots=1, max_len=32))
+        cb = ContinuousBatcher(params, CFG, config=conf)
+        assert cb.bus is bus
+        assert cb.cost_model is cm
+        assert cb.edf is False
+        assert cb.config.cost_model is cm    # resolved config retained
+
+    def test_unknown_kwarg_raises(self, params):
+        with pytest.raises(TypeError, match="max_seq"):
+            ContinuousBatcher(params, CFG, slots=1, max_len=32,
+                              max_seq=64)
+
+    def test_max_len_required(self, params, asr_params):
+        with pytest.raises(ValueError, match="max_len"):
+            ContinuousBatcher(params, CFG, slots=1)
+        with pytest.raises(ValueError, match="max_len"):
+            AsrEngine(asr_params, ASR_CFG, slots=1)
+
+
+# ---------------------------------------------------------- build_engine
+class TestBuildEngine:
+    def test_dispatch_lm(self, params):
+        conf = EngineConfig(lm=LMEngineConfig(slots=1, max_len=32))
+        eng = build_engine("lm", params, CFG, conf)
+        assert isinstance(eng, ContinuousBatcher)
+        assert len(eng.slots) == 1
+
+    def test_dispatch_asr(self, asr_params):
+        conf = EngineConfig(asr=AsrEngineConfig(slots=1, max_len=32))
+        eng = build_engine("asr", asr_params, ASR_CFG, conf)
+        assert isinstance(eng, AsrEngine)
+
+    def test_dispatch_diffusion(self, sd_params):
+        eng = build_engine("diffusion", sd_params, TINY_SD,
+                           EngineConfig())
+        assert isinstance(eng, DiffusionEngine)
+
+    def test_unknown_kind(self, params):
+        with pytest.raises(ValueError, match="unknown engine kind"):
+            build_engine("vision", params, CFG, EngineConfig())

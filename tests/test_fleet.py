@@ -191,7 +191,7 @@ class TestDispatch:
                               _lm_spec("b", params)], **NO_WD)
         h = fleet.submit(Request(rid=0, prompt=_prompt(0, 4), max_new=3))
         fleet.submit(Request(rid=1, prompt=_prompt(1, 4), max_new=3))
-        assert h.result() is not None
+        assert h.result().outcome == "finished"
         # waiting on a handle placed on one replica still progressed
         # the other (the handle pumps FleetManager.step, not a replica)
         steps = {r["name"]: r["steps"] for r in fleet.stats()["replicas"]}

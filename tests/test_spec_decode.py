@@ -1,0 +1,292 @@
+"""Speculative decoding on the paged KV runtime (PR 10).
+
+Greedy acceptance makes speculation a pure *latency* transform: the
+emitted stream must be token-bit-exact with plain decode, and rollback
+must be a position rewind that can never dirty a refcount-shared
+block.  Gates:
+
+* self-draft speculation (100% acceptance) is token-bit-exact vs
+  baseline decode, with per-request ``proposed``/``accepted``
+  accounting that reconciles with the scheduler counters;
+* on the fused verify path, speculation strictly beats
+  one-launch-per-token (``decode_launches``);
+* an adversarial draft (0% acceptance) degenerates to *exactly* the
+  baseline launch count and tokens — speculation is never worse;
+* rejection whose rollback window crosses a block boundary, and whose
+  write window lands on a CoW-shared block, leaves the shared block
+  byte-pristine (the copy-on-write + truncate contract);
+* preempt/evacuate mid-speculation frees both pools (target + draft)
+  and resumes bit-exact;
+* :meth:`PagedKVRuntime.truncate` unit properties: bounds check and
+  the shared-block rollback assertion.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.engine import (EngineConfig, Finished, LMEngineConfig,
+                          SpecDecodeConfig)
+from repro.models.transformer import init_lm
+from repro.serving import ContinuousBatcher, PagedKVRuntime, Request
+from repro.serving.scheduler import make_paged_decode
+
+pytestmark = pytest.mark.serving
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=96,
+                  head_dim=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_lm(jax.random.PRNGKey(0), CFG)
+
+
+def _prompt(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(t) for t in rng.integers(1, 90, n)]
+
+
+def _anti_draft():
+    """A draft that is always wrong: proposes (greedy + 1) mod V, so
+    the target rejects every proposal (acceptance rate 0)."""
+    inner = make_paged_decode(CFG)
+
+    def step(dparams, toks, poss, tab, cache):
+        nxt, cache = inner(dparams, toks, poss, tab, cache)
+        return (nxt + 1) % CFG.vocab_size, cache
+
+    return step
+
+
+def _mk(params, spec=None, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    conf = EngineConfig(lm=LMEngineConfig(spec_decode=spec, **kw))
+    return ContinuousBatcher(params, CFG, config=conf)
+
+
+def _self_draft(params, k=3, **kw):
+    """Draft == target: greedy proposals always match, acceptance 1.0."""
+    return SpecDecodeConfig(draft_params=params, draft_cfg=CFG, k=k, **kw)
+
+
+def _run(cb, n_req=2, plen=5, max_new=8):
+    reqs = [Request(rid=i, prompt=_prompt(i, plen), max_new=max_new)
+            for i in range(n_req)]
+    for r in reqs:
+        cb.submit(r)
+    cb.run()
+    return reqs
+
+
+def _prefill_done(cb, slot=0):
+    """Step until the slot is admitted and both target and draft
+    prefill streams are fully ingested (next quantum is speculative)."""
+    while cb.slots[slot] is None or cb._pending[slot] \
+            or cb._draft_pending[slot]:
+        cb.step()
+
+
+# -------------------------------------------------------- bit-exactness
+class TestBitExactness:
+    def test_self_draft_tokens_match_baseline_scan(self, params):
+        """Scan verify path: mathematically identical to the decode
+        step, so the gate is exact token equality."""
+        base = _run(_mk(params, fused_prefill=False), n_req=3)
+        spec = _run(_mk(params, _self_draft(params),
+                        fused_prefill=False), n_req=3)
+        assert [r.out for r in spec] == [r.out for r in base]
+        assert all(r.accepted == r.proposed > 0 for r in spec)
+
+    def test_self_draft_tokens_match_baseline_fused(self, params):
+        """Fused verify: the verification launch reduces with prefill-
+        kernel shapes, so its logits can differ from the decode step in
+        low-order bits; a greedy near-tie can then flip a token.  The
+        gate therefore runs a tie-stable workload (same policy as the
+        fused-vs-scan transcript gate in the ASR smoke); the *scan*
+        test above is the mathematical bit-exactness oracle."""
+        base = _run(_mk(params, fused_prefill=True), n_req=2)
+        spec = _run(_mk(params, _self_draft(params),
+                        fused_prefill=True), n_req=2)
+        assert [r.out for r in spec] == [r.out for r in base]
+
+    def test_anti_draft_tokens_still_exact(self, params):
+        """Acceptance 0: every proposal rejected, every round emits
+        only the bonus token — output must still be bit-exact."""
+        sp = _self_draft(params, draft_step_fn=_anti_draft())
+        base = _run(_mk(params, fused_prefill=False), n_req=2)
+        spec = _run(_mk(params, sp, fused_prefill=False), n_req=2)
+        assert [r.out for r in spec] == [r.out for r in base]
+        assert all(r.accepted == 0 and r.proposed > 0 for r in spec)
+
+
+# ---------------------------------------------------- launch accounting
+class TestLaunchAccounting:
+    def test_spec_beats_one_launch_per_token(self, params):
+        """Fused verify, full acceptance: decode launches must be
+        strictly below the baseline's one-per-quantum."""
+        base = _mk(params, fused_prefill=True)
+        _run(base, n_req=2)
+        spec = _mk(params, _self_draft(params), fused_prefill=True)
+        _run(spec, n_req=2)
+        assert spec.decode_launches < base.decode_launches
+        assert spec.spec_rounds > 0
+        assert spec.draft_launches > 0      # drafting is extra launches,
+        assert spec.spec_tokens_per_round() > 1.0   # amortised per round
+
+    def test_acceptance_zero_degenerates_to_baseline(self, params):
+        """Anti-draft on the fused path, one slot: every spec round
+        costs exactly one verify launch and emits exactly one token —
+        the same launches-per-token as plain decode, so the totals must
+        be *equal*, not merely close."""
+        base = _mk(params, slots=1, fused_prefill=True)
+        _run(base, n_req=1)
+        sp = _self_draft(params, draft_step_fn=_anti_draft())
+        spec = _mk(params, sp, slots=1, fused_prefill=True)
+        _run(spec, n_req=1)
+        assert spec.decode_launches == base.decode_launches
+        assert spec.spec_accepted == 0
+
+    def test_counters_reconcile_with_requests(self, params):
+        cb = _mk(params, _self_draft(params), fused_prefill=True)
+        hs = [cb.submit(Request(rid=i, prompt=_prompt(i, 5), max_new=8))
+              for i in range(3)]
+        cb.run()
+        reqs = [next(e.result for e in cb.bus.log
+                     if isinstance(e, Finished) and e.rid == i)
+                for i in range(3)]
+        assert sum(r.proposed for r in reqs) == cb.spec_proposed
+        assert sum(r.accepted for r in reqs) == cb.spec_accepted
+        assert cb.spec_accepted <= cb.spec_proposed
+        # satellite 3: the typed result carries the same accounting
+        for h, r in zip(hs, reqs):
+            res = h.result()
+            assert res.outcome == "finished"
+            assert res.stats.proposed == r.proposed
+            assert res.stats.accepted == r.accepted
+
+
+# ------------------------------------------------------------- rollback
+class TestRollback:
+    def test_rejection_across_block_boundary(self, params):
+        """block_size=4 with an anti-draft: rollback windows repeatedly
+        straddle block boundaries (pos walks one token per round while
+        the k=3 tail spills into the next block); tokens stay exact and
+        the pool invariants hold after every truncate."""
+        sp = _self_draft(params, k=3, draft_step_fn=_anti_draft())
+        base = _run(_mk(params, slots=1, block_size=4,
+                        fused_prefill=False), n_req=1, plen=6,
+                    max_new=10)
+        spec = _run(_mk(params, sp, slots=1, block_size=4,
+                        fused_prefill=False), n_req=1, plen=6,
+                    max_new=10)
+        assert spec[0].out == base[0].out
+        assert spec[0].accepted == 0
+
+    def test_shared_block_stays_pristine(self, params):
+        """A refcount-shared block at the speculative write position
+        must be CoW-copied before the verify launch writes, so a
+        rejected speculation can never have dirtied the shared bytes."""
+        cb = _mk(params, _self_draft(params), slots=1, block_size=4,
+                 fused_prefill=True)
+        req = Request(rid=0, prompt=_prompt(3, 7), max_new=6)
+        cb.submit(req)
+        _prefill_done(cb)
+        rt = cb.runtime
+        pos = rt.pos[0]
+        bi = pos // rt.block_size
+        bid = rt.tables[0][bi]
+        rt.alloc.share(bid)           # simulate a prefix-cache share
+        nb = rt.num_blocks
+        before = [np.asarray(leaf[:, bid])
+                  for leaf in jax.tree.leaves(cb.cache)
+                  if leaf.ndim >= 2 and leaf.shape[1] == nb]
+        assert before
+        cows = rt.cow_copies
+        cb.step()                     # one speculative round
+        assert rt.cow_copies == cows + 1
+        assert rt.tables[0][bi] != bid          # write moved off-shared
+        assert rt.alloc.refcount(bid) == 1      # our artificial share
+        after = [np.asarray(leaf[:, bid])
+                 for leaf in jax.tree.leaves(cb.cache)
+                 if leaf.ndim >= 2 and leaf.shape[1] == nb]
+        for b, a in zip(before, after):
+            np.testing.assert_array_equal(b, a)
+        # the CoW copy preserved the prefix rows: decode stays exact
+        cb.run()
+        ref = _mk(params, slots=1, block_size=4, fused_prefill=True)
+        ref.submit(Request(rid=0, prompt=_prompt(3, 7), max_new=6))
+        assert req.out == ref.run()[0].out
+
+    def test_preempt_mid_speculation_resumes_bit_exact(self, params):
+        ref = _mk(params, slots=1, fused_prefill=False)
+        ref.submit(Request(rid=0, prompt=_prompt(8, 6), max_new=10))
+        expect = ref.run()[0].out
+
+        sp = _self_draft(params)
+        cb = _mk(params, sp, slots=1, fused_prefill=False)
+        cb.submit(Request(rid=0, prompt=_prompt(8, 6), max_new=10))
+        while len(cb.slots[0].out if cb.slots[0] else []) < 4:
+            cb.step()
+        assert cb.preempt(0)
+        assert cb.runtime.allocated_blocks == 0       # target pool free
+        assert cb.draft_runtime.allocated_blocks == 0  # draft pool free
+        assert cb.run()[0].out == expect
+
+
+# ----------------------------------------------------- truncate (units)
+class TestTruncate:
+    def test_bounds(self):
+        rt = PagedKVRuntime(slots=1, max_len=32, block_size=8)
+        rt.admit(0, _prompt(0, 10), 6)
+        rt.pos[0] = 12
+        rt.truncate(0, 12)            # no-op rewind allowed
+        rt.truncate(0, 10)
+        assert rt.pos[0] == 10
+        with pytest.raises(ValueError, match="outside"):
+            rt.truncate(0, 11)        # forward "truncate" is not
+        with pytest.raises(ValueError, match="outside"):
+            rt.truncate(0, -1)
+
+    def test_rollback_through_shared_block_asserts(self):
+        rt = PagedKVRuntime(slots=2, max_len=32, block_size=8)
+        rt.admit(0, _prompt(0, 10), 6)
+        rt.pos[0] = 12
+        bid = rt.tables[0][1]         # block covering positions 8..15
+        rt.alloc.share(bid)
+        with pytest.raises(AssertionError, match="shared"):
+            rt.truncate(0, 9)
+        rt.alloc.release(bid)
+        rt.truncate(0, 9)             # exclusively owned again: fine
+        assert rt.pos[0] == 9
+
+
+# ----------------------------------------------------------- validation
+class TestSpecConfigValidation:
+    def test_vocab_mismatch_rejected(self, params):
+        bad = ModelConfig(name="d", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=128, vocab_size=64, head_dim=16)
+        sp = SpecDecodeConfig(
+            draft_params=init_lm(jax.random.PRNGKey(1), bad),
+            draft_cfg=bad)
+        with pytest.raises(ValueError, match="vocab"):
+            _mk(params, sp)
+
+    def test_k_must_be_positive(self, params):
+        with pytest.raises(ValueError, match="k"):
+            _mk(params, _self_draft(params, k=0))
+
+    def test_recurrent_target_rejected(self, params):
+        hyb = ModelConfig(name="h", family="hybrid", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=128, vocab_size=96, head_dim=16,
+                          block_pattern=("attn", "mamba"), ssm_state=8)
+        hp = init_lm(jax.random.PRNGKey(2), hyb)
+        conf = EngineConfig(lm=LMEngineConfig(
+            slots=1, max_len=32,
+            spec_decode=_self_draft(hp)))
+        with pytest.raises(ValueError, match="pure-attention"):
+            ContinuousBatcher(hp, hyb, config=conf)

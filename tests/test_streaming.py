@@ -68,10 +68,12 @@ class TestEventLifecycle:
     def test_result_matches_run(self, params):
         cb = _mk(params)
         h = cb.submit(Request(rid=0, prompt=_prompt(1, 5), max_new=4))
-        via_handle = h.result().out
+        res = h.result()
+        assert res.outcome == "finished" and res.finished
+        assert res.stats.decode_steps == res.request.decode_steps
         cb2 = _mk(params)
         cb2.submit(Request(rid=0, prompt=_prompt(1, 5), max_new=4))
-        assert via_handle == cb2.run()[0].out
+        assert list(res.tokens) == cb2.run()[0].out
 
     def test_bus_refuses_events_after_terminal(self):
         bus = EventBus()
@@ -425,16 +427,18 @@ class TestRejectedLifecycle:
         assert cb.rejections == 1
 
     def test_result_and_run_for_rejected(self, params):
-        """Contract choice (documented in engine/README.md):
-        ``handle.result()`` returns None for a rejected request — the
-        same signal as a cancellation — and ``run()`` simply never
-        yields it; neither raises."""
+        """Contract choice (documented in engine/README.md): a
+        rejected request's ``handle.result()`` is a typed terminal
+        with ``outcome="rejected"`` and the scheduler's reason — and
+        ``run()`` simply never yields it; neither raises."""
         box = {}
         cb = _calibrated_cb(params, box)
         h = cb.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4,
                               deadline_ms=30.0))
         cb.submit(Request(rid=1, prompt=[1, 2, 3], max_new=4))
-        assert h.result() is None
+        res = h.result()
+        assert res.outcome == "rejected" and not res.finished
+        assert res.reason == "infeasible"
         done = cb.run()
         assert [r.rid for r in done if r.rid < 900] == [1]
         # events() replays the single terminal and stops cleanly
@@ -468,7 +472,8 @@ class TestRejectedLifecycle:
         # ddim-4 pads to a pow2 scan of 4: 10+4*20+10 = 100 ms est
         h = eng.submit(GenerateRequest(rid=0, tokens=toks, sampler="ddim",
                                        steps=4, seed=0, deadline_ms=60.0))
-        assert h.state == "REJECTED" and h.result() is None
+        assert h.state == "REJECTED"
+        assert h.result().outcome == "rejected"
         assert not eng.queue and eng.traces == 0   # nothing ran
         evs = [e for e in eng.bus.log if e.rid == 0]
         assert len(evs) == 1 and isinstance(evs[0], Rejected)
@@ -609,7 +614,7 @@ class TestRouter:
                                            sampler="ddim", steps=4,
                                            seed=0, preview_every=1))
         router.submit(Request(rid=1, prompt=_prompt(1, 3), max_new=12))
-        assert hd.result() is not None
+        assert hd.result().outcome == "finished"
         # LM made progress while we waited on diffusion: the deadline
         # tie round-robins the router between the two engines.
         assert router.lm.prefill_quanta + router.lm.decode_quanta > 0
